@@ -1,0 +1,69 @@
+"""Shared benchmark utilities: timing, corpus, CSV emission.
+
+Output convention (benchmarks/run.py): every row prints
+``name,us_per_call,derived`` — `derived` is the table-specific figure
+(GFLOPS, fill %, speed-up …).
+
+Measured numbers are CPU (this container); the TPU-target figures come from
+the bandwidth model (repro.core.analyze.modeled_gflops with TPU_V5E), which
+is exactly the paper's §3.4 estimation methodology transplanted to the
+target chip.  Relative format behaviour (the paper's actual claims) is
+measured; absolute GPU GFLOPS are not reproducible on CPU and are reported
+via the model only.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+from repro.core import from_dense, spmv
+from repro.core.suite import MatrixSpec, corpus
+
+__all__ = ["time_us", "bench_corpus", "spmv_gflops_measured", "emit"]
+
+
+def time_us(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall time of fn(*args) in µs (jit-warmed, blocked)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+_JITTED: Dict[type, Callable] = {}
+
+
+def _jit_spmv(mat):
+    cls = type(mat)
+    if cls not in _JITTED:
+        _JITTED[cls] = jax.jit(spmv)
+    return _JITTED[cls]
+
+
+def spmv_gflops_measured(mat, x, repeats: int = 5) -> float:
+    us = time_us(_jit_spmv(mat), mat, x, repeats=repeats)
+    return 2.0 * mat.nnz / (us * 1e-6) / 1e9, us
+
+
+def bench_corpus(small_only: bool = False) -> List[MatrixSpec]:
+    if small_only:
+        return corpus(small_n=(64, 256), large_n=(1024,), seeds=(0,))
+    return corpus(small_n=(64, 256, 512, 1024), large_n=(2048, 4096),
+                  seeds=(0,))
+
+
+# the paper's small/large boundary, scaled with the corpus (DESIGN.md §8)
+LARGE_BOUNDARY = 2048
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,44 @@
+"""Benchmark harness — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+``--small`` runs the reduced corpus (CI); default is the full bench corpus.
+The roofline/dry-run figures live in launch/dryrun.py + launch/roofline.py
+(they need the 512-device flag and are therefore a separate entry point).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="reduced corpus (CI-sized)")
+    ap.add_argument("--tables", default="1,3,4,5,6,7",
+                    help="comma-separated table numbers to run")
+    args = ap.parse_args(argv)
+    tables = {t.strip() for t in args.tables.split(",")}
+    t0 = time.time()
+
+    from benchmarks import table1_peak_model, table3_csr_hybrid, \
+        table4_rgcsr_groups, table5_comparison, table6_pathological, \
+        table7_ordering
+
+    if "1" in tables:
+        table1_peak_model.run()
+    if "3" in tables:
+        table3_csr_hybrid.run(small_only=args.small)
+    if "4" in tables:
+        table4_rgcsr_groups.run(small_only=args.small)
+    if "5" in tables:
+        table5_comparison.run(small_only=args.small)
+    if "6" in tables:
+        table6_pathological.run(scale=64 if args.small else 16)
+    if "7" in tables:
+        table7_ordering.run(scale=64 if args.small else 16)
+    print(f"# benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

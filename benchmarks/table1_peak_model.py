@@ -1,0 +1,43 @@
+"""Table 1 — peak-performance model of RgCSR SpMV.
+
+Reproduces the paper's closed form (bytes per nonzero → GFLOPS at bandwidth
+m) for the GTX280 (validating our model against the paper's own numbers:
+23.5 / 14.1 uncached, 35.25 / 23.5 cached, §3.4 Table 1) and emits the TPU
+v5e targets used throughout EXPERIMENTS.md.  On TPU the precision pair is
+(bf16, fp32) — same 2:1 byte ratio as the paper's (single, double)
+(DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from repro.core.analyze import GTX280, TPU_V5E, peak_model_gflops
+from benchmarks.common import emit
+
+# the paper's Table 1 (GTX280, 141 GB/s)
+PAPER_TABLE1 = {
+    ("single", False): 23.5,
+    ("double", False): 14.1,
+    ("single", True): 35.25,
+    ("double", True): 23.5,
+}
+
+
+def run():
+    print("# table1: SpMV peak model — name,us_per_call,derived(GFLOPS)")
+    ok = True
+    for (prec, cached), expected in PAPER_TABLE1.items():
+        nbytes = 4 if prec == "single" else 8
+        got = peak_model_gflops(GTX280, nbytes, cached)
+        emit(f"table1/gtx280/{prec}/{'cached' if cached else 'uncached'}",
+             0.0, f"{got:.2f}")
+        ok &= abs(got - expected) / expected < 0.02
+    emit("table1/model_matches_paper", 0.0, ok)
+    for prec, nbytes in (("bf16", 2), ("fp32", 4)):
+        for cached in (False, True):
+            got = peak_model_gflops(TPU_V5E, nbytes, cached)
+            emit(f"table1/tpu_v5e/{prec}/"
+                 f"{'cached' if cached else 'uncached'}", 0.0, f"{got:.2f}")
+    return ok
+
+
+if __name__ == "__main__":
+    run()

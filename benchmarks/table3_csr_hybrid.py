@@ -1,0 +1,58 @@
+"""Table 3 — common CSR vs Hybrid over the matrix corpus.
+
+Paper claims reproduced (relative behaviour):
+* Hybrid ≫ CSR on large matrices (paper: avg speed-up 5.59 single),
+* Hybrid ≈ or < CSR on small matrices (paper: avg 0.97 — "does not make
+  sense to use the Hybrid format for the small matrices").
+
+Statistics: min/max/avg measured SpMV throughput per set (complete /
+small / large, boundary scaled per DESIGN.md §8), plus the TPU-modeled
+GFLOPS from each format's byte footprint.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import LARGE_BOUNDARY, bench_corpus, emit, \
+    spmv_gflops_measured
+from repro.core import from_dense
+from repro.core.analyze import modeled_gflops
+import jax.numpy as jnp
+
+FORMATS = ("csr", "hybrid")
+
+
+def run(small_only: bool = False):
+    print("# table3: CSR vs Hybrid — name,us_per_call,derived(GFLOPS)")
+    rows = []
+    for spec in bench_corpus(small_only):
+        dense = spec.build()
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(
+            dense.shape[1]).astype(np.float32))
+        rec = {"name": spec.name, "n": spec.n}
+        for fmt in FORMATS:
+            mat = from_dense(dense, fmt)
+            gf, us = spmv_gflops_measured(mat, x)
+            rec[fmt] = gf
+            rec[fmt + "_model"] = modeled_gflops(mat)
+            emit(f"table3/{spec.name}/{fmt}", us, f"{gf:.3f}")
+        rec["speedup"] = rec["hybrid"] / max(rec["csr"], 1e-9)
+        rows.append(rec)
+
+    for subset, sel in (("complete", rows),
+                        ("small", [r for r in rows if r["n"] < LARGE_BOUNDARY]),
+                        ("large", [r for r in rows if r["n"] >= LARGE_BOUNDARY])):
+        if not sel:
+            continue
+        sp = np.array([r["speedup"] for r in sel])
+        for fmt in FORMATS:
+            g = np.array([r[fmt] for r in sel])
+            emit(f"table3/{subset}/{fmt}_avg_gflops", 0.0, f"{g.mean():.3f}")
+        emit(f"table3/{subset}/speedup_min", 0.0, f"{sp.min():.3f}")
+        emit(f"table3/{subset}/speedup_max", 0.0, f"{sp.max():.3f}")
+        emit(f"table3/{subset}/speedup_avg", 0.0, f"{sp.mean():.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Table 4 — RgCSR group-size sweep: artificial zeros + throughput.
+
+Paper claims reproduced:
+* fill ("artificial zeros") grows with group size — avg 105% at G=32 →
+  304% at G=256 on the complete set; pathological max ≫ 1000%,
+* throughput peaks at an intermediate group size (G=128 on GTX280 —
+  occupancy vs fill trade-off; on TPU the trade is pipeline utilization vs
+  DMA padding, same shape of curve, DESIGN.md §2).
+
+Group sizes: the paper's {32, 64} are modeled only (below the 128-lane TPU
+minimum); {128, 256, 512} are both measured (jnp schedule) and modeled.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import LARGE_BOUNDARY, bench_corpus, emit, \
+    spmv_gflops_measured
+from repro.core import from_dense
+from repro.core.analyze import modeled_gflops
+
+GROUPS_MODEL_ONLY = (32, 64)
+GROUPS_MEASURED = (128, 256, 512)
+
+
+def run(small_only: bool = False):
+    print("# table4: RgCSR group sweep — name,us_per_call,"
+          "derived(fill%|GFLOPS)")
+    stats = {g: [] for g in GROUPS_MODEL_ONLY + GROUPS_MEASURED}
+    for spec in bench_corpus(small_only):
+        dense = spec.build()
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(
+            dense.shape[1]).astype(np.float32))
+        for g in GROUPS_MODEL_ONLY + GROUPS_MEASURED:
+            mat = from_dense(dense, "rgcsr", group_size=g,
+                             slot_pad=8 if g >= 128 else 1)
+            fill = mat.fill_ratio()
+            model = modeled_gflops(mat)
+            rec = {"name": spec.name, "n": spec.n, "fill": fill,
+                   "model": model}
+            if g in GROUPS_MEASURED:
+                gf, us = spmv_gflops_measured(mat, x)
+                rec["meas"] = gf
+                emit(f"table4/{spec.name}/g{g}", us,
+                     f"fill={fill:.1f}%|meas={gf:.3f}|model={model:.2f}")
+            else:
+                emit(f"table4/{spec.name}/g{g}", 0.0,
+                     f"fill={fill:.1f}%|model={model:.2f}")
+            stats[g].append(rec)
+
+    for g, recs in stats.items():
+        for subset, sel in (("complete", recs),
+                            ("small", [r for r in recs
+                                       if r["n"] < LARGE_BOUNDARY]),
+                            ("large", [r for r in recs
+                                       if r["n"] >= LARGE_BOUNDARY])):
+            if not sel:
+                continue
+            fills = np.array([r["fill"] for r in sel])
+            emit(f"table4/g{g}/{subset}/fill_avg", 0.0, f"{fills.mean():.1f}%")
+            emit(f"table4/g{g}/{subset}/fill_max", 0.0, f"{fills.max():.1f}%")
+            models = np.array([r["model"] for r in sel])
+            emit(f"table4/g{g}/{subset}/model_gflops_avg", 0.0,
+                 f"{models.mean():.2f}")
+            if "meas" in sel[0]:
+                meas = np.array([r["meas"] for r in sel])
+                emit(f"table4/g{g}/{subset}/meas_gflops_avg", 0.0,
+                     f"{meas.mean():.3f}")
+    return stats
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""The paper's own experiment, miniaturized: run every format over a corpus
+slice and print the Table-5-style comparison.
+
+Run:  PYTHONPATH=src python examples/spmv_suite.py [--full]
+"""
+import argparse
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import from_dense
+from repro.core.ordering import descending_ordering, permute_rows
+from repro.core.suite import corpus, paper_twins
+from benchmarks.common import spmv_gflops_measured
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    specs = corpus(small_n=(256, 1024), large_n=(2048,), seeds=(0,)) \
+        if args.full else corpus(small_n=(256,), large_n=(1024,), seeds=(0,))
+    print(f"{'matrix':24s} {'csr':>8s} {'hybrid':>8s} {'rgcsr':>8s} "
+          f"{'rg fill%':>9s}  winner")
+    wins = {"csr": 0, "hybrid": 0, "rgcsr": 0}
+    for spec in specs:
+        dense = spec.build()
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(
+            dense.shape[1]).astype(np.float32))
+        row = {}
+        for fmt, kw in (("csr", {}), ("hybrid", {}),
+                        ("rgcsr", {"group_size": 128})):
+            mat = from_dense(dense, fmt, **kw)
+            gf, _ = spmv_gflops_measured(mat, x, repeats=3)
+            row[fmt] = gf
+            if fmt == "rgcsr":
+                fill = mat.fill_ratio()
+        winner = max(row, key=row.get)
+        wins[winner] += 1
+        print(f"{spec.name:24s} {row['csr']:8.3f} {row['hybrid']:8.3f} "
+              f"{row['rgcsr']:8.3f} {fill:8.1f}%  {winner}")
+
+    print("\nwin counts:", wins)
+    print("\n=== the pathological twins (paper Table 6) + descending fix ===")
+    for name, dense in paper_twins(scale=32).items():
+        rg = from_dense(dense, "rgcsr", group_size=128)
+        rg_desc = from_dense(permute_rows(dense, descending_ordering(dense)),
+                             "rgcsr", group_size=128)
+        print(f"{name:20s} fill {rg.fill_ratio():9.1f}% -> descending "
+              f"{rg_desc.fill_ratio():9.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Architecture registry + per-(arch × shape) input specs.
+
+``get_config(arch)`` returns the exact published config; ``get_smoke(arch)``
+the reduced same-family smoke config.  ``input_specs(cfg, shape)`` returns
+``jax.ShapeDtypeStruct`` stand-ins for every model input of that cell —
+weak-type-correct, shardable, no device allocation (the dry-run path).
+``concrete_inputs`` materializes small real batches for smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+ARCH_IDS = {
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "mamba2-780m": "mamba2_780m",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "granite-3-2b": "granite_3_2b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "qwen1.5-32b": "qwen15_32b",
+    "minicpm3-4b": "minicpm3_4b",
+    "pixtral-12b": "pixtral_12b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+}
+
+__all__ = ["ARCH_IDS", "SHAPES", "get_config", "get_smoke", "input_specs",
+           "concrete_inputs"]
+
+
+def _module(arch: str):
+    if arch not in ARCH_IDS:
+        raise ValueError(f"unknown arch {arch!r}; options: {sorted(ARCH_IDS)}")
+    return importlib.import_module(f"repro.configs.{ARCH_IDS[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).smoke()
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig | str) -> Dict:
+    """ShapeDtypeStruct inputs for one (arch × shape) cell.
+
+    * train/prefill: the full token batch (+ frontend stubs).
+    * decode/long_decode: the one-token step input; the KV cache is built
+      separately (abstract) by the launcher via ``jax.eval_shape``.
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    if shape.kind in ("train", "prefill"):
+        specs = {}
+        if cfg.family == "vlm":
+            ft = cfg.frontend_tokens
+            specs["patch_embeds"] = jax.ShapeDtypeStruct((b, ft, cfg.d_frontend), f32)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - ft), i32)
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((b, s - ft), i32)
+        elif cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_frontend), f32)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        return specs
+
+    # decode / long_decode: one new token per sequence
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def concrete_inputs(cfg: ModelConfig, *, batch: int, seq: int,
+                    kind: str = "train", seed: int = 0) -> Dict:
+    """Small real batches for smoke tests (numpy → device)."""
+    rng = np.random.default_rng(seed)
+    toks = lambda b, s: jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(b, s)), jnp.int32)
+    out = {}
+    if cfg.family == "vlm":
+        ft = cfg.frontend_tokens
+        assert seq > ft, f"seq {seq} must exceed frontend_tokens {ft}"
+        out["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, ft, cfg.d_frontend)), jnp.float32)
+        out["tokens"] = toks(batch, seq - ft)
+        if kind == "train":
+            out["labels"] = toks(batch, seq - ft)
+    elif cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, seq, cfg.d_frontend)), jnp.float32)
+        out["tokens"] = toks(batch, seq)
+        if kind == "train":
+            out["labels"] = toks(batch, seq)
+    else:
+        out["tokens"] = toks(batch, seq)
+        if kind == "train":
+            out["labels"] = toks(batch, seq)
+    return out

@@ -1,0 +1,25 @@
+"""granite-3-2b [dense] — GQA.
+
+40L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=49155.
+[hf:ibm-granite/granite-3.0-2b-base]
+"""
+from repro.configs.base import ModelConfig, scale_down
+
+CONFIG = ModelConfig(
+    name="granite-3-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=8,
+    d_head=64,
+    d_ff=8192,
+    vocab=49_155,
+    attn_kind="gqa",
+    layer_pattern=("attn",),
+    source="hf:ibm-granite/granite-3.0-2b-base",
+)
+
+
+def smoke():
+    return scale_down(CONFIG)

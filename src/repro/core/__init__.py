@@ -1,0 +1,13 @@
+"""Core: the paper's contribution — sparse formats + SpMV/SpMM + analytics."""
+from repro.core.formats import (  # noqa: F401
+    COO,
+    CSR,
+    ELLPACK,
+    FORMATS,
+    BlockedCSR,
+    HybridEllCoo,
+    RgCSR,
+    SlicedEllpack,
+    from_dense,
+)
+from repro.core.spmv import spmv, spmm  # noqa: F401

@@ -1,0 +1,69 @@
+"""Row orderings (paper §4.4.2, Table 7).
+
+The paper evaluates three orderings of the row index:
+
+* ``without``    — natural order.
+* ``descending`` — rows sorted by decreasing nonzero count.  Optimal for
+  suppressing RgCSR artificial zeros (rows in a group have similar lengths)
+  but may shuffle the nonzero pattern (worse x-locality).
+* ``amd``        — approximate minimum degree.  We substitute **RCM**
+  (reverse Cuthill–McKee, via scipy) — the same role in the experiment: a
+  bandwidth/profile-reducing symmetric permutation that improves x-reuse at
+  the cost of more artificial zeros than descending.  The substitution is
+  recorded in DESIGN.md §7 and labeled in every benchmark table.
+
+All orderings are host-side (numpy/scipy) — format construction time, exactly
+as in the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "descending_ordering",
+    "rcm_ordering",
+    "random_ordering",
+    "permute_rows",
+    "permute_symmetric",
+    "ORDERINGS",
+]
+
+
+def descending_ordering(dense: np.ndarray) -> np.ndarray:
+    """Permutation sorting rows by decreasing nonzero count (stable)."""
+    row_lens = (np.asarray(dense) != 0).sum(axis=1)
+    return np.argsort(-row_lens, kind="stable")
+
+
+def rcm_ordering(dense: np.ndarray) -> np.ndarray:
+    """Reverse Cuthill–McKee on the symmetrized pattern (AMD stand-in)."""
+    import scipy.sparse as sp
+    from scipy.sparse.csgraph import reverse_cuthill_mckee
+
+    a = sp.csr_matrix(np.asarray(dense) != 0)
+    sym = ((a + a.T) > 0).astype(np.int8)
+    perm = reverse_cuthill_mckee(sym.tocsr(), symmetric_mode=True)
+    return np.asarray(perm, dtype=np.int64)
+
+
+def random_ordering(dense: np.ndarray, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.permutation(np.asarray(dense).shape[0])
+
+
+def permute_rows(dense: np.ndarray, perm: np.ndarray) -> np.ndarray:
+    """Row permutation P·A.  SpMV result comes back permuted: y' = P·(A x)."""
+    return np.asarray(dense)[perm]
+
+
+def permute_symmetric(dense: np.ndarray, perm: np.ndarray) -> np.ndarray:
+    """Symmetric permutation P·A·Pᵀ (AMD/RCM style); x must be permuted too."""
+    d = np.asarray(dense)
+    return d[np.ix_(perm, perm)]
+
+
+ORDERINGS = {
+    "without": lambda d: np.arange(np.asarray(d).shape[0]),
+    "descending": descending_ordering,
+    "rcm": rcm_ordering,
+}

@@ -1,0 +1,183 @@
+"""Pure-jnp SpMV / SpMM reference implementations for every format.
+
+These are the *oracles*: jit-compatible, vectorized, numerically identical to
+``A @ x`` up to floating-point reassociation.  The Pallas kernels in
+:mod:`repro.kernels` are validated against these; higher layers (SparseLinear,
+the benchmark harness) dispatch here on CPU and to the kernels on TPU.
+
+The CSR path mirrors the paper's "scalar CSR" only in semantics — a data-
+parallel segment-sum, since a literal one-thread-per-row walk has no TPU
+analogue (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import (
+    COO,
+    CSR,
+    ELLPACK,
+    BlockedCSR,
+    HybridEllCoo,
+    RgCSR,
+    SlicedEllpack,
+)
+
+Matrix = Union[CSR, COO, ELLPACK, HybridEllCoo, BlockedCSR, RgCSR, SlicedEllpack]
+
+__all__ = ["spmv", "spmm"]
+
+
+def _segment_matvec(values, columns, row_ids, x, n_rows):
+    """y[r] = sum_{i: row_ids[i]==r} values[i] * x[columns[i]]."""
+    prods = values * jnp.take(x, columns, axis=0)
+    return jax.ops.segment_sum(prods, row_ids, num_segments=n_rows)
+
+
+def _segment_matmat(values, columns, row_ids, x, n_rows):
+    """Y[r, :] = sum values[i] * X[columns[i], :]."""
+    gathered = jnp.take(x, columns, axis=0)            # (nnz, d)
+    prods = gathered * values[:, None]
+    return jax.ops.segment_sum(prods, row_ids, num_segments=n_rows)
+
+
+# ---------------------------------------------------------------------------
+# per-format spmv
+# ---------------------------------------------------------------------------
+
+
+def spmv_csr(a: CSR, x):
+    return _segment_matvec(a.values, a.columns, a.row_ids, x, a.shape[0])
+
+
+def spmv_coo(a: COO, x):
+    return _segment_matvec(a.values, a.columns, a.rows, x, a.shape[0])
+
+
+def spmv_ellpack(a: ELLPACK, x):
+    # slot-major: y = sum_k values[k, :] * x[columns[k, :]]
+    gathered = jnp.take(x, a.columns, axis=0)           # (K, N)
+    y = jnp.sum(a.values * gathered, axis=0)
+    return y[: a.shape[0]]
+
+
+def spmv_hybrid(a: HybridEllCoo, x):
+    gathered = jnp.take(x, a.ell_columns, axis=0)
+    y = jnp.sum(a.ell_values * gathered, axis=0)[: a.shape[0]]
+    if a.coo_values.shape[0]:
+        y = y + _segment_matvec(a.coo_values, a.coo_columns, a.coo_rows, x,
+                                a.shape[0])
+    return y
+
+
+def spmv_blocked_csr(a: BlockedCSR, x):
+    bs = a.block_size
+    n_cols_pad = (-a.shape[1]) % bs
+    xp = jnp.pad(x, (0, n_cols_pad))
+    xb = xp.reshape(-1, bs)                              # (n_block_cols, bs)
+    gathered = jnp.take(xb, a.block_columns, axis=0)     # (n_blocks, bs)
+    prods = jnp.einsum("bij,bj->bi", a.values, gathered)  # (n_blocks, bs)
+    nbr = a.block_row_pointers.shape[0] - 1
+    yb = jax.ops.segment_sum(prods, a.block_row_ids, num_segments=nbr)
+    return yb.reshape(-1)[: a.shape[0]]
+
+
+def spmv_rgcsr(a: RgCSR, x):
+    """Slot-major grouped SpMV.  Padding values are exact zeros, so summing
+    them is a no-op — semantically identical to the paper's rowLengths
+    early-exit (which saves *work*, not correctness).  The Pallas kernel
+    realizes the actual work-skip via its chunk table."""
+    return _segment_matvec(a.values, a.columns, a.row_of_element, x, a.shape[0])
+
+
+def spmv_sliced_ellpack(a: SlicedEllpack, x):
+    return _segment_matvec(a.values, a.columns, a.row_of_element, x, a.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# per-format spmm (A @ X, X dense (n, d)) — needed by SparseLinear
+# ---------------------------------------------------------------------------
+
+
+def spmm_csr(a: CSR, x):
+    return _segment_matmat(a.values, a.columns, a.row_ids, x, a.shape[0])
+
+
+def spmm_coo(a: COO, x):
+    return _segment_matmat(a.values, a.columns, a.rows, x, a.shape[0])
+
+
+def spmm_ellpack(a: ELLPACK, x):
+    gathered = jnp.take(x, a.columns, axis=0)            # (K, N, d)
+    y = jnp.sum(a.values[..., None] * gathered, axis=0)
+    return y[: a.shape[0]]
+
+
+def spmm_hybrid(a: HybridEllCoo, x):
+    gathered = jnp.take(x, a.ell_columns, axis=0)
+    y = jnp.sum(a.ell_values[..., None] * gathered, axis=0)[: a.shape[0]]
+    if a.coo_values.shape[0]:
+        y = y + _segment_matmat(a.coo_values, a.coo_columns, a.coo_rows, x,
+                                a.shape[0])
+    return y
+
+
+def spmm_blocked_csr(a: BlockedCSR, x):
+    bs = a.block_size
+    d = x.shape[1]
+    n_cols_pad = (-a.shape[1]) % bs
+    xp = jnp.pad(x, ((0, n_cols_pad), (0, 0)))
+    xb = xp.reshape(-1, bs, d)
+    gathered = jnp.take(xb, a.block_columns, axis=0)     # (n_blocks, bs, d)
+    prods = jnp.einsum("bij,bjd->bid", a.values, gathered)
+    nbr = a.block_row_pointers.shape[0] - 1
+    yb = jax.ops.segment_sum(prods, a.block_row_ids, num_segments=nbr)
+    return yb.reshape(-1, d)[: a.shape[0]]
+
+
+def spmm_rgcsr(a: RgCSR, x):
+    return _segment_matmat(a.values, a.columns, a.row_of_element, x, a.shape[0])
+
+
+def spmm_sliced_ellpack(a: SlicedEllpack, x):
+    return _segment_matmat(a.values, a.columns, a.row_of_element, x, a.shape[0])
+
+
+_SPMV = {
+    CSR: spmv_csr,
+    COO: spmv_coo,
+    ELLPACK: spmv_ellpack,
+    HybridEllCoo: spmv_hybrid,
+    BlockedCSR: spmv_blocked_csr,
+    RgCSR: spmv_rgcsr,
+    SlicedEllpack: spmv_sliced_ellpack,
+}
+
+_SPMM = {
+    CSR: spmm_csr,
+    COO: spmm_coo,
+    ELLPACK: spmm_ellpack,
+    HybridEllCoo: spmm_hybrid,
+    BlockedCSR: spmm_blocked_csr,
+    RgCSR: spmm_rgcsr,
+    SlicedEllpack: spmm_sliced_ellpack,
+}
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _identity(x):
+    return x
+
+
+def spmv(a: Matrix, x):
+    """``y = A @ x`` for any of the paper's formats."""
+    return _SPMV[type(a)](a, x)
+
+
+def spmm(a: Matrix, x):
+    """``Y = A @ X`` (X dense ``(n, d)``) for any of the paper's formats."""
+    return _SPMM[type(a)](a, x)

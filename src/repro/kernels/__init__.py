@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (SpMV/SpMM).
+
+Layout: ``rgcsr_spmv.py`` / ``rgcsr_spmm.py`` / ``ell_spmv.py`` hold the
+``pl.pallas_call`` kernels with explicit BlockSpec VMEM tiling; ``ops.py`` is
+the jit'd public API (plans + wrappers); ``ref.py`` the pure-jnp oracles.
+"""
+from repro.kernels.ops import (  # noqa: F401
+    EllPlan,
+    RgCSRPlan,
+    ell_spmv,
+    make_ell_plan,
+    make_plan,
+    rgcsr_spmm,
+    rgcsr_spmv,
+)

@@ -1,0 +1,145 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``RgCSRPlan`` is the device-resident execution plan built once per matrix
+(the analogue of a real framework's format-compile step): the flat grouped
+storage reshaped into the ``(S, G)`` slot-major tile the kernel consumes,
+plus the chunk table that drives the data-dependent grid.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode — the
+kernel body executes in Python with identical semantics; on a real TPU pass
+``interpret=False`` (the default resolves via ``jax.default_backend()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import ELLPACK, RgCSR
+from repro.kernels.ell_spmv import ell_spmv_pallas
+from repro.kernels.rgcsr_spmm import rgcsr_spmm_pallas
+from repro.kernels.rgcsr_spmv import LANES, SUBLANES, rgcsr_spmv_pallas
+
+__all__ = ["RgCSRPlan", "make_plan", "rgcsr_spmv", "rgcsr_spmm",
+           "EllPlan", "make_ell_plan", "ell_spmv", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class RgCSRPlan:
+    """Kernel-ready layout for one RgCSR matrix."""
+
+    values2d: Any       # (S, G)
+    columns2d: Any      # (S, G) int32
+    chunk_group: Any    # (num_chunks,) int32
+    chunk_first: Any    # (num_chunks,) int32
+    n_rows: int
+    n_cols: int
+    n_groups: int
+    group_size: int
+
+    @property
+    def num_chunks(self) -> int:
+        return int(self.chunk_group.shape[0])
+
+
+def make_plan(m: RgCSR) -> RgCSRPlan:
+    """Host-side plan construction (format-compile)."""
+    if m.group_size % LANES != 0:
+        raise ValueError(
+            f"TPU plan needs group_size % {LANES} == 0, got {m.group_size} "
+            f"(use group_size=128/256/512; smaller groups are modeled, not run "
+            f"— DESIGN.md §2)")
+    if m.slot_pad % SUBLANES != 0:
+        raise ValueError(f"slot_pad must be a multiple of {SUBLANES}")
+    g = m.group_size
+    slots = np.asarray(m.slots_per_group)
+    total_slots = int(slots.sum())
+    values2d = np.asarray(m.values).reshape(total_slots, g)
+    columns2d = np.asarray(m.columns).reshape(total_slots, g).astype(np.int32)
+
+    chunks_per_group = slots // SUBLANES
+    chunk_group = np.repeat(np.arange(len(slots), dtype=np.int32), chunks_per_group)
+    first_idx = np.cumsum(np.concatenate([[0], chunks_per_group[:-1]]))
+    chunk_first = np.zeros(len(chunk_group), dtype=np.int32)
+    chunk_first[first_idx] = 1
+    return RgCSRPlan(
+        values2d=jnp.asarray(values2d),
+        columns2d=jnp.asarray(columns2d),
+        chunk_group=jnp.asarray(chunk_group),
+        chunk_first=jnp.asarray(chunk_first),
+        n_rows=m.shape[0],
+        n_cols=m.shape[1],
+        n_groups=m.n_groups,
+        group_size=g,
+    )
+
+
+def rgcsr_spmv(plan: RgCSRPlan, x, *, interpret: bool | None = None):
+    """y = A @ x via the Pallas kernel. x: (n_cols,) -> y: (n_rows,)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n_pad = _pad_to(max(plan.n_cols, 1), LANES)
+    x_pad = jnp.zeros((1, n_pad), x.dtype).at[0, : plan.n_cols].set(x)
+    y = rgcsr_spmv_pallas(
+        plan.chunk_group, plan.chunk_first, plan.values2d, plan.columns2d,
+        x_pad, n_groups=plan.n_groups, group_size=plan.group_size,
+        interpret=interpret)
+    return y.reshape(-1)[: plan.n_rows]
+
+
+def rgcsr_spmm(plan: RgCSRPlan, x, *, d_tile: int = LANES,
+               interpret: bool | None = None):
+    """Y = A @ X via the Pallas kernel. X: (n_cols, d) -> Y: (n_rows, d)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n, d = x.shape
+    n_pad = _pad_to(max(n, 1), SUBLANES)
+    d_pad = _pad_to(max(d, 1), d_tile)
+    x_pad = jnp.zeros((n_pad, d_pad), x.dtype).at[:n, :d].set(x)
+    y = rgcsr_spmm_pallas(
+        plan.chunk_group, plan.chunk_first, plan.values2d, plan.columns2d,
+        x_pad, n_groups=plan.n_groups, group_size=plan.group_size,
+        d_tile=d_tile, interpret=interpret)
+    return y[: plan.n_rows, :d]
+
+
+@dataclasses.dataclass(frozen=True)
+class EllPlan:
+    values2d: Any   # (K_pad, N_pad)
+    columns2d: Any  # (K_pad, N_pad)
+    n_rows: int
+    n_cols: int
+
+
+def make_ell_plan(m: ELLPACK) -> EllPlan:
+    vals = np.asarray(m.values)
+    cols = np.asarray(m.columns).astype(np.int32)
+    k, n = vals.shape
+    k_pad, n_pad = _pad_to(k, SUBLANES), _pad_to(n, LANES)
+    vp = np.zeros((k_pad, n_pad), vals.dtype)
+    cp = np.zeros((k_pad, n_pad), np.int32)
+    vp[:k, :n] = vals
+    cp[:k, :n] = cols
+    return EllPlan(values2d=jnp.asarray(vp), columns2d=jnp.asarray(cp),
+                   n_rows=m.shape[0], n_cols=m.shape[1])
+
+
+def ell_spmv(plan: EllPlan, x, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    n_pad = _pad_to(max(plan.n_cols, 1), LANES)
+    x_pad = jnp.zeros((1, n_pad), x.dtype).at[0, : plan.n_cols].set(x)
+    y = ell_spmv_pallas(plan.values2d, plan.columns2d, x_pad,
+                        interpret=interpret)
+    return y[0, : plan.n_rows]

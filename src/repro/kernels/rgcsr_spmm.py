@@ -1,0 +1,77 @@
+"""RgCSR SpMM (sparse A × dense X) Pallas TPU kernel.
+
+This is the kernel the LM framework actually uses (SparseLinear: pruned
+weight matrix in RgCSR × activation batch).  Extending the paper's SpMV
+schedule to SpMM multiplies arithmetic intensity by ``d`` (the dense width):
+per stored element we still move ``itemsize + 4`` bytes of matrix but now do
+``2 d`` flops against an X row that lives in VMEM.  This is exactly why
+weight sparsity can pay on TPU despite SpMV itself being hopelessly
+memory-bound (paper §1: intensity ≤ 1).
+
+Schedule: grid ``(d_tiles, num_chunks)`` — chunk dim innermost so the output
+block ``(group, d_tile)`` is revisited consecutively while a fixed
+``(n_pad, DT)`` X panel stays VMEM-resident; the matrix streams once per
+d-tile (weights-streamed schedule; optimal when X-panel reuse dominates,
+i.e. small d — for large d swap the grid, see ops.spmm_grid_order).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SUBLANES = 8
+LANES = 128
+
+__all__ = ["rgcsr_spmm_kernel", "rgcsr_spmm_pallas"]
+
+
+def rgcsr_spmm_kernel(chunk_group_ref, chunk_first_ref,
+                      values_ref, columns_ref, x_ref, y_ref):
+    """Blocks: values/columns (8, G); x (n_pad, DT) whole-rows panel; y (G, DT)."""
+    c = pl.program_id(1)
+
+    @pl.when(chunk_first_ref[c] == 1)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    vals = values_ref[...]                      # (8, G)
+    cols = columns_ref[...]                     # (8, G)
+    x = x_ref[...]                              # (n_pad, DT)
+    acc = y_ref[...]
+    for s in range(SUBLANES):                   # static unroll: 8 FMA waves
+        xg = jnp.take(x, cols[s], axis=0)       # (G, DT) row gather
+        acc = acc + vals[s][:, None] * xg
+    y_ref[...] = acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_groups", "group_size", "d_tile", "interpret"))
+def rgcsr_spmm_pallas(chunk_group, chunk_first, values2d, columns2d, x_pad,
+                      *, n_groups: int, group_size: int, d_tile: int = LANES,
+                      interpret: bool = True):
+    """Launch RgCSR SpMM.  ``x_pad``: (n_pad, d_pad); returns (n_groups*G, d_pad)."""
+    num_chunks = chunk_group.shape[0]
+    g = group_size
+    n_pad, d_pad = x_pad.shape
+    d_tiles = d_pad // d_tile
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(d_tiles, num_chunks),
+        in_specs=[
+            pl.BlockSpec((SUBLANES, g), lambda t, c, cg, cf: (c, 0)),
+            pl.BlockSpec((SUBLANES, g), lambda t, c, cg, cf: (c, 0)),
+            pl.BlockSpec((n_pad, d_tile), lambda t, c, cg, cf: (0, t)),
+        ],
+        out_specs=pl.BlockSpec((g, d_tile), lambda t, c, cg, cf: (cg[c], t)),
+    )
+    return pl.pallas_call(
+        rgcsr_spmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_groups * g, d_pad), values2d.dtype),
+        interpret=interpret,
+    )(chunk_group, chunk_first, values2d, columns2d, x_pad)

@@ -1,0 +1,103 @@
+"""RgCSR SpMV as a Pallas TPU kernel — the paper's CUDA kernel, TPU-native.
+
+Mapping from the paper's CUDA kernel (§3.4) to TPU (DESIGN.md §2):
+
+* CUDA: one *thread* per row; a thread-block of 128 threads = one group;
+  per slot step, the 128 threads read 128 consecutive values/columns
+  (coalesced 128-byte segments).
+* TPU:  one *lane* per row; a group of ``G`` rows (G a multiple of 128) is a
+  dense ``(K_g, G)`` tile in VMEM — slot ``k`` of all rows is one (or a few)
+  full 128-lane vectors.  Reading slot-major tiles from HBM is the TPU
+  equivalent of coalescing: contiguous, layout-aligned DMA.
+
+The ragged group structure (K_g varies per group — the whole point of RgCSR
+vs ELLPACK) is handled with a **chunk table** built at plan time:
+
+* the flat grouped storage is reshaped to ``values2d/columns2d: (S, G)``
+  where ``S = Σ_g K_g`` (each K_g padded to 8 sublanes);
+* chunk ``c`` covers slot rows ``[8c, 8c+8)`` and belongs to exactly one
+  group ``chunk_group[c]`` (K_g % 8 == 0 guarantees no chunk straddles);
+* the grid is ``(num_chunks,)`` — *no* grid step is spent on nonexistent
+  slots of short groups.  This realizes the paper's "skip meaningless
+  arithmetic via rowLengths" at DMA granularity, which is what matters on a
+  memory-bound op (the VPU flops on padding are free; the HBM bytes and
+  grid steps are not).
+
+``x`` is staged into VMEM whole (the paper's texture-cache remedy, made
+explicit): valid while ``n * itemsize`` fits VMEM (≈4M fp32 elements).  The
+per-slot gather ``x[columns]`` is an in-VMEM vector gather.  For larger
+matrices, shard columns over the mesh (see repro.sharding) so each shard's
+x-slice fits — the distributed extension of the paper's caching argument.
+
+Scalar-prefetch carries ``chunk_group`` (output index map) and
+``chunk_first`` (accumulator init).  The same output block is revisited only
+by consecutive grid steps (chunks of a group are contiguous), which is the
+Pallas TPU requirement for read-modify-write output accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SUBLANES = 8
+LANES = 128
+
+__all__ = ["rgcsr_spmv_kernel", "rgcsr_spmv_pallas"]
+
+
+def rgcsr_spmv_kernel(chunk_group_ref, chunk_first_ref,
+                      values_ref, columns_ref, x_ref, y_ref):
+    """Kernel body. Blocks: values/columns (8, G); x (1, n_pad) whole; y (1, G)."""
+    c = pl.program_id(0)
+
+    @pl.when(chunk_first_ref[c] == 1)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    vals = values_ref[...]                          # (8, G)
+    cols = columns_ref[...]                         # (8, G) int32
+    x = x_ref[0, :]                                 # (n_pad,)
+    gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
+    y_ref[...] += jnp.sum(vals * gathered, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "group_size", "interpret"))
+def rgcsr_spmv_pallas(chunk_group, chunk_first, values2d, columns2d, x_pad,
+                      *, n_groups: int, group_size: int, interpret: bool = True):
+    """Launch the RgCSR SpMV kernel.
+
+    Args:
+      chunk_group:  (num_chunks,) int32 — group id of each 8-slot chunk.
+      chunk_first:  (num_chunks,) int32 — 1 iff first chunk of its group.
+      values2d:     (S, G) slot-major values (S = total padded slots).
+      columns2d:    (S, G) int32 column indices (ghost index 0 on padding).
+      x_pad:        (1, n_pad) the dense vector, lane-padded.
+      n_groups, group_size: static layout parameters.
+      interpret:    run in interpret mode (CPU validation) or compile for TPU.
+
+    Returns:
+      (n_groups, G) per-group result rows; caller reshapes/unpads.
+    """
+    num_chunks = chunk_group.shape[0]
+    g = group_size
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_chunks,),
+        in_specs=[
+            pl.BlockSpec((SUBLANES, g), lambda c, cg, cf: (c, 0)),
+            pl.BlockSpec((SUBLANES, g), lambda c, cg, cf: (c, 0)),
+            pl.BlockSpec((1, x_pad.shape[1]), lambda c, cg, cf: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g), lambda c, cg, cf: (cg[c], 0)),
+    )
+    return pl.pallas_call(
+        rgcsr_spmv_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_groups, g), values2d.dtype),
+        interpret=interpret,
+    )(chunk_group, chunk_first, values2d, columns2d, x_pad)

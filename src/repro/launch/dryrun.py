@@ -1,0 +1,329 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+#   init).  Do not move; do not set this flag anywhere global.  (This also
+#   means no `from __future__ import annotations` in this file.)
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds abstract params / optimizer state / caches (ShapeDtypeStruct —
+     zero allocation; the 671B cells never materialize),
+  2. resolves shardings via the logical-axis partitioner,
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(...).compile()``
+     against the production mesh — (16,16)=256 chips single-pod and
+     (2,16,16)=512 chips multi-pod,
+  4. records ``memory_analysis()`` (proves the cell fits HBM),
+     ``cost_analysis()`` (FLOPs/bytes) and the HLO collective traffic
+     (launch/hlo_stats.py) into a JSON consumed by §Roofline/§Perf.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, input_specs
+from repro.configs.base import ModelConfig
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.steps import auto_microbatches, make_decode_step, \
+    make_prefill_step, make_train_step
+from repro.models import LanguageModel
+from repro.sharding import Partitioner
+from repro.train.optimizer import OptimizerConfig
+
+__all__ = ["run_cell", "main", "cell_overrides"]
+
+
+def cell_overrides(arch: str, shape_kind: str) -> Dict[str, Any]:
+    """Per-cell production config choices (documented in EXPERIMENTS.md):
+
+    * deepseek-v3: Adafactor (factored stats) + bf16 params — the only
+      optimizer-state layout that fits 671B on 256/512 v5e chips; every
+      other arch trains AdamW/fp32-master.
+    * serving cells run bf16 params (inference precision).
+    """
+    ov: Dict[str, Any] = {"optimizer": "adamw", "param_dtype": "float32"}
+    if arch == "deepseek-v3-671b":
+        ov["optimizer"] = "adafactor"
+        ov["param_dtype"] = "bfloat16"
+    if shape_kind != "train":
+        ov["param_dtype"] = "bfloat16"
+    return ov
+
+
+def resolve_attn_shard_mode(cfg, model_axis: int) -> str:
+    """Pick the attention TP strategy (models/shardlib.py) by divisibility."""
+    if cfg.attn_kind == "mla":
+        return "heads" if cfg.n_heads % model_axis == 0 else "seq"
+    if cfg.n_kv_heads % model_axis == 0:
+        return "heads"
+    if cfg.n_heads % model_axis == 0:
+        return "repeat"
+    return "seq"
+
+
+def _build_model(arch: str, shape_kind: str, mesh,
+                 cfg_overrides: Optional[Dict[str, Any]] = None,
+                 micro_hint: int = 1, global_batch: int = 1):
+    cfg = get_config(arch)
+    ov = cell_overrides(arch, shape_kind)
+    model_axis = mesh.shape["model"]
+    batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    batch_shards = 1
+    for a in batch_axes:
+        batch_shards *= mesh.shape[a]
+    micro_global = max(1, global_batch // micro_hint)
+    updates: Dict[str, Any] = {
+        "param_dtype": ov["param_dtype"],
+        "act_shard": True,
+        "attn_shard_mode": resolve_attn_shard_mode(cfg, model_axis),
+        "mesh_batch_axes": batch_axes,
+        "shard_batch": micro_global % batch_shards == 0,
+    }
+    if shape_kind == "train":
+        updates["remat"] = "full"
+    if cfg_overrides:
+        for k, v in cfg_overrides.items():
+            if k == "moe" and cfg.moe.n_experts:
+                updates["moe"] = dataclasses.replace(cfg.moe, **v)
+            elif k == "sparsity":
+                updates["sparsity"] = dataclasses.replace(cfg.sparsity, **v)
+            else:
+                updates[k] = v
+    cfg = dataclasses.replace(cfg, **updates)
+    return LanguageModel(cfg), ov
+
+
+def _mem_analysis_dict(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for name in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        val = getattr(ma, name, None)
+        if val is not None:
+            out[name] = float(val)
+    return out
+
+
+def _cost_analysis_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    keep = {}
+    for k, v in ca.items():
+        if k in ("flops", "bytes accessed", "optimal_seconds", "utilization"):
+            keep[k] = float(v)
+        elif k.startswith("bytes accessed"):
+            keep[k] = float(v)
+    return keep
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             cfg_overrides: Optional[Dict[str, Any]] = None,
+             microbatch_override: Optional[int] = None,
+             rules_override: Optional[Dict[str, Any]] = None,
+             keep_hlo: bool = False) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the §Dry-run/§Roofline record.
+
+    ``rules_override``: logical-axis → mesh-axis entries merged over the
+    default ShardingRules — the knob the §Perf hillclimb turns.
+    """
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.devices.size
+    base_cfg = get_config(arch)
+    n_data0 = n_devices // mesh.shape["model"]
+    micro_hint = 1
+    if shape.kind == "train":
+        micro_hint = microbatch_override or auto_microbatches(
+            base_cfg, shape.global_batch, shape.seq_len, n_data0)
+    model, ov = _build_model(arch, shape.kind, mesh, cfg_overrides,
+                             micro_hint=micro_hint,
+                             global_batch=shape.global_batch)
+    cfg = model.cfg
+    if rules_override:
+        from repro.sharding.partitioner import SERVE_RULES, TRAIN_RULES, \
+            ShardingRules
+        base_rules = TRAIN_RULES if shape.kind == "train" else SERVE_RULES
+        rules = ShardingRules(params={**base_rules.params, **rules_override},
+                              batch=base_rules.batch)
+        part = Partitioner(mesh, shape.kind, rules)
+    else:
+        part = Partitioner(mesh, shape.kind)
+    record_attn_mode = cfg.attn_shard_mode
+
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": list(mesh.devices.shape),
+        "multi_pod": multi_pod, "n_devices": int(n_devices),
+        "param_dtype": cfg.param_dtype, "optimizer": ov["optimizer"],
+        "attn_shard_mode": record_attn_mode,
+        "n_params": model.n_params(), "n_active_params": model.n_active_params(),
+    }
+    t0 = time.time()
+
+    spec_tree = model.spec()
+    params_abs = model.abstract_params()
+    p_sh = part.param_shardings(spec_tree)
+    batch_abs = input_specs(cfg, shape)
+    b_sh = part.batch_shardings(batch_abs)
+
+    with mesh:
+        if shape.kind == "train":
+            micro = micro_hint
+            record["microbatches"] = micro
+            opt_cfg = OptimizerConfig(name=ov["optimizer"])
+            train_step, opt_init = make_train_step(model, opt_cfg, micro)
+            opt_abs = jax.eval_shape(opt_init, params_abs)
+            o_sh = part.opt_shardings(spec_tree, ov["optimizer"])
+            fn = jax.jit(train_step,
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            prefill = make_prefill_step(model, shape.seq_len, shape.kind)
+            cache_abs = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                         shape_kind=shape.kind,
+                                         enc_len=shape.seq_len
+                                         if cfg.enc_dec else 0))
+            c_sh = part.cache_shardings(cache_abs)
+            fn = jax.jit(prefill,
+                         in_shardings=(p_sh, b_sh),
+                         out_shardings=(part.logits_sharding(
+                             shape.global_batch), c_sh))
+            lowered = fn.lower(params_abs, batch_abs)
+        else:  # decode / long_decode
+            decode = make_decode_step(model, shape.kind)
+            enc_len = 4096 if cfg.enc_dec else 0
+            cache_abs = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                         shape_kind=shape.kind,
+                                         enc_len=enc_len))
+            c_sh = part.cache_shardings(cache_abs)
+            fn = jax.jit(decode,
+                         in_shardings=(p_sh, c_sh, b_sh["tokens"]),
+                         out_shardings=(part.logits_sharding(
+                             shape.global_batch), c_sh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(params_abs, cache_abs, batch_abs["tokens"])
+
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+    record["memory"] = _mem_analysis_dict(compiled)
+    # XLA's naive analysis (single-visit loop bodies) kept for reference;
+    # the authoritative numbers come from the loop-aware parser below.
+    record["cost_xla_naive"] = _cost_analysis_dict(compiled)
+    hlo = compiled.as_text()
+    record["hlo_bytes"] = len(hlo)
+    cost = analyze_hlo(hlo, n_devices)
+    record["cost"] = {
+        "flops": cost.flops,                    # per-device, loop-corrected
+        "bytes": cost.bytes,
+        "collective_bytes": cost.collective_bytes,
+        "collective_bytes_tpu": cost.collective_bytes_tpu,
+        "collective_bytes_f32_dot": cost.collective_bytes_f32_dot,
+        "collective_counts": cost.collective_counts,
+        "collective_bytes_by_kind": cost.collective_bytes_by_kind,
+        "n_loops": len(cost.loops),
+    }
+    if keep_hlo:
+        record["hlo_text"] = hlo
+
+    # roofline terms (§Roofline): per-device seconds per term.
+    # collective uses the TPU-corrected bytes (bf16 dot outputs are
+    # all-reduced at f32 only on the CPU backend — hlo_cost.HloCost).
+    record["roofline"] = {
+        "compute_s": cost.flops / HW.PEAK_FLOPS,
+        "memory_s": cost.bytes / HW.HBM_BW,
+        "collective_s": cost.collective_bytes_tpu / HW.ICI_BW,
+    }
+    dom = max(record["roofline"], key=record["roofline"].get)
+    record["bottleneck"] = dom.replace("_s", "")
+
+    # MODEL_FLOPS ratio: useful work / compiled work (per device)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind in
+                                   ("train", "prefill") else 1)
+    mf = 6.0 * model.n_active_params() * tokens
+    if shape.kind == "train":
+        pass                                    # 6ND already counts fwd+bwd
+    else:
+        mf = 2.0 * model.n_active_params() * tokens   # inference: fwd only
+    record["model_flops_global"] = mf
+    per_dev = mf / n_devices
+    record["model_flops_ratio"] = per_dev / cost.flops if cost.flops else 0.0
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCH_IDS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--micro", type=int, default=None)
+    ap.add_argument("--skip", default="",
+                    help="comma-separated arch:shape cells to skip")
+    ap.add_argument("--only", default="",
+                    help="comma-separated arch:shape cells to run")
+    args = ap.parse_args(argv)
+    skip = {tuple(c.split(":")) for c in args.skip.split(",") if c}
+    only = {tuple(c.split(":")) for c in args.only.split(",") if c}
+
+    archs = sorted(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    jsonl = open(args.out + "l", "a") if args.out else None
+    for arch in archs:
+        for shape in shapes:
+            if (arch, shape) in skip or (only and (arch, shape) not in only):
+                continue
+            for mp in meshes:
+                tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   microbatch_override=args.micro)
+                    rec["status"] = "ok"
+                    print(f"[dryrun] OK   {tag}: compile={rec['compile_s']}s "
+                          f"flops={rec['cost'].get('flops', 0):.3e} "
+                          f"coll={rec['cost']['collective_bytes']:.3e}B "
+                          f"bottleneck={rec['bottleneck']}", flush=True)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"[dryrun] FAIL {tag}: {e!r}", flush=True)
+                results.append(rec)
+                if jsonl:
+                    jsonl.write(json.dumps(rec) + "\n")
+                    jsonl.flush()
+    if jsonl:
+        jsonl.close()
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {len(results)} records to {args.out}")
+    n_err = sum(r["status"] != "ok" for r in results)
+    print(f"[dryrun] {len(results) - n_err}/{len(results)} cells OK")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

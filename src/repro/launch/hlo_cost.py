@@ -1,0 +1,315 @@
+"""Loop-aware HLO cost model (flops + HBM traffic) from post-SPMD HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits every while-loop body
+**once** — with scan-over-layers, microbatch accumulation and chunked
+attention all lowered to ``while`` loops, it undercounts a 61-layer model by
+~two orders of magnitude (verified in tests/test_hlo_cost.py).  This module
+parses ``compiled.as_text()`` and walks the call graph, multiplying each
+``while`` body by its trip count (taken from XLA's
+``backend_config={"known_trip_count":…}`` — all our loops are static-trip
+jax scans; fallback: the compare constant in the loop condition).
+
+Cost model (documented in EXPERIMENTS.md §Roofline):
+
+* **flops** — MXU work only: ``dot`` = 2·prod(result)·prod(contracting),
+  counted wherever it appears (incl. inside fusions), × loop multiplier.
+  VPU elementwise flops are excluded, matching MFU conventions.
+* **bytes** — *fusion-idealized* HBM traffic model: only instructions that
+  materialize buffers on a TPU backend are counted (dot, reduce, gather/
+  scatter, dynamic-(update-)slice, concatenate, convolution, sort,
+  collectives, copy), bytes = result + operand sizes, × loop multiplier.
+  Pure-elementwise ops and the CPU backend's tiny wrapper fusions are
+  skipped — TPU XLA fuses elementwise chains into their producers/consumers,
+  so counting them (measured: 90% of raw traffic on the CPU module) would
+  model the wrong backend.  This still captures the buffers that dominate a
+  real TPU profile: weights feeding dots, attention score blocks, KV-cache
+  updates, collective payloads.
+* **collectives** — ring-model per-device traffic (see table in
+  launch/hlo_stats.py), × loop multiplier: a collective inside the layer
+  scan runs every layer, which a single-visit parse would undercount.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# result is either a tuple shape `(…)` (may contain /*index=N*/ comments but
+# never nested parens) or a single `dtype[dims]{layout}`
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^()]*\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s*([a-z0-9-]+)\((.*)$")
+_CALLED_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops whose buffers materialize in HBM on a fused TPU backend
+_MATERIALIZING = {
+    "dot", "convolution", "reduce", "reduce-window", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "sort", "copy",
+    "select-and-scatter", "pad", "cholesky", "triangular-solve", "fft",
+    "custom-call",
+} | set(_COLLECTIVES)
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype in _DTYPE_BYTES:
+            total += _shape_elems(dims) * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    opcode: str
+    result_txt: str
+    args_txt: str
+    operands: List[str]
+    called: List[str]
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    collective_bytes: float
+    collective_counts: Dict[str, int]
+    collective_bytes_by_kind: Dict[str, float]
+    loops: Dict[str, int]
+    dot_flops_by_shape: Dict[str, float]
+    # f32 collectives sitting directly on dot outputs: on the CPU backend
+    # bf16 dots are upcast to f32 and the TP all-reduce lands on the f32
+    # tensor; a TPU backend reduces these in bf16.  collective_bytes minus
+    # half of this bucket = the TPU-corrected collective traffic.
+    collective_bytes_f32_dot: float = 0.0
+
+    @property
+    def collective_bytes_tpu(self) -> float:
+        return self.collective_bytes - 0.5 * self.collective_bytes_f32_dot
+
+
+def _operand_list(args_txt: str) -> List[str]:
+    """Operand %names inside the instruction's argument parens (before any
+    attribute list — attributes never contain bare %names except the called
+    computations, which are parsed separately)."""
+    depth = 1
+    for i, ch in enumerate(args_txt):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return _OPERAND_RE.findall(args_txt[:i])
+    return _OPERAND_RE.findall(args_txt)
+
+
+def _parse_computations(text: str):
+    comps: Dict[str, List[_Instr]] = {}
+    entry: Optional[str] = None
+    current: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if current is None:
+            if stripped.endswith("{") and "->" in stripped:
+                is_entry = stripped.startswith("ENTRY")
+                name = stripped.split()[1 if is_entry else 0]
+                name = name.lstrip("%").split("(")[0].rstrip(".")
+                # header like `%region_0.2 (args...) -> ... {`
+                name = re.match(r"[\w\.\-]+", stripped.lstrip("ENTRY ").lstrip("%")).group(0)
+                comps[name] = []
+                current = name
+                if is_entry:
+                    entry = name
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        iname, result_txt, opcode, rest = m.groups()
+        called = _CALLED_RE.findall(rest)
+        bm = _BRANCHES_RE.search(rest)
+        if bm:
+            called += [c.strip().lstrip("%") for c in bm.group(1).split(",")]
+        comps[current].append(
+            _Instr(iname, opcode, result_txt, rest, _operand_list(rest),
+                   called))
+    return comps, entry
+
+
+def _collective_kind(opcode: str) -> Optional[str]:
+    for c in _COLLECTIVES:
+        if opcode == c or opcode.startswith(c + "-"):
+            return c
+    return None
+
+
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[^=]*?\})\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+
+
+def _group_size(args: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(args)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPLICIT_RE.search(args)
+    if m:
+        first = m.group(1).split("}")[0]
+        ids = [tok for tok in re.split(r"[{,\s]+", first) if tok]
+        return max(1, len(ids))
+    return default
+
+
+def analyze_hlo(text: str, n_devices: int) -> HloCost:
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+
+    # symbol tables: instruction name -> result text, per computation
+    symtab: Dict[str, Dict[str, str]] = {
+        cname: {i.name: i.result_txt for i in instrs}
+        for cname, instrs in comps.items()
+    }
+
+    def dot_flops(comp: str, ins: _Instr) -> float:
+        result_elems = sum(_shape_elems(d) for t, d in
+                           _SHAPE_RE.findall(ins.result_txt)
+                           if t in _DTYPE_BYTES)
+        if not ins.operands:
+            return 0.0
+        lhs_txt = symtab[comp].get(ins.operands[0], "")
+        lhs_shapes = [d for t, d in _SHAPE_RE.findall(lhs_txt)
+                      if t in _DTYPE_BYTES]
+        if not lhs_shapes:
+            return 0.0
+        lhs_dims = lhs_shapes[0].split(",") if lhs_shapes[0] else []
+        cm = _CONTRACT_RE.search(ins.args_txt)
+        contract = 1
+        if cm and cm.group(1):
+            for idx in cm.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contract *= int(lhs_dims[i])
+        return 2.0 * result_elems * contract
+
+    def trip_count(ins: _Instr) -> int:
+        m = _TRIP_RE.search(ins.args_txt)
+        if m:
+            return int(m.group(1))
+        cm = _COND_RE.search(ins.args_txt)
+        cond = cm.group(1) if cm else None
+        best = 1
+        for ci in comps.get(cond, []):
+            for mm in _CONST_INT_RE.finditer(ci.args_txt):
+                best = max(best, int(mm.group(1)))
+        return best
+
+    def operand_bytes(comp: str, ins: _Instr) -> int:
+        return sum(_bytes_of(symtab[comp].get(op, "")) for op in ins.operands)
+
+    memo: Dict[str, Tuple] = {}
+    loops: Dict[str, int] = {}
+    dot_shapes: Dict[str, float] = {}
+
+    def cost(comp: str, in_fusion: bool = False):
+        key = comp + ("|f" if in_fusion else "")
+        if key in memo:
+            return memo[key]
+        memo[key] = (0.0, 0.0, 0.0, {}, {}, 0.0)  # cycle guard
+        flops = byts = coll = coll_f32dot = 0.0
+        ccounts: Dict[str, int] = {}
+        cbytes: Dict[str, float] = {}
+        for ins in comps.get(comp, []):
+            if ins.opcode == "dot":
+                f = dot_flops(comp, ins)
+                flops += f
+                dot_shapes[ins.result_txt] = dot_shapes.get(ins.result_txt,
+                                                            0.0) + f
+            kind = _collective_kind(ins.opcode)
+            if kind is not None:
+                result_bytes = _bytes_of(ins.result_txt)
+                n = max(2, _group_size(ins.args_txt, n_devices))
+                frac = (n - 1) / n
+                if kind == "all-gather":
+                    traffic = frac * result_bytes
+                elif kind == "reduce-scatter":
+                    traffic = frac * result_bytes * n
+                elif kind == "all-reduce":
+                    traffic = 2.0 * frac * result_bytes
+                elif kind == "all-to-all":
+                    traffic = frac * result_bytes
+                else:
+                    traffic = float(result_bytes)
+                coll += traffic
+                ccounts[kind] = ccounts.get(kind, 0) + 1
+                cbytes[kind] = cbytes.get(kind, 0.0) + traffic
+                if kind == "all-reduce" and "f32[" in ins.result_txt \
+                        and "dot_general" in ins.args_txt:
+                    coll_f32dot += traffic
+            if not in_fusion and ins.opcode in _MATERIALIZING:
+                byts += _bytes_of(ins.result_txt) + operand_bytes(comp, ins)
+            if ins.opcode == "while":
+                bm_ = _BODY_RE.search(ins.args_txt)
+                body = bm_.group(1) if bm_ else None
+                trips = trip_count(ins)
+                loops[f"{comp}/{ins.name}"] = trips
+                if body:
+                    f2, b2, c2, cc2, cb2, cf2 = cost(body)
+                    flops += trips * f2
+                    byts += trips * b2
+                    coll += trips * c2
+                    coll_f32dot += trips * cf2
+                    for k, v in cc2.items():
+                        ccounts[k] = ccounts.get(k, 0) + trips * v
+                    for k, v in cb2.items():
+                        cbytes[k] = cbytes.get(k, 0.0) + trips * v
+            elif ins.called:
+                # fusion / call / reduce / scatter / conditional / sort …
+                inner_fusion = in_fusion or ins.opcode == "fusion" \
+                    or ins.opcode not in ("call", "conditional")
+                for c in ins.called:
+                    f2, b2, c2, cc2, cb2, cf2 = cost(c, in_fusion=inner_fusion)
+                    flops += f2
+                    byts += 0.0 if inner_fusion else b2
+                    coll += c2
+                    coll_f32dot += cf2
+                    for k, v in cc2.items():
+                        ccounts[k] = ccounts.get(k, 0) + v
+                    for k, v in cb2.items():
+                        cbytes[k] = cbytes.get(k, 0.0) + v
+        memo[key] = (flops, byts, coll, ccounts, cbytes, coll_f32dot)
+        return memo[key]
+
+    f, b, c, cc, cb, cf = cost(entry)
+    return HloCost(flops=f, bytes=b, collective_bytes=c,
+                   collective_counts=cc, collective_bytes_by_kind=cb,
+                   loops=loops, dot_flops_by_shape=dot_shapes,
+                   collective_bytes_f32_dot=cf)

@@ -1,0 +1,105 @@
+"""HLO text analysis: collective traffic for the roofline's third term.
+
+``cost_analysis()`` does not expose collective bytes, so we parse the
+post-SPMD HLO (``compiled.as_text()``) and sum, per collective kind, the
+per-device traffic with the standard ring-algorithm byte model:
+
+=================== ===========================================
+all-gather           (n-1)/n · result_bytes
+reduce-scatter       (n-1)/n · operand_bytes (≈ n · result)
+all-reduce           2 · (n-1)/n · operand_bytes  (RS + AG ring)
+all-to-all           (n-1)/n · operand_bytes
+collective-permute   operand_bytes
+=================== ===========================================
+
+where ``n`` is the replica-group size parsed from ``replica_groups`` (both
+the explicit ``{{0,1,…},…}`` and iota ``[g,n]<=[N]`` forms).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = ["collective_stats", "parse_shape_bytes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# an HLO instruction line: "  %name = <shape(s)> <opcode>(...)"
+_INSTR_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([a-z0-9-]+)\(")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[^=]*?\})\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+
+
+def parse_shape_bytes(text: str) -> int:
+    """Sum bytes of every dtype[shape] token in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0]
+        ids = [tok for tok in re.split(r"[{,\s]+", first) if tok]
+        return max(1, len(ids))
+    return default
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> Dict:
+    """Per-kind instruction counts and per-device traffic bytes."""
+    stats = {k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        opcode = m.group(3)
+        kind = None
+        for c in _COLLECTIVES:
+            if opcode == c or opcode.startswith(c + "-"):
+                kind = c
+                break
+        if kind is None:
+            continue
+        shape_txt = m.group(1) or m.group(2)
+        result_bytes = parse_shape_bytes(shape_txt)
+        n = max(2, _group_size(line, n_devices))
+        frac = (n - 1) / n
+        if kind == "all-gather":
+            traffic = frac * result_bytes
+        elif kind == "reduce-scatter":
+            traffic = frac * result_bytes * n
+        elif kind == "all-reduce":
+            traffic = 2.0 * frac * result_bytes
+        elif kind == "all-to-all":
+            traffic = frac * result_bytes
+        else:  # collective-permute
+            traffic = float(result_bytes)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += traffic
+    stats["total_bytes"] = float(sum(v["bytes"] for k, v in stats.items()
+                                     if isinstance(v, dict)))
+    stats["total_count"] = int(sum(v["count"] for k, v in stats.items()
+                                   if isinstance(v, dict)))
+    return stats

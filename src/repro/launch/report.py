@@ -1,0 +1,119 @@
+"""Render EXPERIMENTS.md result sections from the measured JSONL records."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.launch.roofline import load_records, render_table
+
+
+def perf_log_table(path: str) -> str:
+    if not os.path.exists(path):
+        return "_hillclimb records missing_"
+    recs = [json.loads(l) for l in open(path) if l.strip()]
+    # keep the last record per iteration name (reruns supersede)
+    seen = {}
+    for r in recs:
+        seen[r["iter"]] = r
+    out = ["| iter | hypothesis | compute_s | memory_s | collective_s | "
+           "MODEL_FLOPs/HLO | verdict |",
+           "|---|---|---|---|---|---|---|"]
+    prev = {}
+    for name in sorted(seen):
+        r = seen[name]
+        if r.get("status") != "ok":
+            out.append(f"| {name} | {r['hypothesis'][:80]}… | ERROR | | | | "
+                       f"{r.get('error', '')[:40]} |")
+            continue
+        rl = r["roofline"]
+        series = name.split(".")[0]
+        verdict = ""
+        if series in prev:
+            p = prev[series]
+            deltas = []
+            for k, lbl in (("compute_s", "C"), ("memory_s", "M"),
+                           ("collective_s", "X")):
+                if p[k] > 0:
+                    d = 100.0 * (rl[k] - p[k]) / p[k]
+                    if abs(d) >= 1:
+                        deltas.append(f"{lbl}{d:+.0f}%")
+            verdict = " ".join(deltas) or "~no change"
+        prev[series] = rl
+        hyp = r["hypothesis"].replace("|", "/")
+        out.append(f"| {name} | {hyp} | {rl['compute_s']:.3f} | "
+                   f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+                   f"{r.get('model_flops_ratio', 0):.3f} | {verdict} |")
+    return "\n".join(out)
+
+
+def perf_summary(path: str) -> str:
+    if not os.path.exists(path):
+        return "_hillclimb records missing_"
+    recs = [json.loads(l) for l in open(path) if l.strip()]
+    seen = {}
+    for r in recs:
+        seen[r["iter"]] = r
+    pairs = [
+        ("H1 granite-3-2b train_4k", "h1.0-baseline", "h1.5-bf16-comms"),
+        ("H2 deepseek-v3 prefill_32k", "h2.0-baseline",
+         "h2.2-capacity-1.0"),
+        ("H3 RgCSR-FFN vs dense", "h3.0-dense-ffn-ref",
+         "h3.1-rgcsr-ffn-d25"),
+    ]
+    out = ["| cell | variant | compute_s | memory_s | collective_s | "
+           "step lower-bound (max term) | roofline fraction (compute/max) |",
+           "|---|---|---|---|---|---|---|"]
+    for label, base, best in pairs:
+        for tag, key in (("paper-faithful baseline", base),
+                         ("beyond-paper optimized", best)):
+            r = seen.get(key)
+            if not r or r.get("status") != "ok":
+                out.append(f"| {label} | {tag} ({key}) | missing | | | | |")
+                continue
+            rl = r["roofline"]
+            mx = max(rl.values())
+            frac = rl["compute_s"] / mx if mx else 0.0
+            out.append(f"| {label} | {tag} | {rl['compute_s']:.3f} | "
+                       f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+                       f"{mx:.3f} | {frac:.2f} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    import glob
+    recs = []
+    for p in sorted(glob.glob("results/dryrun*.jsonl")) \
+            + ["results/ds_train.jsonl"]:
+        if os.path.exists(p):
+            try:
+                recs += load_records(p)
+            except Exception:
+                pass
+    # dedupe (arch, shape, mesh): last wins
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"], r.get("multi_pod", False))] = r
+    recs = list(seen.values())
+
+    n_ok = sum(r.get("status") == "ok" for r in recs)
+    header = (f"Cells compiled OK: {n_ok}/{len(recs)} "
+              f"(each cell = lower+compile on the production mesh).\n\n")
+    table = (header
+             + "### single-pod (16×16 = 256 chips) — the §Roofline table\n\n"
+             + render_table(recs, multi_pod=False)
+             + "\n\n### multi-pod (2×16×16 = 512 chips)\n\n"
+             + render_table(recs, multi_pod=True))
+
+    md = open("EXPERIMENTS.md").read()
+    md = md.replace("<!-- ROOFLINE_TABLE -->", table)
+    md = md.replace("<!-- PERF_LOG -->",
+                    perf_log_table("results/hillclimb.jsonl"))
+    md = md.replace("<!-- PERF_SUMMARY -->",
+                    perf_summary("results/hillclimb.jsonl"))
+    open("EXPERIMENTS.md", "w").write(md)
+    print(f"EXPERIMENTS.md updated: {n_ok}/{len(recs)} cells")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,102 @@
+"""Step functions the launchers / dry-run lower: train, prefill, decode.
+
+``make_train_step`` builds the full production step — loss, backward,
+global-norm clip, optimizer update — with **microbatch gradient
+accumulation** (lax.scan over microbatches): the activation-memory knob that
+makes 4k-seq training of the large archs fit HBM (napkin math per cell in
+EXPERIMENTS.md §Dry-run).  Gradients accumulate in the parameter dtype.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import OptimizerConfig, clip_by_global_norm, \
+    make_optimizer
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "auto_microbatches"]
+
+
+def auto_microbatches(cfg, global_batch: int, seq: int, n_data_shards: int,
+                      budget_bytes: float = 2.0e9) -> int:
+    """Pick a microbatch count so that per-device residual-stream
+    checkpoints (the dominant remat-surviving activations) fit the budget:
+
+        ceil( B_dev/µ · S · d_model · 2B · n_layers / budget )
+
+    Clamped to divide the per-device batch evenly.
+    """
+    b_dev = max(1, global_batch // n_data_shards)
+    per_layer = seq * cfg.d_model * 2
+    total = b_dev * per_layer * cfg.n_layers
+    mb = max(1, int(-(-total // budget_bytes)))
+    while b_dev % mb:
+        mb += 1
+    return min(mb, b_dev)
+
+
+def make_train_step(model, opt_cfg: OptimizerConfig, microbatches: int = 1):
+    opt_init, opt_update = make_optimizer(opt_cfg)
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    # allow_int: frozen int32 structure buffers (RgCSR SparseLinear) ride
+    # along in the param tree and receive float0 tangents, which the
+    # accumulator and both optimizers skip.
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True, allow_int=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def _is_f0(g):
+                return getattr(g, "dtype", None) == jax.dtypes.float0
+
+            def body(acc, mb):
+                (loss, metrics), grads = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a if _is_f0(g) else a + g, acc, grads)
+                return acc, (loss, metrics["ce"])
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, p.dtype)
+                if jnp.issubdtype(p.dtype, jnp.floating)
+                else np.zeros(p.shape, jax.dtypes.float0), params)
+            grads, (losses, ces) = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree_util.tree_map(
+                lambda g: g if _is_f0(g)
+                else (g.astype(jnp.float32) / microbatches).astype(g.dtype),
+                grads)
+            loss = jnp.mean(losses)
+            metrics = {"ce": jnp.mean(ces)}
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        new_params, new_opt_state = opt_update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        return new_params, new_opt_state, metrics
+
+    return train_step, opt_init
+
+
+def make_prefill_step(model, s_max: int, shape_kind: str = "prefill"):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, s_max, shape_kind=shape_kind)
+    return prefill_step
+
+
+def make_decode_step(model, shape_kind: str = "decode"):
+    def decode_step(params, caches, tokens):
+        return model.decode_step(params, caches, tokens,
+                                 shape_kind=shape_kind)
+    return decode_step

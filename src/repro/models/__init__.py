@@ -1,0 +1,2 @@
+"""Model substrate: layers, attention/recurrent mixers, MoE, stacks, LM API."""
+from repro.models.model import LanguageModel  # noqa: F401

@@ -1,0 +1,485 @@
+"""Attention variants: GQA/MHA/MQA, MLA (DeepSeek/MiniCPM), local windows.
+
+All variants share the cache protocol::
+
+    cache = {"k": (B, S_max, H_kv, Dh), "v": ..., "index": i32[]}         # gqa
+    cache = {"ckv": (B, S_max, r_kv), "krope": (B, S_max, Dr), "index": …} # mla
+
+``index`` is the number of tokens already written.  Windowed layers use a
+ring buffer of size ``window`` (position ``index % window``) so decode-state
+is O(window) — this is what makes the `long_500k` fallback and the
+RecurrentGemma local-attention layers bounded.
+
+KV-cache quantization (``int8``) stores per-token/head absmax scales — a
+beyond-paper memory optimization evaluated in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import P, dense, dense_spec, rope
+
+__all__ = ["gqa_spec", "gqa_apply", "mla_spec", "mla_apply",
+           "init_gqa_cache", "init_mla_cache", "attend"]
+
+
+# ---------------------------------------------------------------------------
+# shared scaled-dot-product core
+# ---------------------------------------------------------------------------
+
+
+# At/above this many kv positions the direct (materialized-scores) path is
+# replaced by the chunked online-softmax path — exact same math, O(chunk²)
+# peak memory instead of O(S·T).  Without this, the 32k prefill cells would
+# materialize multi-TB score tensors (EXPERIMENTS.md §Dry-run).
+_FLASH_KV_THRESHOLD = 4096
+_Q_CHUNK = 512
+_K_CHUNK = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskInfo:
+    """Lazy attention-mask description — masks are *computed per block*
+    inside the chunked path instead of materializing an (S, T) bool array
+    (1 GB at 32k); the direct path builds the same mask from indices."""
+    causal: bool = True
+    window: Optional[int] = None    # static
+    q_offset: object = 0            # traced scalar ok (tokens already cached)
+    valid_len: object = None        # kv positions >= valid_len are masked
+    kv_len: Optional[int] = None    # true kv length (for padding)
+
+    def block(self, q_pos, k_pos):
+        """q_pos: (qc,), k_pos: (kc,) -> bool (qc, kc)."""
+        m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+        qp = q_pos[:, None]
+        kp = k_pos[None, :]
+        if self.causal:
+            m &= kp <= qp
+        if self.window is not None:
+            m &= kp > qp - self.window
+        if self.valid_len is not None:
+            m &= kp < self.valid_len
+        if self.kv_len is not None:
+            m &= kp < self.kv_len
+        return m
+
+
+def attend(q, k, v, mask=None, *, mask_info: Optional[MaskInfo] = None,
+           scale: Optional[float] = None):
+    """q: (B,S,Hq,D)  k/v: (B,T,Hkv,D|Dv).
+
+    Pass either an explicit (S,T) bool ``mask`` (small/decode shapes) or a
+    :class:`MaskInfo` (lazy; required for long sequences).  Grouped heads:
+    Hq = G·Hkv — q is reshaped so each kv head serves G query heads without
+    materializing repeated k/v (the GQA memory win).
+    """
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    scale = scale if scale is not None else d ** -0.5
+    if s > 1 and t >= _FLASH_KV_THRESHOLD:
+        if mask_info is None:
+            raise ValueError("long-sequence attend() needs a MaskInfo "
+                             "(explicit masks would materialize S×T)")
+        out = _flash_attend(qg, k, v, mask_info, scale)
+        return out.reshape(b, s, hq, v.shape[-1])
+    if mask is None:
+        q_pos = jnp.arange(s) + mask_info.q_offset
+        mask = mask_info.block(q_pos, jnp.arange(t))
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(mask[None, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, hq, v.shape[-1])
+
+
+def _flash_attend(qg, k, v, mi: MaskInfo, scale,
+                  q_chunk=_Q_CHUNK, k_chunk=_K_CHUNK):
+    """Exact chunked attention (FlashAttention recurrence in pure jnp).
+
+    qg: (B,S,Hkv,G,D); k/v: (B,T,Hkv,D/Dv).  Sequential lax.scan over query
+    chunks, inner scan over kv chunks with the online (m, l, acc) softmax
+    carry — peak live buffer is (B,Hkv,G,Qc,Kc) fp32.
+    """
+    b, s, hkv, g, d = qg.shape
+    t = k.shape[1]
+    dv = v.shape[-1]
+    qc, kc = min(q_chunk, s), k_chunk
+    s_pad, t_pad = (-s) % qc, (-t) % kc
+    if t_pad and mi.kv_len is None:
+        mi = dataclasses.replace(mi, kv_len=t)
+    if s_pad:
+        qg = jnp.pad(qg, ((0, 0), (0, s_pad), (0, 0), (0, 0), (0, 0)))
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    nq, nk = (s + s_pad) // qc, (t + t_pad) // kc
+
+    q_blocks = jnp.moveaxis(
+        qg.reshape(b, nq, qc, hkv, g, d), 1, 0)            # (nq,B,qc,hkv,g,d)
+    k_blocks = jnp.moveaxis(k.reshape(b, nk, kc, hkv, d), 1, 0)
+    v_blocks = jnp.moveaxis(v.reshape(b, nk, kc, hkv, dv), 1, 0)
+
+    def q_body(_, inputs):
+        qi, q_blk = inputs                                  # (B,qc,hkv,g,d)
+        q_pos = qi * qc + jnp.arange(qc) + mi.q_offset
+
+        def kv_body(carry, kv_inputs):
+            m, l, acc = carry
+            kj, k_blk, v_blk = kv_inputs
+            k_pos = kj * kc + jnp.arange(kc)
+            mask_blk = mi.block(q_pos, k_pos)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk",
+                                q_blk.astype(jnp.float32),
+                                k_blk.astype(jnp.float32)) * scale
+            logits = jnp.where(mask_blk[None, None, None, :, :], logits,
+                               -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            # guard -inf rows (fully masked so far): exp(-inf - -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(logits - m_safe[..., None])
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        init = (jnp.full((b, hkv, g, qc), -jnp.inf, jnp.float32),
+                jnp.zeros((b, hkv, g, qc), jnp.float32),
+                jnp.zeros((b, hkv, g, qc, dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, init, (jnp.arange(nk), k_blocks, v_blocks))
+        out = jnp.where(l[..., None] > 0,
+                        acc / jnp.maximum(l[..., None], 1e-30),
+                        0.0)                                # (B,hkv,g,qc,dv)
+        return None, jnp.moveaxis(out, 3, 1)                # (B,qc,hkv,g,dv)
+
+    _, out_blocks = jax.lax.scan(q_body, None, (jnp.arange(nq), q_blocks))
+    out = jnp.moveaxis(out_blocks, 0, 1).reshape(b, nq * qc, hkv, g, dv)
+    return out[:, :s].astype(v.dtype)
+
+
+def _mask_for(mode: str, s: int, t: int, index, window: Optional[int]):
+    """Attention mask given query block length s and kv length t.
+
+    ``index``: tokens already in cache before this call (decode/prefill
+    continuation); positions of the new queries are index..index+s-1.
+    """
+    q_pos = jnp.arange(s)[:, None] + index
+    kv_pos = jnp.arange(t)[None, :]
+    if mode == "full":                       # encoder (bidirectional)
+        return jnp.ones((s, t), bool)
+    mask = kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    return mask
+
+
+def _ring_mask(s: int, window: int, index):
+    """Decode-time mask over a ring buffer of size ``window``.
+
+    Slot j holds absolute position p ≡ j (mod window) with p in
+    (index-window, index]; valid iff it has been written (p >= 0) — geometry
+    guarantees p <= index.  Query position = index (s == 1).
+    """
+    assert s == 1
+    slots = jnp.arange(window)
+    newest = index  # position being written this step lands at index % window
+    pos = newest - ((newest - slots) % window)
+    return (pos >= 0)[None, :]
+
+
+# ---------------------------------------------------------------------------
+# KV quantization helpers (beyond-paper: int8 cache)
+# ---------------------------------------------------------------------------
+
+
+def _quantize(x):
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    return jnp.round(x / scale).astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _maybe_store(x, dtype: str):
+    if dtype == "int8":
+        return _quantize(x)
+    return x.astype(jnp.dtype(dtype)), None
+
+
+def _maybe_load(stored, scale, dtype):
+    if scale is not None:
+        return stored.astype(dtype) * scale.astype(dtype)
+    return stored.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_spec(cfg):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "q": dense_spec(d, hq * dh, ("embed", "q_heads_x_dim"), bias=cfg.qkv_bias),
+        "k": dense_spec(d, hkv * dh, ("embed", "kv_heads_x_dim"), bias=cfg.qkv_bias),
+        "v": dense_spec(d, hkv * dh, ("embed", "kv_heads_x_dim"), bias=cfg.qkv_bias),
+        "o": dense_spec(hq * dh, d, ("q_heads_x_dim", "embed")),
+    }
+
+
+def init_gqa_cache(cfg, batch: int, s_max: int, window: Optional[int] = None):
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    size = min(s_max, window) if window else s_max
+    kv_dtype = cfg.kv_cache_dtype
+    store_dtype = jnp.int8 if kv_dtype == "int8" else jnp.dtype(kv_dtype)
+    cache = {
+        "k": jnp.zeros((batch, size, hkv, dh), store_dtype),
+        "v": jnp.zeros((batch, size, hkv, dh), store_dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+    if kv_dtype == "int8":
+        cache["k_scale"] = jnp.zeros((batch, size, hkv, 1), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, size, hkv, 1), jnp.float32)
+    return cache
+
+
+def _cache_write(cache, k_new, v_new, kv_dtype: str, window: Optional[int]):
+    index = cache["index"]
+    size = cache["k"].shape[1]
+    s = k_new.shape[1]
+    ks, k_scale = _maybe_store(k_new, kv_dtype)
+    vs, v_scale = _maybe_store(v_new, kv_dtype)
+    if window and s >= size:
+        # prefill longer than the ring: keep the last `size` tokens, rolled
+        # so that absolute position p lands at slot p % size (the invariant
+        # the decode-time ring mask relies on)
+        shift = (s - size) % size
+        cache = dict(cache)
+        cache["k"] = jnp.roll(ks[:, -size:], shift, axis=1)
+        cache["v"] = jnp.roll(vs[:, -size:], shift, axis=1)
+        if k_scale is not None:
+            cache["k_scale"] = jnp.roll(k_scale[:, -size:], shift, axis=1)
+            cache["v_scale"] = jnp.roll(v_scale[:, -size:], shift, axis=1)
+        cache["index"] = index + s
+        return cache
+    if window and s == 1:
+        slot = index % size
+        starts = (0, slot, 0, 0)
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], ks, starts)
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vs, starts)
+        if k_scale is not None:
+            cache["k_scale"] = jax.lax.dynamic_update_slice(
+                cache["k_scale"], k_scale, starts)
+            cache["v_scale"] = jax.lax.dynamic_update_slice(
+                cache["v_scale"], v_scale, starts)
+    else:
+        starts = (0, index, 0, 0)
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], ks, starts)
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vs, starts)
+        if k_scale is not None:
+            cache["k_scale"] = jax.lax.dynamic_update_slice(
+                cache["k_scale"], k_scale, starts)
+            cache["v_scale"] = jax.lax.dynamic_update_slice(
+                cache["v_scale"], v_scale, starts)
+    cache["index"] = index + s
+    return cache
+
+
+def gqa_apply(params, cfg, x, positions, *, mode: str = "causal",
+              cache=None, window: Optional[int] = None, kv_x=None):
+    """mode: causal | full (encoder) | cross (kv from kv_x, no cache growth).
+
+    With ``cache`` set: writes new kv at cache["index"], attends over the
+    whole (ring) buffer.  Returns (y, new_cache) — new_cache is None when no
+    cache was passed.
+    """
+    from repro.models.shardlib import shard_attn_qkv
+
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(params["q"], x).reshape(b, s, hq, dh)
+    kv_src = kv_x if kv_x is not None else x
+    k = dense(params["k"], kv_src).reshape(b, kv_src.shape[1], hkv, dh)
+    v = dense(params["v"], kv_src).reshape(b, kv_src.shape[1], hkv, dh)
+
+    if mode != "cross":
+        q = rope(q, positions, cfg.rope_theta)
+        kv_pos = positions if kv_x is None else None
+        k = rope(k, kv_pos, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # cache stores the true (un-repeated) kv heads; the TP strategy
+        # (shard_attn_qkv, possibly repeating kv) applies to the *loaded*
+        # tensors only
+        index = cache["index"]
+        new_cache = _cache_write(cache, k, v, cfg.kv_cache_dtype, window)
+        if window and s > 1:
+            # windowed prefill: attend over the in-flight (full-length) k/v
+            # with the window mask — the ring cache holds a rolled layout
+            # that only the s==1 decode mask understands
+            q, k, v = shard_attn_qkv(cfg, q, k, v)
+            mi = MaskInfo(causal=True, window=window, q_offset=index)
+            y = attend(q, k, v, mask_info=mi)
+        else:
+            k = _maybe_load(new_cache["k"], new_cache.get("k_scale"), x.dtype)
+            v = _maybe_load(new_cache["v"], new_cache.get("v_scale"), x.dtype)
+            q, k, v = shard_attn_qkv(cfg, q, k, v)
+            t = k.shape[1]
+            if window and s == 1:
+                y = attend(q, k, v, _ring_mask(s, t, index))
+            else:
+                # prefill into an empty/partial cache: causal over written
+                mi = MaskInfo(causal=True, q_offset=index,
+                              valid_len=index + s)
+                y = attend(q, k, v, mask_info=mi)
+    else:
+        q, k, v = shard_attn_qkv(cfg, q, k, v)
+        mi = MaskInfo(causal=mode not in ("full", "cross"), window=window)
+        y = attend(q, k, v, mask_info=mi)
+    y = dense(params["o"], y.reshape(b, s, hq * dh))
+    return y, new_cache
+
+
+def make_cross_cache(params, cfg, enc_out):
+    """Precompute cross-attention K/V from encoder output (enc-dec serving).
+
+    Done once per request instead of per decode step — without this the
+    cross K/V recompute would dominate enc-dec decode FLOPs.
+    """
+    b, t, _ = enc_out.shape
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    ck = dense(params["k"], enc_out).reshape(b, t, hkv, dh)
+    cv = dense(params["v"], enc_out).reshape(b, t, hkv, dh)
+    return ck, cv
+
+
+def cross_attend_cached(params, cfg, x, ck, cv):
+    """Cross-attention against precomputed encoder K/V (full visibility)."""
+    b, s, _ = x.shape
+    hq, dh = cfg.n_heads, cfg.head_dim
+    q = dense(params["q"], x).reshape(b, s, hq, dh)
+    y = attend(q, ck, cv, mask_info=MaskInfo(causal=False))
+    return dense(params["o"], y.reshape(b, s, hq * dh))
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2/V3, MiniCPM3)
+# ---------------------------------------------------------------------------
+
+
+def mla_spec(cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    spec = {
+        "kv_down": dense_spec(d, m.kv_lora_rank + m.qk_rope_head_dim,
+                              ("embed", "mla_latent")),
+        "kv_norm": {"scale": P((m.kv_lora_rank,), ("norm",), init="ones")},
+        "k_up": dense_spec(m.kv_lora_rank, h * m.qk_nope_head_dim,
+                           ("mla_latent", "q_heads_x_dim")),
+        "v_up": dense_spec(m.kv_lora_rank, h * m.v_head_dim,
+                           ("mla_latent", "q_heads_x_dim")),
+        "o": dense_spec(h * m.v_head_dim, d, ("q_heads_x_dim", "embed")),
+    }
+    q_dim = h * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+    if m.q_lora_rank:
+        spec["q_down"] = dense_spec(d, m.q_lora_rank, ("embed", "mla_latent"))
+        spec["q_norm"] = {"scale": P((m.q_lora_rank,), ("norm",), init="ones")}
+        spec["q_up"] = dense_spec(m.q_lora_rank, q_dim,
+                                  ("mla_latent", "q_heads_x_dim"))
+    else:
+        spec["q_proj"] = dense_spec(d, q_dim, ("embed", "q_heads_x_dim"))
+    return spec
+
+
+def init_mla_cache(cfg, batch: int, s_max: int, window: Optional[int] = None):
+    m = cfg.mla
+    size = min(s_max, window) if window else s_max
+    return {
+        "ckv": jnp.zeros((batch, size, m.kv_lora_rank),
+                         jnp.dtype(cfg.dtype)),
+        "krope": jnp.zeros((batch, size, m.qk_rope_head_dim),
+                           jnp.dtype(cfg.dtype)),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_apply(params, cfg, x, positions, *, mode: str = "causal",
+              cache=None, window: Optional[int] = None):
+    """MLA: cache holds only the compressed latent (r_kv) + shared rope key —
+    the format's whole point: cache bytes per token = r_kv + Dr ≪ 2·H·Dh."""
+    from repro.models.layers import rmsnorm
+
+    b, s, d = x.shape
+    h, m = cfg.n_heads, cfg.mla
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    if m.q_lora_rank:
+        cq = rmsnorm(params["q_norm"], dense(params["q_down"], x))
+        q = dense(params["q_up"], cq).reshape(b, s, h, dn + dr)
+    else:
+        q = dense(params["q_proj"], x).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    down = dense(params["kv_down"], x)
+    ckv, k_rope = down[..., : m.kv_lora_rank], down[..., m.kv_lora_rank:]
+    ckv = rmsnorm(params["kv_norm"], ckv)
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    index = jnp.zeros((), jnp.int32)
+    if cache is not None:
+        index = cache["index"]
+        new_cache = dict(cache)
+        if window and s == 1:
+            slot = index % cache["ckv"].shape[1]
+            new_cache["ckv"] = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, slot, 0))
+            new_cache["krope"] = jax.lax.dynamic_update_slice(
+                cache["krope"], k_rope.astype(cache["krope"].dtype), (0, slot, 0))
+        else:
+            new_cache["ckv"] = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, index, 0))
+            new_cache["krope"] = jax.lax.dynamic_update_slice(
+                cache["krope"], k_rope.astype(cache["krope"].dtype), (0, index, 0))
+        new_cache["index"] = index + s
+        ckv = new_cache["ckv"].astype(x.dtype)
+        k_rope = new_cache["krope"].astype(x.dtype)
+
+    t = ckv.shape[1]
+    # up-project latent to per-head keys/values (recomputed per step — the
+    # MLA trade; the absorbed-matmul variant is a §Perf hillclimb change)
+    k_nope = dense(params["k_up"], ckv).reshape(b, t, h, dn)
+    v = dense(params["v_up"], ckv).reshape(b, t, h, dv)
+
+    # fold the shared rope key into per-head keys so the shared exact-flash
+    # attend() handles the 32k/500k shapes without materializing S×T scores
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, t, h, dr))],
+        axis=-1)
+    from repro.models.shardlib import shard_attn_qkv
+    q_cat, k_cat, v = shard_attn_qkv(cfg, q_cat, k_cat, v)
+
+    scale = (dn + dr) ** -0.5
+    if cache is not None and window and s == 1:
+        out = attend(q_cat, k_cat, v, _ring_mask(s, t, index), scale=scale)
+    elif cache is not None:
+        mi = MaskInfo(causal=True, window=window, q_offset=index,
+                      valid_len=index + s)
+        out = attend(q_cat, k_cat, v, mask_info=mi, scale=scale)
+    else:
+        out = attend(q_cat, k_cat, v,
+                     mask_info=MaskInfo(causal=True, window=window),
+                     scale=scale)
+    y = dense(params["o"], out.reshape(b, s, h * dv))
+    return y, new_cache

@@ -1,0 +1,185 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU), plain, squared-ReLU — and
+``SparseLinear``: the paper's RgCSR format as a first-class weight store.
+
+``SparseLinear`` keeps a magnitude-pruned weight matrix in RgCSR layout
+*inside the parameter tree* (values are trainable; the sparsity structure is
+fixed at init, standard static-sparse training).  On TPU the matmul runs
+through the Pallas ``rgcsr_spmm`` kernel; under SPMD dry-runs and on CPU it
+uses the jnp oracle (``sparsity.impl='ref'``), which XLA shards like any
+segment-sum.  This is the LM-framework integration of the paper's technique
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import P, dense, dense_spec
+
+__all__ = ["ffn_spec", "ffn_apply", "gated_ffn_apply", "ffn_apply_stacked",
+           "sparse_linear_spec", "sparse_linear_init_mask",
+           "sparse_linear_apply"]
+
+
+def _activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":                      # Nemotron-4 squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def ffn_spec(cfg, d_ff: int | None = None):
+    d = cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    spec = {
+        "w_in": dense_spec(d, d_ff, ("embed", "mlp")),
+    }
+    if cfg.sparsity.enabled and "ffn" in cfg.sparsity.targets:
+        # the paper's technique in the LM: the FFN down-projection weight
+        # (d_model × d_ff) is stored in RgCSR and trained with a frozen
+        # sparsity structure (DESIGN.md §4)
+        spec["w_out"] = sparse_linear_spec(cfg, d_ff, d)
+    else:
+        spec["w_out"] = dense_spec(d_ff, d, ("mlp", "embed"))
+    if cfg.gated_ffn:
+        spec["w_gate"] = dense_spec(d, d_ff, ("embed", "mlp"))
+    return spec
+
+
+def ffn_apply(params, cfg, x):
+    act = _activation(cfg.activation)
+    h = dense(params["w_in"], x)
+    if "w_gate" in params:
+        h = act(dense(params["w_gate"], x)) * h
+    else:
+        h = act(h)
+    if "values2d" in params["w_out"]:
+        return sparse_linear_apply(params["w_out"], cfg, h, cfg.d_model)
+    return dense(params["w_out"], h)
+
+
+def gated_ffn_apply(params, cfg, x):
+    """Shared-expert FFN on flat tokens (dict with w_in/w_gate/w_out)."""
+    act = _activation(cfg.activation)
+    h = act(dense(params["w_gate"], x)) * dense(params["w_in"], x)
+    return dense(params["w_out"], h)
+
+
+def ffn_apply_stacked(params, cfg, x):
+    """Expert-stacked FFN: params (E, ..., ...), x (E, C, d) -> (E, C, d)."""
+    act = _activation(cfg.activation)
+    h_in = jnp.einsum("ecd,edf->ecf", x, params["w_in"].astype(x.dtype))
+    h_gate = jnp.einsum("ecd,edf->ecf", x, params["w_gate"].astype(x.dtype))
+    h = act(h_gate) * h_in
+    return jnp.einsum("ecf,efd->ecd", h, params["w_out"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# SparseLinear — RgCSR weights (the paper's technique in the LM)
+# ---------------------------------------------------------------------------
+
+
+def sparse_linear_spec(cfg, d_in: int, d_out: int):
+    """Parameter spec for an RgCSR-stored weight matrix W ∈ (d_out, d_in).
+
+    The stored layout is the kernel plan's slot-major 2-D tile:
+    ``values2d (S, G)`` trainable, ``columns2d``/chunk tables frozen int32
+    buffers (their inits build the structure deterministically from the
+    PRNG key, so ``init_from_spec`` alone yields a valid sparse layer —
+    including under layer-stacking, where each layer draws its own mask).
+    S depends only on the *uniform-density* structured mask (every group
+    gets K = density·d_in rounded to sublanes): static shapes, identical
+    across hosts (an SPMD-init requirement).
+    """
+    g = cfg.sparsity.group_size
+    n_groups = -(-d_out // g)
+    k = max(8, int(round(cfg.sparsity.density * d_in)))
+    k = -(-k // 8) * 8
+    s_total = n_groups * k
+    n_chunks = s_total // 8
+
+    def init_columns(key, shape, dtype):
+        # shape = (*lead, S, G): random sorted column sets per (group, lane)
+        lead = shape[:-2]
+        scores = jax.random.uniform(
+            key, (*lead, n_groups, g, d_in))
+        cols = jnp.argsort(scores, axis=-1)[..., :k]          # (…,ng,G,k)
+        cols = jnp.sort(cols, axis=-1).astype(jnp.int32)
+        cols = jnp.swapaxes(cols, -1, -2)                     # slot-major
+        return cols.reshape(*lead, s_total, g)
+
+    def init_chunk_group(key, shape, dtype):
+        base = jnp.repeat(jnp.arange(n_groups, dtype=jnp.int32), k // 8)
+        return jnp.broadcast_to(base, shape)
+
+    def init_chunk_first(key, shape, dtype):
+        base = jnp.zeros((n_chunks,), jnp.int32).at[
+            jnp.arange(n_groups) * (k // 8)].set(1)
+        return jnp.broadcast_to(base, shape)
+
+    return {
+        "values2d": P((s_total, g), (None, "sparse_rows"), init="fan_in",
+                      scale=(d_in / max(1, k)) ** 0.5),  # variance-corrected
+        "columns2d": P((s_total, g), (None, "sparse_rows"),
+                       init=init_columns, dtype=jnp.int32),
+        "chunk_group": P((n_chunks,), (None,), init=init_chunk_group,
+                         dtype=jnp.int32),
+        "chunk_first": P((n_chunks,), (None,), init=init_chunk_first,
+                         dtype=jnp.int32),
+    }
+
+
+def sparse_linear_init_mask(key, cfg, d_in: int, d_out: int):
+    """Build the frozen structure buffers (host-side numpy, deterministic)."""
+    g = cfg.sparsity.group_size
+    n_groups = -(-d_out // g)
+    k = max(8, int(round(cfg.sparsity.density * d_in)))
+    k = -(-k // 8) * 8
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2 ** 31 - 1)))
+    cols = np.stack([
+        np.sort(rng.choice(d_in, size=k, replace=False)).astype(np.int32)
+        for _ in range(n_groups * g)
+    ])                                                    # (n_groups*g, k)
+    cols = cols.reshape(n_groups, g, k).transpose(0, 2, 1)  # slot-major
+    columns2d = cols.reshape(n_groups * k, g)
+    chunks_per_group = k // 8
+    chunk_group = np.repeat(np.arange(n_groups, dtype=np.int32), chunks_per_group)
+    chunk_first = np.zeros(len(chunk_group), np.int32)
+    chunk_first[np.arange(n_groups) * chunks_per_group] = 1
+    return (jnp.asarray(columns2d), jnp.asarray(chunk_group),
+            jnp.asarray(chunk_first))
+
+
+def sparse_linear_apply(params, cfg, x, d_out: int):
+    """y = x @ Wᵀ with W in RgCSR. x: (..., d_in) -> (..., d_out)."""
+    g = cfg.sparsity.group_size
+    lead = x.shape[:-1]
+    d_in = x.shape[-1]
+    xt = x.reshape(-1, d_in).T                            # (d_in, T)
+    n_groups = -(-d_out // g)
+    if cfg.sparsity.impl_is_kernel():
+        from repro.kernels.ops import RgCSRPlan, rgcsr_spmm
+        plan = RgCSRPlan(
+            values2d=params["values2d"].astype(x.dtype),
+            columns2d=params["columns2d"],
+            chunk_group=params["chunk_group"],
+            chunk_first=params["chunk_first"],
+            n_rows=d_out, n_cols=d_in, n_groups=int(n_groups), group_size=g)
+        y = rgcsr_spmm(plan, xt)                          # (d_out, T)
+    else:
+        # jnp oracle: segment-sum over slot-major storage (SPMD-shardable)
+        s_total = params["values2d"].shape[0]
+        row_in_group = jnp.tile(jnp.arange(g), s_total)
+        group_of_slotrow = jnp.repeat(params["chunk_group"], 8)
+        rows = jnp.repeat(group_of_slotrow, g) * g + row_in_group
+        vals = params["values2d"].astype(x.dtype).reshape(-1)
+        cols = params["columns2d"].reshape(-1)
+        gathered = jnp.take(xt, cols, axis=0)             # (S*G, T)
+        y = jax.ops.segment_sum(vals[:, None] * gathered, rows,
+                                num_segments=int(n_groups) * g)
+    return y[:d_out].T.reshape(*lead, d_out)

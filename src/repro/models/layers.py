@@ -1,0 +1,144 @@
+"""Primitive layers: norms, dense projections, embeddings, RoPE.
+
+Functional style: ``*_spec(cfg, ...)`` returns a :class:`repro.models.spec.P`
+tree; ``*_apply(params, x, ...)`` consumes the matching param tree.  Logical
+axis names used here (resolved to mesh axes by the partitioner):
+
+=============  =====================================================
+``vocab``      embedding rows — tensor-parallel over "model"
+``embed``      d_model — FSDP-sharded over "data" for large params
+``q_heads``    query heads — "model"
+``kv_heads``   kv heads — "model" when divisible, else replicated
+``head_dim``   per-head dim — never sharded
+``mlp``        FFN hidden — "model"
+``experts``    MoE expert dim — "model" (EP)
+``norm``       norm scales — replicated
+``ssm_*``      state-space dims
+=============  =====================================================
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import P
+
+__all__ = [
+    "rmsnorm_spec", "rmsnorm", "layernorm_spec", "layernorm",
+    "dense_spec", "dense", "embed_spec", "embed_lookup", "embed_logits",
+    "rope", "rope_positions", "make_causal_mask", "make_window_mask",
+]
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int):
+    return {"scale": P((d,), ("norm",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_spec(d: int):
+    return {"scale": P((d,), ("norm",), init="ones"),
+            "bias": P((d,), ("norm",), init="zeros")}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+
+def dense_spec(d_in: int, d_out: int, axes=("embed", "mlp"), bias: bool = False,
+               scale: float = 1.0):
+    spec = {"kernel": P((d_in, d_out), axes, init="fan_in", scale=scale)}
+    if bias:
+        spec["bias"] = P((d_out,), (axes[-1],), init="zeros")
+    return spec
+
+
+def dense(params, x):
+    y = jnp.einsum("...i,io->...o", x, params["kernel"].astype(x.dtype))
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(vocab: int, d: int, scale: float = 1.0):
+    return {"table": P((vocab, d), ("vocab", "embed"), init="embed",
+                       scale=scale)}
+
+
+def embed_lookup(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def embed_logits(params, x):
+    """Tied output head: logits = x @ tableᵀ."""
+    return jnp.einsum("...d,vd->...v", x, params["table"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_positions(batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq))
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """x: (B, S, H, D) with D even; positions: (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (jnp.log(theta) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+
+def make_causal_mask(q_len: int, kv_len: int, q_offset=0):
+    """bool (q_len, kv_len): True = attend."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    kv_pos = jnp.arange(kv_len)[None, :]
+    return kv_pos <= q_pos
+
+
+def make_window_mask(q_len: int, kv_len: int, window: int, q_offset=0):
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    kv_pos = jnp.arange(kv_len)[None, :]
+    return (kv_pos <= q_pos) & (kv_pos > q_pos - window)

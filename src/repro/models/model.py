@@ -1,0 +1,301 @@
+"""LanguageModel: the public model API over the layer stack.
+
+Families (``cfg.family``):
+* decoder-only text (dense/moe/ssm/hybrid): ``batch = {tokens, labels}``
+* ``vlm``  : + ``patch_embeds (B, frontend_tokens, d_frontend)`` — the ViT
+             frontend is a stub per the assignment; patches are projected and
+             prepended, loss masked to text positions.
+* ``audio``: encoder-decoder — ``batch = {frames (B,S,d_frontend), tokens,
+             labels}``; frames are the (stubbed) speech-frontend output.
+
+API:
+* ``spec()/init()/abstract_params()``  — parameter trees (real or shaped).
+* ``forward(params, batch)``           — logits for a full sequence.
+* ``loss(params, batch)``              — CE (+ z-loss + MoE aux + MTP).
+* ``prefill(params, batch, s_max)``    — logits + filled caches.
+* ``decode_step(params, cache, tokens)`` — one token, the `serve_step` the
+  decode/long dry-run cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import transformer as tfm
+from repro.models.layers import dense, dense_spec, embed_lookup, embed_logits, \
+    embed_spec, rmsnorm, rmsnorm_spec, rope_positions
+from repro.models.spec import abstract_from_spec, axes_from_spec, \
+    count_params, init_from_spec
+
+__all__ = ["LanguageModel"]
+
+_MTP_WEIGHT = 0.3
+_LB_COEF = 0.01
+_Z_COEF = 1e-4
+
+
+class LanguageModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.compute_dtype = jnp.dtype(cfg.dtype)
+        self.param_dtype = jnp.dtype(cfg.param_dtype)
+
+    # ------------------------------------------------------------------ spec
+    def spec(self):
+        cfg = self.cfg
+        spec: Dict[str, Any] = {
+            # 1/sqrt(d) embedding init keeps tied-head logits O(1) at step 0.
+            # Rows are padded to cfg.padded_vocab so the vocab dim shards
+            # evenly (logits past cfg.vocab are masked in _logits).
+            "embed": embed_spec(cfg.padded_vocab, cfg.d_model,
+                                scale=cfg.d_model ** -0.5),
+            "final_norm": rmsnorm_spec(cfg.d_model),
+            "stack": tfm.stack_spec(cfg),
+        }
+        if not cfg.tie_embeddings:
+            spec["lm_head"] = dense_spec(cfg.d_model, cfg.padded_vocab,
+                                         ("embed", "vocab"))
+        if cfg.frontend == "vision":
+            spec["frontend_proj"] = dense_spec(cfg.d_frontend, cfg.d_model,
+                                               ("frontend", "embed"))
+        if cfg.enc_dec:
+            enc_cfg = dataclasses.replace(
+                cfg, layer_pattern=("enc_attn",), prefix_pattern=(),
+                n_layers=cfg.n_enc_layers)
+            spec["encoder"] = tfm.stack_spec(enc_cfg)
+            spec["enc_norm"] = rmsnorm_spec(cfg.d_model)
+            spec["frontend_proj"] = dense_spec(cfg.d_frontend, cfg.d_model,
+                                               ("frontend", "embed"))
+        if cfg.mtp_depth:
+            spec["mtp"] = {
+                "proj": dense_spec(2 * cfg.d_model, cfg.d_model,
+                                   ("embed", "embed2")),
+                "norm_h": rmsnorm_spec(cfg.d_model),
+                "norm_e": rmsnorm_spec(cfg.d_model),
+                "block": tfm.block_spec(cfg, "attn"),
+            }
+        return spec
+
+    def init(self, key):
+        return init_from_spec(key, self.spec(), dtype=self.param_dtype)
+
+    def abstract_params(self):
+        return abstract_from_spec(self.spec(), dtype=self.param_dtype)
+
+    def param_axes(self):
+        return axes_from_spec(self.spec())
+
+    def n_params(self) -> int:
+        return count_params(self.spec())
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        cfg = self.cfg
+        if not cfg.moe.n_experts:
+            return self.n_params()
+        total = self.n_params()
+        m = cfg.moe
+        per_expert = 3 * cfg.d_model * m.d_ff_expert
+        n_moe_layers = sum(k == "moe" for k in cfg.layer_pattern) \
+            * cfg.pattern_repeats \
+            + sum(k == "moe" for k in cfg.prefix_pattern)
+        inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+        return total - inactive
+
+    # ------------------------------------------------------------- embedding
+    def _embed_sequence(self, params, batch):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], batch["tokens"]
+                         ).astype(self.compute_dtype)
+        if cfg.frontend == "vision":
+            patches = dense(params["frontend_proj"],
+                            batch["patch_embeds"].astype(self.compute_dtype))
+            x = jnp.concatenate([patches, x], axis=1)
+        return x
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        enc_cfg = dataclasses.replace(
+            cfg, layer_pattern=("enc_attn",), prefix_pattern=(),
+            n_layers=cfg.n_enc_layers)
+        h = dense(params["frontend_proj"], frames.astype(self.compute_dtype))
+        pos = rope_positions(h.shape[0], h.shape[1])
+        h, _, _ = tfm.stack_apply(params["encoder"], enc_cfg, h, pos,
+                                  mode="train", shape_kind="train")
+        return rmsnorm(params["enc_norm"], h)
+
+    def _logits(self, params, h):
+        if self.cfg.tie_embeddings:
+            logits = embed_logits(params["embed"], h)
+        else:
+            logits = dense(params["lm_head"], h)
+        if self.cfg.padded_vocab != self.cfg.vocab:
+            # mask padding rows out of the softmax (iota-compare: fuses and
+            # stays sharded under GSPMD, unlike a slice)
+            vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                                  logits.ndim - 1)
+            logits = jnp.where(vocab_iota < self.cfg.vocab, logits,
+                               jnp.asarray(-1e30, logits.dtype))
+        return logits
+
+    # ---------------------------------------------------------------- forward
+    def forward(self, params, batch, *, shape_kind: str = "train"):
+        cfg = self.cfg
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = self._encode(params, batch["frames"])
+        x = self._embed_sequence(params, batch)
+        pos = rope_positions(x.shape[0], x.shape[1])
+        x, _, aux = tfm.stack_apply(params["stack"], cfg, x, pos,
+                                    mode="train", shape_kind=shape_kind,
+                                    enc_out=enc_out)
+        h = rmsnorm(params["final_norm"], x)
+        return self._logits(params, h), h, aux
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch, *, shape_kind: str = "train"):
+        cfg = self.cfg
+        logits, h, aux = self.forward(params, batch, shape_kind=shape_kind)
+        labels = batch["labels"]
+        if cfg.frontend == "vision":
+            # frontend positions carry no labels
+            pad = -jnp.ones((labels.shape[0], cfg.frontend_tokens), labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        loss = _masked_ce(logits, labels)
+        metrics = {"ce": loss}
+        if cfg.moe.n_experts:
+            loss = loss + _LB_COEF * aux["load_balance"] \
+                + _Z_COEF * aux["router_z"]
+            metrics["load_balance"] = aux["load_balance"]
+        if cfg.mtp_depth:
+            mtp_loss = self._mtp_loss(params, h, batch)
+            loss = loss + _MTP_WEIGHT * mtp_loss
+            metrics["mtp"] = mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def _mtp_loss(self, params, h, batch):
+        """DeepSeek-V3 multi-token prediction (depth 1): predict t+2 from
+        [norm(h_t); norm(emb(tok_{t+1}))] through one extra block."""
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        if cfg.frontend == "vision":
+            return jnp.zeros((), jnp.float32)
+        emb_next = embed_lookup(params["embed"], tokens[:, 1:]
+                                ).astype(self.compute_dtype)
+        h_cur = h[:, :-1, :]
+        merged = dense(params["mtp"]["proj"], jnp.concatenate(
+            [rmsnorm(params["mtp"]["norm_h"], h_cur),
+             rmsnorm(params["mtp"]["norm_e"], emb_next)], axis=-1))
+        pos = rope_positions(merged.shape[0], merged.shape[1])
+        out, _, _ = tfm.block_apply(params["mtp"]["block"], cfg, "attn",
+                                    merged, pos, mode="train")
+        logits = self._logits(params, rmsnorm(params["final_norm"], out))
+        # target at merged position t is labels[t+1] (the t+2 token)
+        return _masked_ce(logits, labels[:, 1:])
+
+    # -------------------------------------------------------------- serving
+    def init_cache(self, batch_size: int, s_max: int, *,
+                   shape_kind: str = "decode", enc_len: int = 0):
+        return tfm.stack_cache_spec(self.cfg, batch_size, s_max, shape_kind,
+                                    enc_len)
+
+    def prefill(self, params, batch, s_max: int, *,
+                shape_kind: str = "prefill"):
+        """Run the prompt through the stack, filling caches."""
+        cfg = self.cfg
+        enc_out = None
+        enc_len = 0
+        if cfg.enc_dec:
+            enc_out = self._encode(params, batch["frames"])
+            enc_len = enc_out.shape[1]
+        x = self._embed_sequence(params, batch)
+        caches = self.init_cache(x.shape[0], s_max, shape_kind=shape_kind,
+                                 enc_len=enc_len)
+        if cfg.enc_dec:
+            caches = self._fill_cross_caches(params, caches, enc_out)
+        pos = rope_positions(x.shape[0], x.shape[1])
+        x, caches, _ = tfm.stack_apply(params["stack"], cfg, x, pos,
+                                       mode="prefill", shape_kind=shape_kind,
+                                       caches=caches, enc_out=enc_out)
+        h = rmsnorm(params["final_norm"], x)
+        return self._logits(params, h[:, -1:, :]), caches
+
+    def _fill_cross_caches(self, params, caches, enc_out):
+        cfg = self.cfg
+
+        def fill(name, block_params, cache, stacked):
+            if "ck" not in cache:
+                return cache
+            if stacked:
+                def one(p):
+                    ck, cv = attn_mod.make_cross_cache(p["cross"], cfg, enc_out)
+                    return ck, cv
+                ck, cv = jax.vmap(one)(block_params)
+            else:
+                ck, cv = attn_mod.make_cross_cache(block_params["cross"],
+                                                   cfg, enc_out)
+            return {"self": cache["self"], "ck": ck, "cv": cv}
+
+        new = {"prefix": {}, "body": {}}
+        for name, cache in caches["prefix"].items():
+            new["prefix"][name] = fill(
+                name, params["stack"]["prefix"][name], cache, False)
+        for name, cache in caches["body"].items():
+            new["body"][name] = fill(
+                name, params["stack"]["body"][name], cache, True)
+        return new
+
+    def decode_step(self, params, caches, tokens, *,
+                    shape_kind: str = "decode"):
+        """One-token serve step. tokens: (B, 1). Returns (logits, caches)."""
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens).astype(self.compute_dtype)
+        index = _cache_index(caches)
+        pos = jnp.broadcast_to(index[None, None], tokens.shape).astype(jnp.int32)
+        x, caches, _ = tfm.stack_apply(params["stack"], cfg, x, pos,
+                                       mode="decode", shape_kind=shape_kind,
+                                       caches=caches)
+        h = rmsnorm(params["final_norm"], x)
+        return self._logits(params, h), caches
+
+
+def _cache_index(caches):
+    """First available `index` leaf (all layers advance in lockstep)."""
+    for tree in (caches["prefix"], caches["body"]):
+        for cache in tree.values():
+            if isinstance(cache, dict):
+                if "index" in cache:
+                    idx = cache["index"]
+                    return idx[0] if idx.ndim else idx
+                if "self" in cache and "index" in cache["self"]:
+                    idx = cache["self"]["index"]
+                    return idx[0] if idx.ndim else idx
+    return jnp.zeros((), jnp.int32)
+
+
+def _masked_ce(logits, labels):
+    """Cross-entropy over positions with label >= 0, fp32 accumulation.
+
+    Predicts labels[t] from position t (labels are pre-shifted by the data
+    pipeline: labels[t] = tokens[t+1]).
+
+    The gold logit is selected with an iota-compare reduction rather than
+    take_along_axis: under GSPMD with the vocab dim sharded over `model`,
+    the compare+select fuses into the reduce and stays sharded, whereas the
+    gather would all-gather the (B,S,V) logits (GBs at 128k vocab)."""
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == safe[..., None], logits32, 0.0),
+                   axis=-1)
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

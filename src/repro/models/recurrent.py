@@ -1,0 +1,331 @@
+"""Recurrent sequence mixers: Mamba-2 (SSD) and RG-LRU (Griffin/RecurrentGemma).
+
+Both are the *sub-quadratic* archs of the assignment: decode state is O(1) in
+sequence length, which is what makes the ``long_500k`` cell natively runnable
+(DESIGN.md §7).
+
+Mamba-2 uses the SSD (state-space duality) chunked algorithm [arXiv:2405.21060]:
+intra-chunk attention-like matmuls + an inter-chunk state scan — matmul-heavy
+and therefore MXU-friendly, unlike the elementwise selective scan of Mamba-1.
+
+RG-LRU follows Griffin [arXiv:2402.19427]: gated linear recurrence
+``h_t = a_t h_{t-1} + sqrt(1-a_t²)(i_t ⊙ x_t)`` with input-dependent
+``a_t = exp(-c·softplus(Λ)·r_t)``, computed with an associative scan over
+time (log-space products are unnecessary since a_t ∈ (0,1) is well-behaved).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import P, dense, dense_spec, rmsnorm, rmsnorm_spec
+
+__all__ = [
+    "mamba2_spec", "mamba2_apply", "init_mamba2_state", "mamba2_decode",
+    "rglru_spec", "rglru_apply", "init_rglru_state", "rglru_decode",
+]
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (shared by both mixers)
+# ---------------------------------------------------------------------------
+
+
+def _conv_spec(channels: int, width: int):
+    return {"w": P((width, channels), (None, "conv_ch"), init="fan_in"),
+            "b": P((channels,), ("conv_ch",), init="zeros")}
+
+
+def _causal_conv(params, x):
+    """x: (B, L, C) depthwise causal conv, width = params['w'].shape[0]."""
+    w = params["w"].astype(x.dtype)       # (W, C)
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(width))
+    return out + params["b"].astype(x.dtype)
+
+
+def _conv_step(params, state, x_t):
+    """state: (B, W-1, C); x_t: (B, C) -> (y_t, new_state)."""
+    w = params["w"].astype(x_t.dtype)
+    hist = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", hist, w) + params["b"].astype(x_t.dtype)
+    return y, hist[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD
+# ---------------------------------------------------------------------------
+
+
+def _mamba_dims(cfg):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm.head_dim
+    d_xbc = d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+    return d_inner, n_heads, d_xbc
+
+
+def mamba2_spec(cfg):
+    d = cfg.d_model
+    d_inner, n_heads, d_xbc = _mamba_dims(cfg)
+    return {
+        "in_proj": dense_spec(d, 2 * d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+                              + n_heads, ("embed", "mlp")),
+        "conv": _conv_spec(d_xbc, cfg.ssm.d_conv),
+        "dt_bias": P((n_heads,), ("ssm_heads",), init="zeros"),
+        # NOTE: init uses s[-1] + broadcast so layer-stacking (leading dims
+        # prepended by the pattern scan) keeps the per-head spacing.
+        "a_log": P((n_heads,), ("ssm_heads",),
+                   init=lambda k, s, dt: jnp.broadcast_to(
+                       jnp.log(jnp.linspace(1.0, 16.0, s[-1])), s).astype(dt)),
+        "d_skip": P((n_heads,), ("ssm_heads",), init="ones"),
+        "out_norm": rmsnorm_spec(d_inner),
+        "out_proj": dense_spec(d_inner, d, ("mlp", "embed")),
+    }
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} x[..., k] (i>=j)."""
+    t = x.shape[-1]
+    x_cum = jnp.cumsum(x, axis=-1)
+    diff = x_cum[..., :, None] - x_cum[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, a, b, c, chunk: int):
+    """SSD forward. x: (B,L,H,P) dt: (B,L,H) a: (H,) b,c: (B,L,G,N).
+
+    Returns y: (B,L,H,P) and final state (B,H,P,N).
+    """
+    bsz, l_orig, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    # pad seq to a chunk multiple: dt=0 padding is exact (decay 1, input 0 —
+    # the state passes through unchanged, so h_last is unaffected)
+    pad = (-l_orig) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    l = l_orig + pad
+    nc = l // chunk
+    rep = h // g
+
+    def reshape_c(t):  # (B, L, ...) -> (B, nc, chunk, ...)
+        return t.reshape(bsz, nc, chunk, *t.shape[2:])
+
+    xc, dtc = reshape_c(x), reshape_c(dt)
+    bc = jnp.repeat(reshape_c(b), rep, axis=3)     # (B,nc,Q,H,N)
+    cc = jnp.repeat(reshape_c(c), rep, axis=3)
+    da = dtc * a[None, None, None, :]              # (B,nc,Q,H) negative
+    da_cs = jnp.cumsum(da, axis=2)                 # within-chunk cumsum
+    da_total = da_cs[:, :, -1, :]                  # (B,nc,H)
+
+    # intra-chunk (quadratic inside the chunk only)
+    lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))        # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc)        # (B,nc,H,Q,Q)
+    y_intra = jnp.einsum("bchqk,bckh,bckhp->bcqhp",
+                         scores * lmat, dtc, xc)
+
+    # per-chunk input states
+    decay_to_end = jnp.exp(da_total[:, :, None, :] - da_cs)  # (B,nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchpn",
+                        bc, decay_to_end, dtc, xc)           # (B,nc,H,P,N)
+
+    # inter-chunk recurrence over nc (sequential scan, tiny: nc steps)
+    def step(h_prev, inputs):
+        st, dtot = inputs
+        h_new = jnp.exp(dtot)[..., None, None] * h_prev + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, p, n), x.dtype)
+    h_last, h_prevs = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4),
+                   da_total.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)               # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                         cc, jnp.exp(da_cs), h_prevs)
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)[:, :l_orig]
+    return y, h_last
+
+
+def mamba2_apply(params, cfg, x, *, return_state: bool = False):
+    """Full-sequence Mamba-2 mixer. x: (B, L, d) -> (B, L, d).
+
+    With ``return_state`` also returns the end-of-sequence recurrent state
+    (conv tail + SSM state) so prefill can hand off to one-token decode.
+    """
+    bsz, l, _ = x.shape
+    d_inner, n_heads, d_xbc = _mamba_dims(cfg)
+    ssm = cfg.ssm
+
+    zxbcdt = dense(params["in_proj"], x)
+    z = zxbcdt[..., :d_inner]
+    xbc_raw = zxbcdt[..., d_inner: d_inner + d_xbc]
+    dt_raw = zxbcdt[..., d_inner + d_xbc:]
+
+    xbc = jax.nn.silu(_causal_conv(params["conv"], xbc_raw))
+    xs = xbc[..., :d_inner].reshape(bsz, l, n_heads, ssm.head_dim)
+    b = xbc[..., d_inner: d_inner + ssm.n_groups * ssm.d_state]
+    c = xbc[..., d_inner + ssm.n_groups * ssm.d_state:]
+    b = b.reshape(bsz, l, ssm.n_groups, ssm.d_state)
+    c = c.reshape(bsz, l, ssm.n_groups, ssm.d_state)
+    # shard SSD heads over TP (48 % 16 == 0 for mamba2-780m); without this
+    # GSPMD replicates the whole chunked-scan compute on every model shard
+    from repro.models.shardlib import constrain
+    if n_heads % 8 == 0:
+        xs = constrain(cfg, xs, "batch", None, "model", None)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    y, h_last = _ssd_chunked(xs.astype(jnp.float32), dt, a,
+                             b.astype(jnp.float32), c.astype(jnp.float32),
+                             ssm.chunk)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xs.astype(jnp.float32)
+    y = y.reshape(bsz, l, d_inner).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z))
+    out = dense(params["out_proj"], y)
+    if return_state:
+        conv_tail = xbc_raw[:, -(ssm.d_conv - 1):, :].astype(
+            jnp.dtype(cfg.dtype))
+        return out, {"conv": conv_tail, "ssm": h_last}
+    return out
+
+
+def init_mamba2_state(cfg, batch: int):
+    d_inner, n_heads, d_xbc = _mamba_dims(cfg)
+    ssm = cfg.ssm
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, d_xbc), jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((batch, n_heads, ssm.head_dim, ssm.d_state),
+                         jnp.float32),
+    }
+
+
+def mamba2_decode(params, cfg, state, x_t):
+    """One-token step. x_t: (B, d). Returns (y_t, new_state) — O(1) in seq."""
+    bsz = x_t.shape[0]
+    d_inner, n_heads, d_xbc = _mamba_dims(cfg)
+    ssm = cfg.ssm
+
+    zxbcdt = dense(params["in_proj"], x_t)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: d_inner + d_xbc]
+    dt_raw = zxbcdt[..., d_inner + d_xbc:]
+
+    xbc, conv_state = _conv_step(params["conv"], state["conv"], xbc)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_inner].reshape(bsz, n_heads, ssm.head_dim)
+    b = xbc[..., d_inner: d_inner + ssm.n_groups * ssm.d_state]
+    c = xbc[..., d_inner + ssm.n_groups * ssm.d_state:]
+    rep = n_heads // ssm.n_groups
+    b = jnp.repeat(b.reshape(bsz, ssm.n_groups, ssm.d_state), rep, axis=1)
+    c = jnp.repeat(c.reshape(bsz, ssm.n_groups, ssm.d_state), rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)                                           # (B,H)
+
+    h = state["ssm"]
+    h = da[..., None, None] * h + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, b.astype(jnp.float32), xs.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", c.astype(jnp.float32), h)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] \
+        * xs.astype(jnp.float32)
+    y = y.reshape(bsz, d_inner).astype(x_t.dtype)
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z))
+    return dense(params["out_proj"], y), {"conv": conv_state, "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru_spec(cfg):
+    d = cfg.d_model
+    d_rnn = d  # RecurrentGemma: lru width == d_model
+    return {
+        "gate_proj": dense_spec(d, d_rnn, ("embed", "mlp")),
+        "x_proj": dense_spec(d, d_rnn, ("embed", "mlp")),
+        "conv": _conv_spec(d_rnn, 4),
+        "rg_w": dense_spec(d_rnn, d_rnn, ("mlp", "mlp2")),   # recurrence gate
+        "in_w": dense_spec(d_rnn, d_rnn, ("mlp", "mlp2")),   # input gate
+        # Griffin init: a ∈ [0.9, 0.999] at r=1 → Λ = softplus⁻¹(-log a / c)
+        # (uses s[-1] + broadcast: layer-stacking-safe, see a_log above)
+        "lam": P((d_rnn,), ("mlp",),
+                 init=lambda k, s, dt: jnp.broadcast_to(jnp.log(jnp.expm1(
+                     -jnp.log(jnp.linspace(0.9, 0.999, s[-1])) / _RGLRU_C
+                 )), s).astype(dt)),
+        "out_proj": dense_spec(d_rnn, d, ("mlp", "embed")),
+    }
+
+
+def _rglru_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t over axis 1, associative scan (log-depth)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_apply(params, cfg, x, *, return_state: bool = False):
+    """Griffin recurrent block, full sequence. x: (B, L, d)."""
+    gate = jax.nn.gelu(dense(params["gate_proj"], x))
+    u_raw = dense(params["x_proj"], x)
+    u = _causal_conv(params["conv"], u_raw)
+
+    r = jax.nn.sigmoid(dense(params["rg_w"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(params["in_w"], u).astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6)) * (
+        i * u.astype(jnp.float32))
+    h = _rglru_scan(a, gated_in)
+    y = (h.astype(x.dtype) * gate)
+    out = dense(params["out_proj"], y)
+    if return_state:
+        state = {"conv": u_raw[:, -3:, :].astype(jnp.dtype(cfg.dtype)),
+                 "h": h[:, -1, :]}
+        return out, state
+    return out
+
+
+def init_rglru_state(cfg, batch: int):
+    d_rnn = cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, 3, d_rnn), jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+    }
+
+
+def rglru_decode(params, cfg, state, x_t):
+    gate = jax.nn.gelu(dense(params["gate_proj"], x_t))
+    u = dense(params["x_proj"], x_t)
+    u, conv_state = _conv_step(params["conv"], state["conv"], u)
+
+    r = jax.nn.sigmoid(dense(params["rg_w"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(params["in_w"], u).astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    h = a * state["h"] + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6)) * (
+        i * u.astype(jnp.float32))
+    y = (h.astype(x_t.dtype) * gate)
+    return dense(params["out_proj"], y), {"conv": conv_state, "h": h}

@@ -1,0 +1,71 @@
+"""Activation-sharding constraints (GSPMD hints), resolved per cell.
+
+Parameter sharding alone lets GSPMD *replicate* big intermediate einsums
+when a dim doesn't divide the mesh axis — e.g. 8 kv-heads on 16-way TP
+replicates the whole attention score computation on every model shard
+(measured: ~4× per-device FLOPs on granite-3-2b train before this layer —
+EXPERIMENTS.md §Perf).  The launcher resolves a strategy per (arch × mesh):
+
+* ``heads``  — shard the kv-head dim of q/k/v (Hkv % model == 0),
+* ``repeat`` — materialize repeated kv to Hq heads and shard those
+               (Hq % model == 0; costs kv bytes, saves 16× compute),
+* ``seq``    — context-parallel: shard the *query sequence* dim over
+               `model` (always divisible; kv replicated) — the fallback for
+               40-head models on 16-way TP,
+* ``none``   — leave it to GSPMD (smoke tests / single device).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec
+
+__all__ = ["constrain", "batch_axes", "shard_attn_qkv"]
+
+
+def batch_axes(cfg):
+    return tuple(cfg.mesh_batch_axes) if cfg.shard_batch else None
+
+
+def constrain(cfg, x, *names: Optional[object]):
+    """with_sharding_constraint if cfg.act_shard; names use None / 'model' /
+    'batch' (resolved to the cell's batch axes)."""
+    if not cfg.act_shard or x is None:
+        return x
+    parts = []
+    for n in names:
+        if n == "batch":
+            parts.append(batch_axes(cfg))
+        else:
+            parts.append(n)
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*parts))
+
+
+def shard_attn_qkv(cfg, q, k, v):
+    """Apply the resolved attention TP strategy.  q: (B,S,Hq,D);
+    k/v: (B,T,Hkv,D).  Returns (q, k, v) — possibly with kv repeated."""
+    if not cfg.act_shard or cfg.attn_shard_mode == "none":
+        return q, k, v
+    mode = cfg.attn_shard_mode
+    if mode == "repeat":
+        g = q.shape[2] // k.shape[2]
+        if g > 1:
+            k = jax.numpy.repeat(k, g, axis=2)
+            v = jax.numpy.repeat(v, g, axis=2)
+        q = constrain(cfg, q, "batch", None, "model", None)
+        k = constrain(cfg, k, "batch", None, "model", None)
+        v = constrain(cfg, v, "batch", None, "model", None)
+        return q, k, v
+    if mode == "heads":
+        q = constrain(cfg, q, "batch", None, "model", None)
+        k = constrain(cfg, k, "batch", None, "model", None)
+        v = constrain(cfg, v, "batch", None, "model", None)
+        return q, k, v
+    if mode == "seq":
+        if q.shape[1] > 1:
+            q = constrain(cfg, q, "batch", "model", None, None)
+        k = constrain(cfg, k, "batch", None, None, None)
+        v = constrain(cfg, v, "batch", None, None, None)
+        return q, k, v
+    raise ValueError(f"unknown attn_shard_mode {mode!r}")

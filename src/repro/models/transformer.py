@@ -1,0 +1,277 @@
+"""Block assembly + pattern-scanned layer stacks.
+
+Layer kinds (``cfg.layer_pattern`` / ``cfg.prefix_pattern``):
+
+=============  ==========================================================
+``attn``       global attention (GQA or MLA per ``cfg.attn_kind``) + FFN
+``attn_local`` sliding-window attention + FFN
+``moe``        global attention + MoE FFN
+``ssm``        Mamba-2 SSD mixer (no separate FFN — Mamba-2 stacks are pure)
+``rec``        RG-LRU temporal block + FFN (Griffin residual pattern)
+``enc_attn``   bidirectional attention + FFN (encoder)
+``dec_attn``   causal self-attn + cross-attn + FFN (decoder)
+=============  ==========================================================
+
+**Pattern scan**: the layer list is ``prefix_pattern`` (unrolled) followed by
+``layer_pattern`` repeated R times.  The repeated body is executed with
+``jax.lax.scan`` over stacked parameters, so compiled HLO size is O(period),
+not O(n_layers) — essential for 61-layer × 512-device dry-run compiles on a
+single CPU core, and the production-standard layout for checkpointing.
+Mixed patterns (RecurrentGemma's rec,rec,attn_local) scan over whole periods
+with the period unrolled inside the body.
+
+Remat: ``cfg.remat`` ∈ {none, full, dots} wraps the period body in
+``jax.checkpoint`` with the matching policy — the activation-memory knob the
+§Perf pass tunes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import recurrent as rec_mod
+from repro.models.ffn import ffn_apply, ffn_spec
+from repro.models.layers import rmsnorm, rmsnorm_spec
+from repro.models.moe import moe_apply, moe_spec
+from repro.models.spec import P
+
+__all__ = ["block_spec", "block_apply", "stack_spec", "stack_apply",
+           "init_block_cache", "stack_cache_spec"]
+
+
+def _attn_spec(cfg):
+    return attn_mod.mla_spec(cfg) if cfg.attn_kind == "mla" \
+        else attn_mod.gqa_spec(cfg)
+
+
+def _attn_apply(params, cfg, x, positions, *, mode, cache, window):
+    if cfg.attn_kind == "mla":
+        return attn_mod.mla_apply(params, cfg, x, positions, mode=mode,
+                                  cache=cache, window=window)
+    return attn_mod.gqa_apply(params, cfg, x, positions, mode=mode,
+                              cache=cache, window=window)
+
+
+def block_spec(cfg, kind: str):
+    d = cfg.d_model
+    spec: Dict[str, Any] = {"ln1": rmsnorm_spec(d)}
+    if kind in ("attn", "moe", "attn_local", "enc_attn", "dec_attn"):
+        spec["attn"] = _attn_spec(cfg)
+    elif kind == "ssm":
+        spec["mixer"] = rec_mod.mamba2_spec(cfg)
+        return spec                      # no FFN in Mamba-2 stacks
+    elif kind == "rec":
+        spec["rec"] = rec_mod.rglru_spec(cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if kind == "dec_attn":
+        spec["ln_cross"] = rmsnorm_spec(d)
+        spec["cross"] = attn_mod.gqa_spec(cfg)
+    spec["ln2"] = rmsnorm_spec(d)
+    spec["ffn"] = moe_spec(cfg) if kind == "moe" else ffn_spec(cfg)
+    return spec
+
+
+def _effective_window(cfg, kind: str, shape_kind: str) -> Optional[int]:
+    if kind == "attn_local":
+        return cfg.window
+    if shape_kind == "long_decode" and not cfg.is_subquadratic:
+        # DESIGN.md §7: full-attention archs fall back to a sliding window
+        # at 500k (recorded as `fallback` in every table row).
+        return cfg.fallback_window
+    return None
+
+
+def block_apply(params, cfg, kind: str, x, positions, *, mode: str = "train",
+                shape_kind: str = "train", cache=None, enc_out=None):
+    """One residual block.  Returns (x, new_cache, aux)."""
+    aux = {}
+    h = rmsnorm(params["ln1"], x)
+    window = _effective_window(cfg, kind, shape_kind)
+
+    if kind == "ssm":
+        if cache is not None and mode == "decode":
+            y, new_state = rec_mod.mamba2_decode(params["mixer"], cfg,
+                                                 cache, h[:, 0, :])
+            return x + y[:, None, :], new_state, aux
+        if cache is not None:  # prefill: hand the prompt state to decode
+            y, new_state = rec_mod.mamba2_apply(params["mixer"], cfg, h,
+                                                return_state=True)
+            return x + y, new_state, aux
+        y = rec_mod.mamba2_apply(params["mixer"], cfg, h)
+        return x + y, cache, aux
+
+    if kind == "rec":
+        if cache is not None and mode == "decode":
+            y, new_state = rec_mod.rglru_decode(params["rec"], cfg,
+                                                cache, h[:, 0, :])
+            x = x + y[:, None, :]
+            new_cache = new_state
+        elif cache is not None:  # prefill
+            y, new_cache = rec_mod.rglru_apply(params["rec"], cfg, h,
+                                               return_state=True)
+            x = x + y
+        else:
+            x = x + rec_mod.rglru_apply(params["rec"], cfg, h)
+            new_cache = cache
+    else:
+        attn_mode = "full" if kind == "enc_attn" else "causal"
+        has_cross_cache = isinstance(cache, dict) and "ck" in cache
+        self_cache = cache["self"] if has_cross_cache else cache
+        y, new_self = _attn_apply(params["attn"], cfg, h, positions,
+                                  mode=attn_mode, cache=self_cache,
+                                  window=window)
+        x = x + y
+        new_cache = new_self
+        if kind == "dec_attn":
+            hc = rmsnorm(params["ln_cross"], x)
+            if has_cross_cache:
+                yc = attn_mod.cross_attend_cached(params["cross"], cfg, hc,
+                                                  cache["ck"], cache["cv"])
+                new_cache = {"self": new_self, "ck": cache["ck"],
+                             "cv": cache["cv"]}
+            else:
+                yc, _ = attn_mod.gqa_apply(params["cross"], cfg, hc,
+                                           positions, mode="cross",
+                                           cache=None, kv_x=enc_out)
+            x = x + yc
+
+    h2 = rmsnorm(params["ln2"], x)
+    if kind == "moe":
+        y2, aux = moe_apply(params["ffn"], cfg, h2)
+    else:
+        y2 = ffn_apply(params["ffn"], cfg, h2)
+    return x + y2, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_block_cache(cfg, kind: str, batch: int, s_max: int,
+                     shape_kind: str = "decode", enc_len: int = 0):
+    window = _effective_window(cfg, kind, shape_kind)
+    if kind == "ssm":
+        return rec_mod.init_mamba2_state(cfg, batch)
+    if kind == "rec":
+        return rec_mod.init_rglru_state(cfg, batch)
+    if cfg.attn_kind == "mla":
+        return attn_mod.init_mla_cache(cfg, batch, s_max, window)
+    cache = attn_mod.init_gqa_cache(cfg, batch, s_max, window)
+    if kind == "dec_attn" and enc_len:
+        hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        dt = jnp.dtype(cfg.dtype)
+        cache = {"self": cache,
+                 "ck": jnp.zeros((batch, enc_len, hkv, dh), dt),
+                 "cv": jnp.zeros((batch, enc_len, hkv, dh), dt)}
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# stacked layers (prefix unrolled + body pattern-scanned)
+# ---------------------------------------------------------------------------
+
+
+def _stack_p(p: P, r: int) -> P:
+    return P((r,) + p.shape, ("layers",) + p.axes, init=p.init,
+             scale=p.scale, dtype=p.dtype)
+
+
+def _stack_spec_tree(spec, r: int):
+    return jax.tree_util.tree_map(lambda p: _stack_p(p, r), spec,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def stack_spec(cfg):
+    """Spec for the whole layer stack."""
+    r = cfg.pattern_repeats
+    spec = {
+        "prefix": {f"{i}_{kind}": block_spec(cfg, kind)
+                   for i, kind in enumerate(cfg.prefix_pattern)},
+        "body": {f"{i}_{kind}": _stack_spec_tree(block_spec(cfg, kind), r)
+                 for i, kind in enumerate(cfg.layer_pattern)},
+    }
+    return spec
+
+
+def stack_cache_spec(cfg, batch: int, s_max: int, shape_kind: str,
+                     enc_len: int = 0):
+    """Concrete (zeros) caches for the stack, matching stack_apply's layout."""
+    r = cfg.pattern_repeats
+    prefix = {f"{i}_{kind}": init_block_cache(cfg, kind, batch, s_max,
+                                              shape_kind, enc_len)
+              for i, kind in enumerate(cfg.prefix_pattern)}
+
+    def stacked(kind):
+        one = init_block_cache(cfg, kind, batch, s_max, shape_kind, enc_len)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (r,) + a.shape).copy(), one)
+
+    body = {f"{i}_{kind}": stacked(kind)
+            for i, kind in enumerate(cfg.layer_pattern)}
+    return {"prefix": prefix, "body": body}
+
+
+def _remat_wrap(cfg, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return fn
+
+
+def stack_apply(params, cfg, x, positions, *, mode: str = "train",
+                shape_kind: str = "train", caches=None, enc_out=None):
+    """Run the full stack.  Returns (x, new_caches, aux_sums)."""
+    aux_sum = {"load_balance": jnp.zeros((), jnp.float32),
+               "router_z": jnp.zeros((), jnp.float32)}
+    new_prefix = {}
+    for i, kind in enumerate(cfg.prefix_pattern):
+        name = f"{i}_{kind}"
+        cache = caches["prefix"][name] if caches else None
+        x, new_cache, aux = block_apply(
+            params["prefix"][name], cfg, kind, x, positions, mode=mode,
+            shape_kind=shape_kind, cache=cache, enc_out=enc_out)
+        new_prefix[name] = new_cache
+        for k in aux_sum:
+            if k in aux:
+                aux_sum[k] += aux[k]
+
+    r = cfg.pattern_repeats
+
+    def period_body(carry, xs):
+        x, aux_c = carry
+        body_params, body_caches = xs
+        new_caches_step = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            name = f"{i}_{kind}"
+            cache = body_caches[name] if body_caches is not None else None
+            x, new_cache, aux = block_apply(
+                body_params[name], cfg, kind, x, positions, mode=mode,
+                shape_kind=shape_kind, cache=cache, enc_out=enc_out)
+            new_caches_step[name] = new_cache
+            for k in aux_c:
+                if k in aux:
+                    aux_c = dict(aux_c)
+                    aux_c[k] = aux_c[k] + aux[k]
+        return (x, aux_c), new_caches_step
+
+    body_caches = caches["body"] if caches else None
+    body_fn = _remat_wrap(cfg, period_body)
+    if body_caches is None:
+        (x, aux_sum), _ = jax.lax.scan(
+            lambda c, p: (body_fn(c, (p, None))[0], None),
+            (x, aux_sum), params["body"])
+        new_body = None
+    else:
+        (x, aux_sum), new_body = jax.lax.scan(
+            body_fn, (x, aux_sum), (params["body"], body_caches))
+    new_caches = None
+    if caches is not None:
+        new_caches = {"prefix": new_prefix, "body": new_body}
+    return x, new_caches, aux_sum

@@ -1,0 +1,2 @@
+"""Serving: batched prefill/decode engine with slot-based batching."""
+from repro.serve.engine import Engine, Request, ServeConfig  # noqa: F401

@@ -1,0 +1,172 @@
+"""Serving engine: batched prefill + decode with KV caches.
+
+Production structure on the latency path:
+
+* jit'd ``prefill`` (prompt → logits + caches) and ``decode`` (one token,
+  donated cache) — the same functions the decode dry-run cells lower, so
+  serving perf analysis and the roofline table talk about identical HLO.
+* **Slot-based continuous batching**: a fixed decode batch of ``n_slots``;
+  finished sequences free their slot and the next queued request is
+  prefilled into it (prefill caches are written per-slot via tree indexing).
+  This is the vLLM-style decoupling of prefill/decode, minus paged KV —
+  cache blocks here are dense per-slot (documented trade-off).
+* Sampling: greedy / temperature / top-k, fp32 logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import LanguageModel
+
+__all__ = ["ServeConfig", "Engine", "Request"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 1024
+    n_slots: int = 4                    # decode batch size
+    temperature: float = 0.0            # 0 → greedy
+    top_k: int = 0
+    eos_id: int = -1                    # -1 → run to max_new_tokens
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    tokens: np.ndarray                  # (prompt_len,) int32
+    max_new_tokens: int = 32
+    out: Optional[List[int]] = None
+    done: bool = False
+    latency_s: float = 0.0
+
+
+class Engine:
+    def __init__(self, model_cfg, serve_cfg: ServeConfig, params=None):
+        self.cfg = serve_cfg
+        self.model = LanguageModel(model_cfg)
+        self.params = params if params is not None else \
+            self.model.init(jax.random.PRNGKey(serve_cfg.seed))
+        self._decode = jax.jit(
+            lambda p, c, t: self.model.decode_step(p, c, t),
+            donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, self.cfg.max_seq),
+            static_argnums=())
+        self._key = jax.random.PRNGKey(serve_cfg.seed)
+
+    # ---------------------------------------------------------------- sample
+    def _sample(self, logits) -> jax.Array:
+        logits = logits[:, -1, :].astype(jnp.float32)
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        logits = logits / self.cfg.temperature
+        if self.cfg.top_k:
+            kth = jnp.sort(logits, axis=-1)[:, -self.cfg.top_k][:, None]
+            logits = jnp.where(logits < kth, -1e30, logits)
+        return jax.random.categorical(sub, logits).astype(jnp.int32)
+
+    # ------------------------------------------------------------- one-shot
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32
+                 ) -> np.ndarray:
+        """Batch-synchronous generation (all prompts same length)."""
+        b = prompts.shape[0]
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        logits, caches = self._prefill(self.params, batch)
+        tok = self._sample(logits)[:, None]
+        outs = [tok]
+        for _ in range(max_new_tokens - 1):
+            logits, caches = self._decode(self.params, caches, tok)
+            tok = self._sample(logits)[:, None]
+            outs.append(tok)
+        return np.asarray(jnp.concatenate(outs, axis=1))
+
+    # ------------------------------------------------- continuous batching
+    def serve(self, requests: List[Request]) -> List[Request]:
+        """Slot-based continuous batching over a request queue.
+
+        Simplification vs a full server: slots share one jit'd decode over
+        the fixed batch; prefill is per-request (batch 1) and its cache is
+        spliced into the slot dimension.  Finished slots immediately pull
+        the next request — no head-of-line blocking on long generations.
+        """
+        n = self.cfg.n_slots
+        queue = list(requests)
+        active: List[Optional[Request]] = [None] * n
+        remaining = [0] * n
+        caches = None
+        cur_tok = jnp.zeros((n, 1), jnp.int32)
+        t_start = time.time()
+
+        def _batch_axis(path, leaf):
+            """Slot/batch axis: 1 for body (layer-stacked) leaves, 0 else;
+            None for scalars (e.g. cache['index'])."""
+            if leaf.ndim == 0:
+                return None
+            keys = [str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path]
+            if "body" in keys:
+                return 1 if leaf.ndim > 1 else None
+            return 0
+
+        def splice(caches, slot_cache, slot):
+            flat_one, treedef = jax.tree_util.tree_flatten_with_path(
+                slot_cache)
+            if caches is None:
+                leaves = []
+                for path, leaf in flat_one:
+                    ax = _batch_axis(path, leaf)
+                    leaves.append(jnp.repeat(leaf, n, axis=ax)
+                                  if ax is not None else leaf)
+                return jax.tree_util.tree_unflatten(treedef, leaves)
+            flat_full = treedef.flatten_up_to(caches)
+            leaves = []
+            for (path, one), full in zip(flat_one, flat_full):
+                ax = _batch_axis(path, one)
+                if ax is None:
+                    leaves.append(full)
+                else:
+                    leaves.append(jax.lax.dynamic_update_slice_in_dim(
+                        full, one.astype(full.dtype), slot, axis=ax))
+            return jax.tree_util.tree_unflatten(treedef, leaves)
+
+        while queue or any(a is not None for a in active):
+            # fill free slots
+            for slot in range(n):
+                if active[slot] is None and queue:
+                    req = queue.pop(0)
+                    t0 = time.time()
+                    logits, slot_cache = self._prefill(
+                        self.params,
+                        {"tokens": jnp.asarray(req.tokens[None, :],
+                                               jnp.int32)})
+                    caches = splice(caches, slot_cache, slot)
+                    first = int(self._sample(logits)[0])
+                    req.out = [first]
+                    req.latency_s = time.time() - t0
+                    active[slot] = req
+                    remaining[slot] = req.max_new_tokens - 1
+                    cur_tok = cur_tok.at[slot, 0].set(first)
+            if all(a is None for a in active):
+                break
+            logits, caches = self._decode(self.params, caches, cur_tok)
+            nxt = self._sample(logits)
+            cur_tok = nxt[:, None]
+            for slot in range(n):
+                req = active[slot]
+                if req is None:
+                    continue
+                tok = int(nxt[slot])
+                req.out.append(tok)
+                remaining[slot] -= 1
+                if remaining[slot] <= 0 or tok == self.cfg.eos_id:
+                    req.done = True
+                    req.latency_s = time.time() - t_start
+                    active[slot] = None
+        return requests

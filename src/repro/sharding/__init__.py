@@ -1,0 +1,7 @@
+"""Distribution: logical-axis partitioner (DP/FSDP/TP/EP/SP)."""
+from repro.sharding.partitioner import (  # noqa: F401
+    Partitioner,
+    ShardingRules,
+    SERVE_RULES,
+    TRAIN_RULES,
+)

@@ -1,0 +1,264 @@
+"""Logical-axis partitioner: rules → PartitionSpec/NamedSharding trees.
+
+t5x-style: every parameter dim carries a logical axis name (set in the layer
+specs); a rules table maps names to mesh axes per *shape kind*:
+
+* ``train``   — FSDP + TP: ``embed → data`` (ZeRO-style parameter sharding
+  over the data axis, all-gathered per layer inside the scan), heads/mlp/
+  vocab/experts → ``model``; batch over ``(pod, data)``; gradients reduce
+  over ``(pod, data)`` automatically (GSPMD).
+* ``prefill/decode/long_decode`` — serving: TP only for dense params (no
+  per-layer all-gathers on the latency path), MoE experts spread over the
+  *whole* mesh (``(data, model)`` EP — the deepseek-EP layout), KV caches
+  sharded over batch/heads, or over sequence when batch=1 (``long_500k``).
+
+Every rule is divisibility-checked against the actual dim; on failure the
+next candidate applies (finally: replicated).  That single mechanism absorbs
+the awkward cases (49,155-row vocabs, 8-kv-head caches on 16-way TP, batch=1
+decodes) without per-arch special-casing — and the fused ``*_heads_x_dim``
+parameter layout keeps TP divisible even for 40-head models on 16 devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models.spec import P
+
+__all__ = ["Partitioner", "ShardingRules", "TRAIN_RULES", "SERVE_RULES"]
+
+_is_p = lambda x: isinstance(x, P)
+
+
+def _candidates(x) -> Tuple:
+    """Normalize a rule entry to a tuple of candidates (each axis-spec|None)."""
+    if x is None:
+        return (None,)
+    if isinstance(x, list):
+        return tuple(x) + (None,)
+    return (x, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """params: logical-axis name → mesh-axis | tuple-of-axes | list of
+    candidates (tried in order).  batch: axes for the batch dim."""
+    params: Dict[str, Any]
+    batch: Tuple[str, ...] = ("pod", "data")
+    act_embed: Optional[str] = None       # residual-stream sharding constraint
+
+
+TRAIN_RULES = ShardingRules(params={
+    "vocab": "model",
+    "embed": "data",                      # FSDP
+    "q_heads_x_dim": "model",
+    "kv_heads_x_dim": "model",
+    "mlp": "model",
+    "mlp2": None,
+    "experts": "model",
+    "mla_latent": None,
+    "ssm_heads": None,
+    "conv_ch": "model",
+    "norm": None,
+    "layers": None,
+    "frontend": None,
+    "embed2": None,
+    "sparse_rows": "model",
+})
+
+SERVE_RULES = ShardingRules(params={
+    "vocab": "model",
+    "embed": None,                        # no FSDP on the latency path
+    "q_heads_x_dim": "model",
+    "kv_heads_x_dim": "model",
+    "mlp": "model",
+    "mlp2": None,
+    "experts": [("data", "model"), "model"],   # whole-mesh EP, fallback TP
+    "mla_latent": None,
+    "ssm_heads": None,
+    "conv_ch": "model",
+    "norm": None,
+    "layers": None,
+    "frontend": None,
+    "embed2": None,
+    "sparse_rows": "model",
+})
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([_axis_size(mesh, a) for a in axis]))
+    return mesh.shape[axis]
+
+
+def _filter_axis(mesh: Mesh, axis):
+    """Drop mesh axes that don't exist (e.g. 'pod' on the single-pod mesh)."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        kept = tuple(a for a in axis if a in mesh.axis_names)
+        return kept if kept else None
+    return axis if axis in mesh.axis_names else None
+
+
+class Partitioner:
+    def __init__(self, mesh: Mesh, shape_kind: str = "train",
+                 rules: Optional[ShardingRules] = None):
+        self.mesh = mesh
+        self.shape_kind = shape_kind
+        if rules is None:
+            rules = TRAIN_RULES if shape_kind == "train" else SERVE_RULES
+        self.rules = rules
+
+    # ------------------------------------------------------------ primitives
+    def _dim_spec(self, dim: int, name: Optional[str], used: set):
+        for cand in _candidates(self.rules.params.get(name)):
+            cand = _filter_axis(self.mesh, cand)
+            if cand is None:
+                return None
+            axes = cand if isinstance(cand, tuple) else (cand,)
+            if any(a in used for a in axes):
+                continue
+            if dim % _axis_size(self.mesh, cand) == 0:
+                used.update(axes)
+                return cand
+        return None
+
+    def _leaf_spec(self, p: P) -> PartitionSpec:
+        used: set = set()
+        return PartitionSpec(*[self._dim_spec(d, n, used)
+                               for d, n in zip(p.shape, p.axes)])
+
+    def _named(self, spec: PartitionSpec) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # ---------------------------------------------------------------- params
+    def param_specs(self, spec_tree):
+        return jax.tree_util.tree_map(self._leaf_spec, spec_tree, is_leaf=_is_p)
+
+    def param_shardings(self, spec_tree):
+        return jax.tree_util.tree_map(
+            lambda p: self._named(self._leaf_spec(p)), spec_tree, is_leaf=_is_p)
+
+    # ------------------------------------------------------------- optimizer
+    def opt_shardings(self, spec_tree, opt_name: str,
+                      factored_min_dim: int = 2):
+        """Sharding tree matching optimizer.init(params)' structure."""
+        rep = self._named(PartitionSpec())
+
+        if opt_name == "adamw":
+            import jax.numpy as jnp
+
+            def moment(p: P):
+                # integer buffers (frozen RgCSR structure) carry scalar
+                # placeholder moments — replicated
+                if p.dtype is not None and not jnp.issubdtype(
+                        p.dtype, jnp.floating):
+                    return rep
+                return self._named(self._leaf_spec(p))
+
+            moments = jax.tree_util.tree_map(moment, spec_tree, is_leaf=_is_p)
+            return {"step": rep, "m": moments, "v": moments}
+
+        def stats(p: P):
+            if len(p.shape) >= factored_min_dim:
+                used_r: set = set()
+                vr = PartitionSpec(*[self._dim_spec(d, n, used_r) for d, n in
+                                     zip(p.shape[:-1], p.axes[:-1])])
+                used_c: set = set()
+                vc_dims = list(zip(p.shape[:-2], p.axes[:-2])) \
+                    + [(p.shape[-1], p.axes[-1])]
+                vc = PartitionSpec(*[self._dim_spec(d, n, used_c)
+                                     for d, n in vc_dims])
+                return {"vr": self._named(vr), "vc": self._named(vc)}
+            return {"v": rep}
+
+        return {"step": rep,
+                "stats": jax.tree_util.tree_map(stats, spec_tree, is_leaf=_is_p)}
+
+    # ----------------------------------------------------------------- batch
+    def _batch_dim(self, b: int):
+        axes = _filter_axis(self.mesh, tuple(self.rules.batch))
+        if axes and b % _axis_size(self.mesh, axes) == 0:
+            return axes
+        return None
+
+    def batch_shardings(self, batch_tree):
+        def leaf(x):
+            b = x.shape[0] if getattr(x, "ndim", 0) else 1
+            spec = [self._batch_dim(b)] + [None] * (max(0, x.ndim - 1))
+            return self._named(PartitionSpec(*spec))
+        return jax.tree_util.tree_map(leaf, batch_tree)
+
+    # ----------------------------------------------------------------- cache
+    def cache_shardings(self, cache_tree):
+        """KV/state cache shardings by leaf name (path-aware)."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+        out = []
+        for path, leaf in flat:
+            keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+            name = keys[-1] if keys else None
+            stacked = "body" in keys          # leading (layers,) dim
+            out.append(self._named(self._cache_leaf_spec(name, leaf, stacked)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _cache_leaf_spec(self, name, leaf, stacked: bool) -> PartitionSpec:
+        nd = leaf.ndim - (1 if stacked else 0)
+        prefix = [None] if stacked else []
+        if name == "index" or nd == 0:
+            return PartitionSpec(*([None] * leaf.ndim))
+        used: set = set()
+
+        def dim(d, cands):
+            for c in cands:
+                c = _filter_axis(self.mesh, c)
+                if c is None:
+                    continue
+                axes = c if isinstance(c, tuple) else (c,)
+                if any(a in used for a in axes):
+                    continue
+                if d % _axis_size(self.mesh, c) == 0:
+                    used.update(axes)
+                    return c
+            return None
+
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        batch_c = [tuple(self.rules.batch), "data"]
+        long_seq = self.shape_kind == "long_decode"
+        if name in ("k", "v", "k_scale", "v_scale", "ck", "cv"):
+            # (B, S, H, Dh)
+            spec = [dim(shape[0], batch_c),
+                    dim(shape[1], ["data"] if long_seq else []),
+                    dim(shape[2], ["model"]),
+                    dim(shape[3], ["model"])]
+        elif name in ("ckv", "krope"):
+            # (B, S, R)
+            spec = [dim(shape[0], batch_c),
+                    dim(shape[1], ["data"] if long_seq else []),
+                    dim(shape[2], ["model"])]
+        elif name == "ssm":
+            # (B, H, P, N)
+            spec = [dim(shape[0], batch_c), dim(shape[1], ["model"]),
+                    None, None]
+        elif name == "conv":
+            # (B, W-1, C)
+            spec = [dim(shape[0], batch_c), None, dim(shape[2], ["model"])]
+        elif name == "h":
+            # (B, D)
+            spec = [dim(shape[0], batch_c), dim(shape[1], ["model"])]
+        else:
+            spec = [dim(shape[0], batch_c)] + [None] * (nd - 1)
+        return PartitionSpec(*(prefix + spec))
+
+    # ---------------------------------------------------------------- output
+    def logits_sharding(self, batch: int):
+        return self._named(PartitionSpec(self._batch_dim(batch), None, None))
+
+    def replicated(self):
+        return self._named(PartitionSpec())

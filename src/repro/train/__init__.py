@@ -1,0 +1,14 @@
+"""Training substrate: optimizer, data, checkpointing, fault tolerance.
+
+NOTE: submodules are imported lazily — ``trainer`` imports
+``repro.launch.steps`` which imports ``repro.train.optimizer``; an eager
+package import here would create a cycle.
+"""
+from repro.train.optimizer import OptimizerConfig, make_optimizer  # noqa: F401
+
+
+def __getattr__(name):
+    if name in ("TrainConfig", "Trainer"):
+        from repro.train import trainer
+        return getattr(trainer, name)
+    raise AttributeError(name)

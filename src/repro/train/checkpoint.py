@@ -1,0 +1,184 @@
+"""Checkpointing: atomic save/restore + async writer + elastic re-shard.
+
+Layout per step::
+
+    <dir>/step_000123/
+        manifest.json       # step, config digest, mesh shape, tree structure
+        arrays.npz          # flattened leaves (host numpy)
+    <dir>/LATEST            # atomically-updated pointer file
+
+Production properties:
+
+* **Atomicity** — written to ``step_N.tmp`` then ``os.rename``d; a crash
+  mid-write never corrupts the restore point (``LATEST`` only advances
+  after the rename).
+* **Async** — ``save_async`` snapshots to host memory synchronously (cheap)
+  and writes on a worker thread, overlapping I/O with the next train steps.
+* **Elastic re-shard** — restore returns host arrays + the manifest's mesh
+  shape; ``restore_sharded`` re-lays them out onto *any* new mesh via
+  ``jax.device_put`` with freshly resolved shardings, so a job can restart
+  on a different pod count (EXPERIMENTS.md §Dry-run / fault drill).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "restore_sharded",
+           "latest_step", "CheckpointManager"]
+
+
+def _flatten_with_keys(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return keys, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None):
+    """Synchronous atomic checkpoint write."""
+    keys, leaves, _ = _flatten_with_keys(tree)
+    host = [np.asarray(x) for x in leaves]
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"a{i}": a for i, a in enumerate(host)})
+    manifest = {
+        "step": step,
+        "keys": keys,
+        "dtypes": [str(a.dtype) for a in host],
+        "shapes": [list(a.shape) for a in host],
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _update_latest(ckpt_dir, step)
+    return final
+
+
+def _update_latest(ckpt_dir: str, step: int):
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    tmp = ptr + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(str(step))
+    os.replace(tmp, ptr)
+
+
+_EXECUTOR = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+
+
+def save_async(ckpt_dir: str, step: int, tree, *, extra=None):
+    """Snapshot to host now, write on a worker thread. Returns a Future."""
+    keys, leaves, _ = _flatten_with_keys(tree)
+    host = [np.asarray(x) for x in leaves]  # device→host sync point
+
+    def _write():
+        fake_tree = None  # we already flattened
+        final = os.path.join(ckpt_dir, f"step_{step:09d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"a{i}": a for i, a in enumerate(host)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "keys": keys,
+                       "dtypes": [str(a.dtype) for a in host],
+                       "shapes": [list(a.shape) for a in host],
+                       "extra": extra or {}}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _update_latest(ckpt_dir, step)
+        return final
+
+    return _EXECUTOR.submit(_write)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        return int(f.read().strip())
+
+
+def restore(ckpt_dir: str, tree_like, step: Optional[int] = None
+            ) -> Tuple[Any, Dict]:
+    """Restore to host numpy arrays in the structure of ``tree_like``."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(final, "arrays.npz"))
+    host = [data[f"a{i}"] for i in range(len(manifest["keys"]))]
+    keys, _, treedef = _flatten_with_keys(tree_like)
+    if keys != manifest["keys"]:
+        raise ValueError(
+            "checkpoint tree mismatch: "
+            f"{set(keys) ^ set(manifest['keys'])} (config change?)")
+    tree = jax.tree_util.tree_unflatten(treedef, host)
+    return tree, manifest
+
+
+def restore_sharded(ckpt_dir: str, tree_like, shardings,
+                    step: Optional[int] = None):
+    """Restore + lay out on a (possibly different) mesh: elastic restart."""
+    tree, manifest = restore(ckpt_dir, tree_like, step)
+    flat_t, treedef = jax.tree_util.tree_flatten(tree)
+    flat_s = treedef.flatten_up_to(shardings)
+    placed = [jax.device_put(a, s) for a, s in zip(flat_t, flat_s)]
+    return jax.tree_util.tree_unflatten(treedef, placed), manifest
+
+
+class CheckpointManager:
+    """Rolling checkpoints with retention + async hand-off."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, async_write: bool = True):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.async_write = async_write
+        self._pending: Optional[concurrent.futures.Future] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save(self, step: int, tree, extra=None):
+        self.wait()
+        self._gc()  # prune BEFORE submitting: the new write must not race GC
+        if self.async_write:
+            fut = save_async(self.dir, step, tree, extra=extra)
+            fut.add_done_callback(lambda _: self._gc())
+            self._pending = fut
+        else:
+            save(self.dir, step, tree, extra=extra)
+            self._gc()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.dir)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, tree_like, shardings=None):
+        self.wait()
+        if shardings is None:
+            return restore(self.dir, tree_like)
+        return restore_sharded(self.dir, tree_like, shardings)

@@ -1,0 +1,112 @@
+"""Fault tolerance: step watchdog, failure classification, restart policy,
+straggler mitigation.
+
+What runs here vs. what is documented-only on CPU:
+
+* **Implemented + tested** — the restart loop (exception → restore latest
+  checkpoint → seek the data stream → resume), the step-time watchdog
+  (EWMA straggler detector), bounded retry with backoff, and fault
+  injection hooks used by tests/test_fault.py.
+* **Documented policy (needs a real cluster)** — hot-spare pod promotion
+  and ICI-link-failure remapping: on a 1000+-node deployment the watchdog's
+  `on_straggler` callback is wired to the cluster scheduler to drain/replace
+  the slow host; here it logs and (optionally) triggers an elastic re-shard
+  through checkpoint.restore_sharded onto the surviving mesh — which IS
+  exercised by tests (256→128-device re-layout under the dry-run device
+  count).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Optional
+
+__all__ = ["FaultConfig", "Watchdog", "RestartableLoop", "FaultInjector"]
+
+log = logging.getLogger("repro.fault")
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    max_restarts: int = 3
+    backoff_s: float = 0.1
+    straggler_ewma_alpha: float = 0.1
+    straggler_factor: float = 2.0      # step > factor × EWMA → straggler
+    min_samples: int = 5
+
+
+class Watchdog:
+    """EWMA step-time tracker; flags stragglers (slow steps/hosts)."""
+
+    def __init__(self, cfg: FaultConfig,
+                 on_straggler: Optional[Callable[[int, float, float], None]]
+                 = None):
+        self.cfg = cfg
+        self.ewma: Optional[float] = None
+        self.n = 0
+        self.events = []
+        self.on_straggler = on_straggler
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Record a step time; returns True if flagged as straggler."""
+        flagged = False
+        if self.ewma is not None and self.n >= self.cfg.min_samples \
+                and dt > self.cfg.straggler_factor * self.ewma:
+            flagged = True
+            self.events.append((step, dt, self.ewma))
+            log.warning("straggler: step %d took %.3fs (EWMA %.3fs)",
+                        step, dt, self.ewma)
+            if self.on_straggler:
+                self.on_straggler(step, dt, self.ewma)
+        a = self.cfg.straggler_ewma_alpha
+        self.ewma = dt if self.ewma is None else (1 - a) * self.ewma + a * dt
+        self.n += 1
+        return flagged
+
+
+class FaultInjector:
+    """Test hook: raise at a chosen step (simulates node failure)."""
+
+    def __init__(self, fail_at_steps=(), exc=RuntimeError):
+        self.fail_at = set(fail_at_steps)
+        self.exc = exc
+        self.armed = True
+
+    def check(self, step: int):
+        if self.armed and step in self.fail_at:
+            self.fail_at.discard(step)
+            raise self.exc(f"injected fault at step {step}")
+
+
+class RestartableLoop:
+    """Run a step function with restart-from-checkpoint on failure.
+
+    ``run(state, start_step, n_steps, step_fn, restore_fn)`` where
+    ``step_fn(state, step) -> state`` and ``restore_fn() -> (state, step)``
+    reloads the latest checkpoint.  Deterministic data (train/data.py) makes
+    the recovery exact: the replayed steps see identical batches.
+    """
+
+    def __init__(self, cfg: FaultConfig):
+        self.cfg = cfg
+        self.restarts = 0
+
+    def run(self, state, start_step: int, n_steps: int, step_fn,
+            restore_fn):
+        step = start_step
+        end = start_step + n_steps
+        while step < end:
+            try:
+                state = step_fn(state, step)
+                step += 1
+            except Exception as e:  # noqa: BLE001 — any step failure
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    log.error("restart budget exhausted (%d)", self.restarts)
+                    raise
+                log.warning("step %d failed (%r); restoring (restart %d/%d)",
+                            step, e, self.restarts, self.cfg.max_restarts)
+                time.sleep(self.cfg.backoff_s * self.restarts)
+                state, step = restore_fn()
+        return state, step

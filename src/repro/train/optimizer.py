@@ -1,0 +1,245 @@
+"""Optimizers (AdamW, Adafactor) + LR schedules + global-norm clipping.
+
+Written from scratch (no optax in this environment) with the production
+requirements in mind:
+
+* **AdamW** — fp32 moments, decoupled weight decay with a mask (no decay on
+  norms/biases/1-D params), bias correction.
+* **Adafactor** — factored second moment (row/col RMS) for ≥2-D params:
+  the memory-viable choice for the 671B MoE cells (EXPERIMENTS.md §Dry-run
+  memory table) — O(n+m) statistics instead of O(n·m), as used by T5/PaLM.
+* schedules: linear warmup → cosine/linear/constant decay.
+
+State layout mirrors the param tree (same sharding applies leaf-for-leaf),
+so the partitioner shards optimizer state for free — this is what makes the
+ZeRO-style "optimizer sharded like params" behaviour fall out of GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptimizerConfig", "make_optimizer", "warmup_cosine",
+           "warmup_linear", "constant", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"                # adamw | adafactor
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    schedule: str = "cosine"           # cosine | linear | constant
+    # adafactor
+    decay_rate: float = 0.8
+    factored_min_dim: int = 2
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(cfg: OptimizerConfig):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(1.0, cfg.decay_steps - cfg.warmup_steps),
+                        0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+    return fn
+
+
+def warmup_linear(cfg: OptimizerConfig):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(1.0, cfg.decay_steps - cfg.warmup_steps),
+                        0.0, 1.0)
+        return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, 1.0 - frac)
+    return fn
+
+
+def constant(cfg: OptimizerConfig):
+    return lambda step: jnp.full((), cfg.lr, jnp.float32)
+
+
+def _schedule(cfg: OptimizerConfig):
+    return {"cosine": warmup_cosine, "linear": warmup_linear,
+            "constant": constant}[cfg.schedule](cfg)
+
+
+# ---------------------------------------------------------------------------
+# utilities
+# ---------------------------------------------------------------------------
+
+
+def _differentiable(x) -> bool:
+    """True for real float grads; False for int buffers / float0 tangents
+    (e.g. the frozen RgCSR structure tables in SparseLinear)."""
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [x for x in jax.tree_util.tree_leaves(tree) if _differentiable(x)]
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype)
+        if _differentiable(g) else g, tree), norm
+
+
+def _decay_mask(params):
+    """True = apply weight decay (2-D+ floating-point params only)."""
+    return jax.tree_util.tree_map(
+        lambda p: p.ndim >= 2 and jnp.issubdtype(p.dtype, jnp.floating), params)
+
+
+def _is_float(p):
+    return jnp.issubdtype(p.dtype, jnp.floating)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def _adamw(cfg: OptimizerConfig):
+    sched = _schedule(cfg)
+
+    def init(params):
+        zeros = lambda p: (jnp.zeros(p.shape, jnp.float32) if _is_float(p)
+                           else jnp.zeros((), jnp.float32))
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = sched(step)
+        b1, b2 = cfg.betas
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        mask = _decay_mask(params)
+
+        def upd(g, m, v, p, decay):
+            if not _is_float(p):
+                return p, m, v
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh, vh = m / c1, v / c2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps)
+            if cfg.weight_decay:
+                delta = delta + jnp.where(decay, cfg.weight_decay, 0.0) \
+                    * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                     params, mask)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"step": step, "m": new_m, "v": new_v}
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment)
+# ---------------------------------------------------------------------------
+
+
+def _adafactor(cfg: OptimizerConfig):
+    sched = _schedule(cfg)
+
+    def _factored(p):
+        return _is_float(p) and p.ndim >= cfg.factored_min_dim
+
+    def init(params):
+        def stats(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            if _is_float(p):
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            return {"v": jnp.zeros((), jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "stats": jax.tree_util.tree_map(stats, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = sched(step)
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-cfg.decay_rate)
+        mask = _decay_mask(params)
+
+        def upd(g, st, p, decay):
+            if not _is_float(p):
+                return p, st
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + 1e-30
+            if "vr" in st:
+                vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+                v_est = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                delta = g * jax.lax.rsqrt(v_est + 1e-30)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                delta = g * jax.lax.rsqrt(v + 1e-30)
+                new_st = {"v": v}
+            # update clipping (Adafactor's RMS-1 rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+            delta = delta / jnp.maximum(1.0, rms)
+            if cfg.weight_decay:
+                delta = delta + jnp.where(decay, cfg.weight_decay, 0.0) \
+                    * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_st
+
+        # grads/params are array-leaf trees; stats has dict leaves one level
+        # deeper — flatten stats up to the grads structure to align them.
+        g_leaves, gdef = jax.tree_util.tree_flatten(grads)
+        s_leaves = gdef.flatten_up_to(state["stats"])
+        p_leaves = gdef.flatten_up_to(params)
+        m_leaves = gdef.flatten_up_to(mask)
+        pairs = [upd(g, s, p, m) for g, s, p, m in
+                 zip(g_leaves, s_leaves, p_leaves, m_leaves)]
+        new_params = jax.tree_util.tree_unflatten(gdef, [t[0] for t in pairs])
+        new_stats = jax.tree_util.tree_unflatten(gdef, [t[1] for t in pairs])
+        return new_params, {"step": step, "stats": new_stats}
+
+    return init, update
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    """Returns (init_fn, update_fn).
+
+    ``update_fn(grads, state, params) -> (new_params, new_state)``; gradient
+    clipping is applied by the caller (trainer) so the norm can be logged.
+    """
+    if cfg.name == "adamw":
+        return _adamw(cfg)
+    if cfg.name == "adafactor":
+        return _adafactor(cfg)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

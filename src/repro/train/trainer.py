@@ -1,0 +1,144 @@
+"""Trainer: pjit'd step + data + checkpoints + watchdog + restart loop.
+
+Composes the substrate: launch/steps.py (jit'd train step with microbatch
+accumulation), train/data.py (deterministic stream), train/checkpoint.py
+(atomic async checkpoints), train/fault.py (watchdog + restartable loop).
+Works on a single CPU device (tests/examples) and on a production mesh
+(launch/train.py) with the same code path — the partitioner simply returns
+replicated shardings when no mesh is given.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.launch.steps import make_train_step
+from repro.models import LanguageModel
+from repro.train.checkpoint import CheckpointManager, latest_step
+from repro.train.data import DataConfig, make_batch
+from repro.train.fault import FaultConfig, FaultInjector, RestartableLoop, \
+    Watchdog
+from repro.train.optimizer import OptimizerConfig
+
+log = logging.getLogger("repro.trainer")
+
+__all__ = ["TrainConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    microbatches: int = 1
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    ckpt_keep: int = 3
+    seed: int = 0
+    opt: OptimizerConfig = dataclasses.field(default_factory=OptimizerConfig)
+    fault: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+
+
+class Trainer:
+    def __init__(self, model_cfg, train_cfg: TrainConfig, *, mesh=None,
+                 partitioner=None, fault_injector: Optional[FaultInjector]
+                 = None):
+        self.cfg = train_cfg
+        self.model = LanguageModel(model_cfg)
+        self.mesh = mesh
+        self.fault_injector = fault_injector
+        self.data_cfg = DataConfig(
+            vocab=model_cfg.vocab,
+            seq_len=model_cfg.frontend_tokens + 32
+            if model_cfg.family == "vlm" else 0,  # replaced below
+            global_batch=0,
+            family=model_cfg.family,
+            d_frontend=model_cfg.d_frontend,
+            frontend_tokens=model_cfg.frontend_tokens,
+            seed=train_cfg.seed,
+        )
+        step_fn, opt_init = make_train_step(self.model, train_cfg.opt,
+                                            train_cfg.microbatches)
+        self.opt_init = opt_init
+        if mesh is not None and partitioner is not None:
+            spec_tree = self.model.spec()
+            p_sh = partitioner.param_shardings(spec_tree)
+            o_sh = partitioner.opt_shardings(spec_tree, train_cfg.opt.name)
+            self._p_sh, self._o_sh = p_sh, o_sh
+            self.train_step = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None),
+                                      out_shardings=(p_sh, o_sh, None),
+                                      donate_argnums=(0, 1))
+        else:
+            self._p_sh = self._o_sh = None
+            self.train_step = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.ckpt = CheckpointManager(train_cfg.ckpt_dir,
+                                      keep=train_cfg.ckpt_keep) \
+            if train_cfg.ckpt_dir else None
+        self.watchdog = Watchdog(train_cfg.fault)
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------ API
+    def init_state(self, seq_len: int, global_batch: int):
+        self.data_cfg = dataclasses.replace(
+            self.data_cfg, seq_len=seq_len, global_batch=global_batch)
+        params = self.model.init(jax.random.PRNGKey(self.cfg.seed))
+        opt_state = self.opt_init(params)
+        return params, opt_state
+
+    def _batch(self, step: int):
+        return make_batch(self.data_cfg, step)
+
+    def run(self, state, start_step: int = 0,
+            n_steps: Optional[int] = None):
+        """Train with watchdog + checkpointing + restart-on-failure."""
+        n_steps = n_steps if n_steps is not None else self.cfg.steps
+        loop = RestartableLoop(self.cfg.fault)
+
+        def step_fn(state, step):
+            if self.fault_injector:
+                self.fault_injector.check(step)
+            t0 = time.time()
+            params, opt_state = state
+            batch = self._batch(step)
+            params, opt_state, metrics = self.train_step(params, opt_state,
+                                                         batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t0
+            self.watchdog.observe(step, dt)
+            metrics.update(step=step, step_time_s=dt)
+            self.history.append(metrics)
+            if step % self.cfg.log_every == 0:
+                log.info("step %d: loss=%.4f (%.2fs)", step,
+                         metrics["loss"], dt)
+            if self.ckpt and step and step % self.cfg.ckpt_every == 0:
+                self.ckpt.save(step, {"params": params,
+                                      "opt_state": opt_state},
+                               extra={"data_step": step + 1})
+            return params, opt_state
+
+        def restore_fn():
+            if not self.ckpt or latest_step(self.cfg.ckpt_dir) is None:
+                # no checkpoint yet: restart from scratch (deterministic init)
+                params = self.model.init(jax.random.PRNGKey(self.cfg.seed))
+                return (params, self.opt_init(params)), start_step
+            # structure-only template (live arrays may have been donated)
+            params_abs = self.model.abstract_params()
+            tree_like = {"params": params_abs,
+                         "opt_state": jax.eval_shape(self.opt_init,
+                                                     params_abs)}
+            restored, manifest = self.ckpt.restore_latest(tree_like)
+            log.info("restored checkpoint step %d", manifest["step"])
+            return ((restored["params"], restored["opt_state"]),
+                    manifest["step"] + 1)
+
+        state, step = loop.run(state, start_step, n_steps, step_fn,
+                               restore_fn)
+        if self.ckpt:
+            self.ckpt.save(step - 1, {"params": state[0],
+                                      "opt_state": state[1]})
+            self.ckpt.wait()
+        return state, step

@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the real single CPU device; only launch/dryrun.py (and the
+subprocess-isolated distributed tests) force a fake device count."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_sparse(rng, n, m=None, density=0.05, dtype=np.float32):
+    m = m or n
+    a = (rng.uniform(size=(n, m)) < density).astype(dtype)
+    a *= rng.uniform(0.5, 1.5, size=(n, m)).astype(dtype)
+    return a

@@ -1,0 +1,128 @@
+"""Property + unit tests for the sparse formats (the paper's core)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FORMATS, from_dense, spmm, spmv
+from repro.core.analyze import GTX280, peak_model_gflops, row_stats
+from repro.core.formats import RgCSR, _hybrid_split_k
+from repro.core.ordering import ORDERINGS, descending_ordering, permute_rows
+from repro.core.suite import generate, paper_twins
+
+FMT_KWARGS = {
+    "rgcsr": dict(group_size=32, slot_pad=4),
+    "sliced_ellpack": dict(group_size=32, slot_pad=4),
+}
+
+
+def _rand_sparse(seed, n, m, density):
+    rng = np.random.default_rng(seed)
+    a = (rng.uniform(size=(n, m)) < density).astype(np.float32)
+    a *= rng.uniform(0.5, 1.5, size=(n, m)).astype(np.float32)
+    return a
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(1, 96),
+       m=st.integers(1, 96), density=st.floats(0.0, 0.3),
+       fmt=st.sampled_from(sorted(FORMATS)))
+def test_roundtrip_and_spmv(seed, n, m, density, fmt):
+    a = _rand_sparse(seed, n, m, density)
+    mat = from_dense(a, fmt, **FMT_KWARGS.get(fmt, {}))
+    np.testing.assert_allclose(mat.to_dense(), a, atol=1e-6)
+    x = np.random.default_rng(seed + 1).standard_normal(m).astype(np.float32)
+    y = np.asarray(spmv(mat, jnp.asarray(x)))
+    np.testing.assert_allclose(y, a @ x, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), fmt=st.sampled_from(sorted(FORMATS)))
+def test_spmm(seed, fmt):
+    a = _rand_sparse(seed, 48, 40, 0.1)
+    x = np.random.default_rng(seed).standard_normal((40, 7)).astype(np.float32)
+    mat = from_dense(a, fmt, **FMT_KWARGS.get(fmt, {}))
+    np.testing.assert_allclose(np.asarray(spmm(mat, jnp.asarray(x))), a @ x,
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), g=st.sampled_from([4, 8, 32]))
+def test_rgcsr_fill_nonnegative_and_counts(seed, g):
+    a = _rand_sparse(seed, 50, 50, 0.08)
+    mat = from_dense(a, "rgcsr", group_size=g, slot_pad=4)
+    assert mat.nnz == int((a != 0).sum())
+    assert mat.stored_elements >= mat.nnz
+    assert mat.fill_ratio() >= 0.0
+    # group pointers are monotone and multiples of group size
+    gp = np.asarray(mat.group_pointers)
+    assert (np.diff(gp) >= 0).all()
+    assert (np.diff(gp) % g == 0).all()
+
+
+def test_rgcsr_storage_vs_sliced_ellpack():
+    """RgCSR = sliced ELLPACK + rowLengths (the paper's exact delta)."""
+    a = _rand_sparse(3, 64, 64, 0.1)
+    rg = from_dense(a, "rgcsr", group_size=32, slot_pad=4)
+    se = from_dense(a, "sliced_ellpack", group_size=32, slot_pad=4)
+    assert rg.storage_bytes() - se.storage_bytes() == 4 * a.shape[0]
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_descending_ordering_minimizes_fill(seed, ):
+    """Paper §4.4.2: descending row-length ordering is optimal for fill."""
+    a = _rand_sparse(seed, 60, 60, 0.07)
+    base = from_dense(a, "rgcsr", group_size=16, slot_pad=1)
+    desc = from_dense(permute_rows(a, descending_ordering(a)), "rgcsr",
+                      group_size=16, slot_pad=1)
+    assert desc.stored_elements <= base.stored_elements
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       oname=st.sampled_from(sorted(ORDERINGS)))
+def test_ordering_preserves_spmv_up_to_permutation(seed, oname):
+    a = _rand_sparse(seed, 40, 40, 0.1)
+    perm = ORDERINGS[oname](a)
+    x = np.random.default_rng(seed).standard_normal(40).astype(np.float32)
+    y_base = np.asarray(spmv(from_dense(a, "rgcsr", group_size=8,
+                                        slot_pad=1), jnp.asarray(x)))
+    y_perm = np.asarray(spmv(from_dense(permute_rows(a, perm), "rgcsr",
+                                        group_size=8, slot_pad=1),
+                             jnp.asarray(x)))
+    np.testing.assert_allclose(y_perm, y_base[perm], rtol=2e-4, atol=2e-4)
+
+
+def test_hybrid_split_heuristic():
+    # uniform rows → K1 ≈ row length; one dense row → spills to COO
+    lens = np.full(5000, 6)
+    lens[0] = 4000
+    k1 = _hybrid_split_k(lens)
+    assert 1 <= k1 <= 10
+
+
+def test_peak_model_matches_paper_table1():
+    assert abs(peak_model_gflops(GTX280, 4, False) - 23.5) < 0.5
+    assert abs(peak_model_gflops(GTX280, 8, False) - 14.1) < 0.1
+    assert abs(peak_model_gflops(GTX280, 4, True) - 35.25) < 0.1
+    assert abs(peak_model_gflops(GTX280, 8, True) - 23.5) < 0.1
+
+
+def test_paper_twins_signatures():
+    twins = paper_twins(scale=64)
+    st4 = row_stats(twins["trans4_twin"])
+    st_fd = row_stats(twins["fd18_twin"])
+    # the pathology: max row ≫ mean (trans4) vs max ≈ mean (fd18)
+    assert st4["row_nnz_max"] > 50 * st4["row_nnz_mean"]
+    assert st_fd["row_nnz_max"] < 3 * st_fd["row_nnz_mean"]
+
+
+@pytest.mark.parametrize("family", ["stencil", "fem2d", "powerlaw",
+                                    "uniform", "circuit", "blockrand",
+                                    "banded"])
+def test_suite_families_deterministic(family):
+    a = generate(family, 64, seed=5)
+    b = generate(family, 64, seed=5)
+    np.testing.assert_array_equal(a, b)
+    assert (a != 0).sum() > 0

@@ -1,0 +1,105 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracle.
+
+All kernels run in interpret mode (CPU container); the sweep covers group
+sizes, ragged shapes, rectangular matrices, empty rows, bf16/fp32.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import from_dense
+from repro.kernels import (ell_spmv, make_ell_plan, make_plan, rgcsr_spmm,
+                           rgcsr_spmv)
+from repro.kernels.ref import spmv_ref, spmm_ref
+
+
+def _rand(seed, n, m, density):
+    rng = np.random.default_rng(seed)
+    a = (rng.uniform(size=(n, m)) < density).astype(np.float32)
+    a *= rng.uniform(0.5, 1.5, size=(n, m)).astype(np.float32)
+    return a
+
+
+@pytest.mark.parametrize("n,m,density,g", [
+    (64, 64, 0.1, 128),        # fewer rows than one group
+    (128, 128, 0.05, 128),     # exactly one group
+    (300, 257, 0.08, 128),     # ragged rows+cols
+    (513, 300, 0.02, 256),     # larger group
+    (130, 1000, 0.01, 128),    # wide
+    (40, 40, 0.5, 128),        # dense-ish
+])
+def test_rgcsr_spmv_shapes(n, m, density, g):
+    a = _rand(0, n, m, density)
+    mat = from_dense(a, "rgcsr", group_size=g)
+    plan = make_plan(mat)
+    x = np.random.default_rng(1).standard_normal(m).astype(np.float32)
+    got = np.asarray(rgcsr_spmv(plan, jnp.asarray(x), interpret=True))
+    ref = np.asarray(spmv_ref(mat, jnp.asarray(x)))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, a @ x, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 1e-5),
+                                        (jnp.bfloat16, 3e-2)])
+def test_rgcsr_spmv_dtypes(dtype, rtol):
+    a = _rand(2, 200, 200, 0.05)
+    mat = from_dense(a, "rgcsr", group_size=128)
+    plan = make_plan(mat)
+    plan = dataclasses.replace(plan, values2d=plan.values2d.astype(dtype))
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(200), dtype)
+    got = np.asarray(rgcsr_spmv(plan, x, interpret=True)).astype(np.float32)
+    ref = a @ np.asarray(x, np.float32)
+    np.testing.assert_allclose(got, ref, rtol=rtol, atol=rtol * 10)
+
+
+@pytest.mark.parametrize("d", [1, 7, 64, 129])
+def test_rgcsr_spmm_widths(d):
+    a = _rand(4, 150, 140, 0.07)
+    mat = from_dense(a, "rgcsr", group_size=128)
+    plan = make_plan(mat)
+    x = np.random.default_rng(5).standard_normal((140, d)).astype(np.float32)
+    got = np.asarray(rgcsr_spmm(plan, jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, a @ x, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(8, 200),
+       m=st.integers(8, 200))
+def test_rgcsr_spmv_property(seed, n, m):
+    a = _rand(seed, n, m, 0.08)
+    mat = from_dense(a, "rgcsr", group_size=128)
+    plan = make_plan(mat)
+    x = np.random.default_rng(seed).standard_normal(m).astype(np.float32)
+    got = np.asarray(rgcsr_spmv(plan, jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, a @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_rgcsr_empty_rows_and_ghost_index():
+    a = np.zeros((140, 90), np.float32)
+    a[0, 3] = 2.0
+    a[139, 89] = -1.0            # only two nonzeros; many empty rows
+    mat = from_dense(a, "rgcsr", group_size=128)
+    plan = make_plan(mat)
+    x = np.random.default_rng(0).standard_normal(90).astype(np.float32)
+    got = np.asarray(rgcsr_spmv(plan, jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, a @ x, rtol=1e-5, atol=1e-6)
+
+
+def test_plan_rejects_non_tpu_group_size():
+    a = _rand(6, 64, 64, 0.1)
+    mat = from_dense(a, "rgcsr", group_size=32, slot_pad=4)
+    with pytest.raises(ValueError):
+        make_plan(mat)
+
+
+@pytest.mark.parametrize("n,m", [(64, 64), (200, 130), (257, 511)])
+def test_ell_spmv(n, m):
+    a = _rand(7, n, m, 0.06)
+    mat = from_dense(a, "ellpack")
+    plan = make_ell_plan(mat)
+    x = np.random.default_rng(8).standard_normal(m).astype(np.float32)
+    got = np.asarray(ell_spmv(plan, jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, a @ x, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,69 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The chain the paper cares about, exercised through the public API:
+matrices → formats → (Pallas-validated) SpMV → SparseLinear inside an LM →
+train → checkpoint → serve.
+"""
+import dataclasses
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.configs.base import SparsityConfig
+from repro.core import from_dense, spmv
+from repro.core.suite import generate
+from repro.kernels import make_plan, rgcsr_spmv
+from repro.serve import Engine, ServeConfig
+from repro.train import TrainConfig, Trainer
+from repro.train.optimizer import OptimizerConfig
+
+
+def test_spmv_pipeline_end_to_end():
+    """suite → RgCSR → plan → Pallas(interpret) == CSR oracle == dense."""
+    dense = generate("fem2d", 400, seed=1)
+    x = np.random.default_rng(0).standard_normal(
+        dense.shape[1]).astype(np.float32)
+    rg = from_dense(dense, "rgcsr", group_size=128)
+    csr = from_dense(dense, "csr")
+    y_kernel = np.asarray(rgcsr_spmv(make_plan(rg), jnp.asarray(x),
+                                     interpret=True))
+    y_csr = np.asarray(spmv(csr, jnp.asarray(x)))
+    np.testing.assert_allclose(y_kernel, y_csr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(y_kernel, dense @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_train_then_serve():
+    cfg = get_smoke("granite-3-2b")
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainConfig(steps=12, ckpt_every=6, ckpt_dir=d, log_every=100,
+                         opt=OptimizerConfig(lr=3e-3, warmup_steps=2,
+                                             decay_steps=50))
+        tr = Trainer(cfg, tc)
+        state = tr.init_state(seq_len=32, global_batch=4)
+        (params, _), _ = tr.run(state)
+    eng = Engine(cfg, ServeConfig(max_seq=64), params=params)
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab,
+                                                (2, 8)).astype(np.int32)
+    out = eng.generate(prompts, max_new_tokens=4)
+    assert out.shape == (2, 4)
+    assert (out < cfg.padded_vocab).all()
+
+
+def test_sparse_ffn_model_trains():
+    """The paper's technique as a first-class LM feature: RgCSR FFN weights
+    train end-to-end (structure frozen, values learned)."""
+    base = get_smoke("granite-3-2b")
+    cfg = dataclasses.replace(
+        base, sparsity=SparsityConfig(enabled=True, density=0.5,
+                                      group_size=128, impl="ref"))
+    tc = TrainConfig(steps=10, log_every=100,
+                     opt=OptimizerConfig(lr=3e-3, warmup_steps=2,
+                                         decay_steps=50))
+    tr = Trainer(cfg, tc)
+    state = tr.init_state(seq_len=32, global_batch=4)
+    state, _ = tr.run(state)
+    losses = [h["loss"] for h in tr.history]
+    assert losses[-1] < losses[0]

@@ -1,0 +1,154 @@
+"""Training substrate: optimizer math, schedules, checkpoints, fault drill."""
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke
+from repro.train.checkpoint import CheckpointManager, latest_step, restore, \
+    save
+from repro.train.data import DataConfig, make_batch
+from repro.train.fault import FaultConfig, FaultInjector, Watchdog
+from repro.train.optimizer import OptimizerConfig, clip_by_global_norm, \
+    global_norm, make_optimizer
+from repro.train.trainer import TrainConfig, Trainer
+
+
+# --------------------------------------------------------------- optimizer
+def test_adamw_decreases_quadratic():
+    init, update = make_optimizer(OptimizerConfig(
+        name="adamw", lr=0.1, weight_decay=0.0, warmup_steps=0,
+        decay_steps=10_000, schedule="constant"))
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adafactor_decreases_quadratic_matrix():
+    init, update = make_optimizer(OptimizerConfig(
+        name="adafactor", lr=0.1, weight_decay=0.0, warmup_steps=0,
+        schedule="constant"))
+    params = {"w": jnp.ones((8, 8)) * 3.0}
+    state = init(params)
+    assert "vr" in state["stats"]["w"]          # factored for 2-D
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, state = update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_weight_decay_mask_skips_1d():
+    cfgo = OptimizerConfig(name="adamw", lr=0.0, weight_decay=1.0,
+                           warmup_steps=0, schedule="constant")
+    init, update = make_optimizer(cfgo)
+    params = {"kernel": jnp.ones((4, 4)), "scale": jnp.ones((4,))}
+    state = init(params)
+    zero_grads = jax.tree_util.tree_map(jnp.zeros_like, params)
+    new, _ = update(zero_grads, state, params)
+    # lr = 0 → nothing moves regardless; use lr>0 to see decay effect
+    cfgo2 = OptimizerConfig(name="adamw", lr=0.1, weight_decay=1.0,
+                            warmup_steps=0, schedule="constant")
+    init2, update2 = make_optimizer(cfgo2)
+    new2, _ = update2(zero_grads, init2(params), params)
+    assert float(new2["kernel"][0, 0]) < 1.0      # decayed
+    assert float(new2["scale"][0]) == 1.0         # masked (1-D)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+def test_schedule_warmup_and_decay():
+    from repro.train.optimizer import warmup_cosine
+    cfgo = OptimizerConfig(lr=1.0, warmup_steps=10, decay_steps=100)
+    fn = warmup_cosine(cfgo)
+    assert float(fn(jnp.asarray(0))) == 0.0
+    assert abs(float(fn(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(fn(jnp.asarray(100))) < 1e-6
+
+
+# --------------------------------------------------------------------- data
+def test_data_deterministic_and_host_sharded():
+    cfg = DataConfig(vocab=97, seq_len=16, global_batch=8)
+    b1 = make_batch(cfg, 3)
+    b2 = make_batch(cfg, 3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    h0 = make_batch(cfg, 3, host_id=0, n_hosts=2)
+    h1 = make_batch(cfg, 3, host_id=1, n_hosts=2)
+    assert h0["tokens"].shape[0] == 4
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+    assert (b1["tokens"] >= 0).all() and (b1["tokens"] < 97).all()
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_latest():
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": np.asarray(7, np.int32)}}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 5, tree)
+        save(d, 9, jax.tree_util.tree_map(lambda x: x + 1, tree))
+        assert latest_step(d) == 9
+        restored, manifest = restore(d, tree)
+        np.testing.assert_array_equal(restored["a"], tree["a"] + 1)
+        restored5, _ = restore(d, tree, step=5)
+        np.testing.assert_array_equal(restored5["a"], tree["a"])
+
+
+def test_checkpoint_structure_mismatch_detected():
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, {"a": np.zeros(3)})
+        with pytest.raises(ValueError):
+            restore(d, {"b": np.zeros(3)})
+
+
+def test_checkpoint_manager_retention_and_async():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, async_write=True)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, {"x": np.full(4, s, np.float32)})
+        mgr.wait()
+        steps = sorted(int(p.split("_")[1]) for p in os.listdir(d)
+                       if p.startswith("step_"))
+        assert steps == [3, 4]
+
+
+# -------------------------------------------------------------------- fault
+def test_watchdog_flags_stragglers():
+    wd = Watchdog(FaultConfig(min_samples=3, straggler_factor=2.0))
+    flags = [wd.observe(i, 0.1) for i in range(6)]
+    assert not any(flags)
+    assert wd.observe(6, 0.5) is True
+
+
+def test_trainer_loss_decreases_and_survives_fault():
+    cfg = get_smoke("granite-3-2b")
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainConfig(steps=24, log_every=100, ckpt_every=8, ckpt_dir=d,
+                         opt=OptimizerConfig(lr=3e-3, warmup_steps=4,
+                                             decay_steps=100),
+                         microbatches=2)
+        tr = Trainer(cfg, tc, fault_injector=FaultInjector(
+            fail_at_steps=[13]))
+        state = tr.init_state(seq_len=32, global_batch=8)
+        state, step = tr.run(state)
+        losses = [h["loss"] for h in tr.history]
+        assert losses[-1] < losses[0] - 0.3
+        # replayed steps after the fault saw identical data (determinism):
+        by_step = {}
+        replay_match = True
+        for h in tr.history:
+            if h["step"] in by_step:
+                replay_match &= abs(by_step[h["step"]] - h["loss"]) < 5e-2
+            by_step[h["step"]] = h["loss"]
+        assert replay_match
