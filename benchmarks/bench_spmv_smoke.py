@@ -1,0 +1,136 @@
+"""Smoke benchmark: per-format SpMV µs/call on the small corpus → JSON.
+
+Run by CI on every push (``.github/workflows/ci.yml``) so the perf
+trajectory of the kernel pipeline is tracked from PR 1 onward:
+
+    PYTHONPATH=src:. python benchmarks/bench_spmv_smoke.py --out BENCH_spmv.json
+
+Per matrix it records the jnp-oracle µs/call for the reference formats, the
+Pallas RgCSR kernel µs/call + grid steps at ``chunks_per_step`` 1 (the seed
+schedule) and 4 (the coarsened schedule), and the autotuner's winning
+config.  The summary aggregates the grid-step reduction and the tuned
+speedup — the two acceptance figures of the coarsening PR.
+
+Numbers are CPU interpret-mode on this container: per-grid-step overhead is
+Python-level, so the *relative* effect of coarsening (fewer steps) is
+visible even though absolute µs are not TPU figures (benchmarks/common.py
+preamble).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+from typing import Dict
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, spmv_gflops_measured, spmv_us_kernel
+from repro.core import from_dense
+from repro.core.suite import small_corpus
+from repro.kernels import autotune
+
+ORACLE_FORMATS = ("csr", "ellpack", "rgcsr")
+
+
+def bench_one(spec, *, repeats: int, tune_max_n: int) -> Dict:
+    a = spec.build()
+    x = jax.numpy.asarray(
+        np.random.default_rng(1).standard_normal(a.shape[1])
+        .astype(np.float32))
+    row: Dict = {"n": int(a.shape[0]), "nnz": int((a != 0).sum()),
+                 "formats_us": {}, "kernel": {}}
+
+    for fmt in ORACLE_FORMATS:
+        mat = from_dense(a, fmt)
+        _, us = spmv_gflops_measured(mat, x, repeats=repeats)
+        row["formats_us"][fmt] = round(us, 2)
+        emit(f"{spec.name}/{fmt}", us, "oracle")
+
+    rg = from_dense(a, "rgcsr")
+    us1, steps1 = spmv_us_kernel(rg, x, chunks_per_step=1, repeats=repeats)
+    us4, steps4 = spmv_us_kernel(rg, x, chunks_per_step=4, repeats=repeats)
+    row["kernel"] = {
+        "us_cps1": round(us1, 2), "steps_cps1": steps1,
+        "us_cps4": round(us4, 2), "steps_cps4": steps4,
+        "step_reduction_cps4": round(steps1 / max(steps4, 1), 3),
+    }
+    emit(f"{spec.name}/rgcsr_kernel_cps1", us1, f"steps={steps1}")
+    emit(f"{spec.name}/rgcsr_kernel_cps4", us4, f"steps={steps4}")
+
+    if a.shape[0] <= tune_max_n:
+        result = autotune.autotune_spmv(a, repeats=repeats)
+        row["kernel"]["tuned"] = {
+            "chunks_per_step": result.config.chunks_per_step,
+            "group_size": result.config.group_size,
+            "us": round(result.us_per_call, 2),
+            "speedup_vs_baseline": round(result.speedup, 3),
+            "from_memo": result.from_memo,
+        }
+        emit(f"{spec.name}/rgcsr_kernel_tuned", result.us_per_call,
+             f"cps={result.config.chunks_per_step},"
+             f"g={result.config.group_size}")
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_spmv.json")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--tune-max-n", type=int, default=1024,
+                    help="autotune only matrices up to this many rows")
+    ap.add_argument("--max-n", type=int, default=0,
+                    help="skip matrices larger than this (0 = no cap)")
+    args = ap.parse_args(argv)
+
+    matrices: Dict[str, Dict] = {}
+    for spec in small_corpus():
+        if args.max_n and spec.n > args.max_n:
+            continue
+        matrices[spec.name] = bench_one(spec, repeats=args.repeats,
+                                        tune_max_n=args.tune_max_n)
+
+    steps1 = sum(m["kernel"]["steps_cps1"] for m in matrices.values())
+    steps4 = sum(m["kernel"]["steps_cps4"] for m in matrices.values())
+    tuned = [m["kernel"]["tuned"] for m in matrices.values()
+             if "tuned" in m["kernel"]]
+    us1 = np.array([m["kernel"]["us_cps1"] for m in matrices.values()])
+    us4 = np.array([m["kernel"]["us_cps4"] for m in matrices.values()])
+    summary = {
+        "total_grid_steps_cps1": steps1,
+        "total_grid_steps_cps4": steps4,
+        "overall_step_reduction_cps4": round(steps1 / max(steps4, 1), 3),
+        "kernel_us_geomean_cps1": round(float(np.exp(np.log(us1).mean())), 2),
+        "kernel_us_geomean_cps4": round(float(np.exp(np.log(us4).mean())), 2),
+        "kernel_us_geomean_tuned": round(float(np.exp(np.mean(
+            [np.log(t["us"]) for t in tuned]))), 2) if tuned else None,
+        "n_autotuned": len(tuned),
+        "n_tuned_coarsened": sum(t["chunks_per_step"] > 1 for t in tuned),
+        "tuned_speedup_geomean": round(float(np.exp(np.mean(
+            [np.log(max(t["speedup_vs_baseline"], 1e-9)) for t in tuned]
+        ))), 3) if tuned else None,
+    }
+    doc = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "interpret": jax.default_backend() != "tpu",
+            "python": platform.python_version(),
+            "corpus": "small",
+            "repeats": args.repeats,
+        },
+        "matrices": matrices,
+        "summary": summary,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# wrote {args.out}: steps {steps1}→{steps4} "
+          f"({summary['overall_step_reduction_cps4']}x), "
+          f"{summary['n_tuned_coarsened']}/{summary['n_autotuned']} matrices "
+          f"tuned to chunks_per_step>1")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

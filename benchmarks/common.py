@@ -13,30 +13,17 @@ via the model only.
 """
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Tuple
 
 import jax
 import numpy as np
 
 from repro.core import from_dense, spmv
 from repro.core.suite import MatrixSpec, corpus
+from repro.core.timing import time_us  # noqa: F401  (re-export; shared harness)
 
-__all__ = ["time_us", "bench_corpus", "spmv_gflops_measured", "emit"]
-
-
-def time_us(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
-    """Median wall time of fn(*args) in µs (jit-warmed, blocked)."""
-    for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(times))
+__all__ = ["time_us", "bench_corpus", "spmv_gflops_measured",
+           "spmv_us_kernel", "emit"]
 
 
 _JITTED: Dict[type, Callable] = {}
@@ -49,9 +36,22 @@ def _jit_spmv(mat):
     return _JITTED[cls]
 
 
-def spmv_gflops_measured(mat, x, repeats: int = 5) -> float:
+def spmv_gflops_measured(mat, x, repeats: int = 5) -> Tuple[float, float]:
+    """Measured SpMV throughput.  Returns ``(gflops, us_per_call)``."""
     us = time_us(_jit_spmv(mat), mat, x, repeats=repeats)
     return 2.0 * mat.nnz / (us * 1e-6) / 1e9, us
+
+
+def spmv_us_kernel(mat, x, *, chunks_per_step: int = 1, repeats: int = 5,
+                   interpret: bool | None = None) -> Tuple[float, int]:
+    """µs/call of the Pallas RgCSR kernel through the process-wide PlanCache
+    (plan built once, not per call).  Returns ``(us_per_call, grid_steps)``.
+    """
+    from repro.kernels import ops as kops
+    plan = kops.get_plan(mat, chunks_per_step=chunks_per_step)
+    us = time_us(lambda p, v: kops.rgcsr_spmv(p, v, interpret=interpret),
+                 plan, x, repeats=repeats)
+    return us, plan.num_steps
 
 
 def bench_corpus(small_only: bool = False) -> List[MatrixSpec]:

@@ -16,10 +16,15 @@ def main(argv=None) -> None:
     ap.add_argument("--small", action="store_true",
                     help="reduced corpus (CI-sized)")
     ap.add_argument("--tables", default="1,3,4,5,6,7",
-                    help="comma-separated table numbers to run")
+                    help="comma-separated table numbers to run; add 'smoke' "
+                         "for the JSON smoke bench (BENCH_spmv.json)")
     args = ap.parse_args(argv)
     tables = {t.strip() for t in args.tables.split(",")}
     t0 = time.time()
+
+    if "smoke" in tables:
+        from benchmarks import bench_spmv_smoke
+        bench_spmv_smoke.main([])
 
     from benchmarks import table1_peak_model, table3_csr_hybrid, \
         table4_rgcsr_groups, table5_comparison, table6_pathological, \

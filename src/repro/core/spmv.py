@@ -173,11 +173,55 @@ def _identity(x):
     return x
 
 
-def spmv(a: Matrix, x):
-    """``y = A @ x`` for any of the paper's formats."""
+def _use_kernel(a, impl: str) -> bool:
+    """Kernel dispatch policy.
+
+    ``impl='ref'`` — always the jnp oracle.  ``impl='kernel'`` — the Pallas
+    kernel via the process-wide PlanCache (interpret mode on CPU).
+    ``impl='auto'`` — kernel on TPU, oracle elsewhere.  Kernel dispatch is
+    host-side (plans index host metadata), so it requires concrete arrays:
+    under jit tracing auto/kernel fall back to the oracle, which XLA shards
+    and fuses like any segment-sum.
+    """
+    if impl not in ("auto", "ref", "kernel"):   # validate unconditionally,
+        raise ValueError(                        # even on oracle-only paths
+            f"unknown impl {impl!r}; options: auto/ref/kernel")
+    if impl == "ref" or not isinstance(a, RgCSR):
+        return False
+    if isinstance(a.values, jax.core.Tracer):
+        return False
+    if impl == "kernel":
+        return True      # explicit request: let make_plan raise if unrunnable
+    # auto: only matrices the TPU kernel can actually run (group_size a
+    # multiple of 128 lanes, slots sublane-packed); others — e.g. the small
+    # modeled group sizes the format tests sweep — stay on the oracle
+    # instead of crashing in make_plan.
+    return (jax.default_backend() == "tpu"
+            and a.group_size % 128 == 0 and a.slot_pad % 8 == 0)
+
+
+def spmv(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1):
+    """``y = A @ x`` for any of the paper's formats.
+
+    RgCSR matrices can dispatch to the Pallas kernel through the process-wide
+    :data:`repro.kernels.ops.PLAN_CACHE` (see ``impl`` in :func:`_use_kernel`)
+    so repeated SpMV on the same matrix — the serving / iterative-solver
+    pattern — builds its host-side execution plan exactly once.
+    """
+    if _use_kernel(a, impl):
+        from repro.kernels import ops as kops
+        plan = kops.get_plan(a, chunks_per_step=chunks_per_step)
+        return kops.rgcsr_spmv(plan, x)
     return _SPMV[type(a)](a, x)
 
 
-def spmm(a: Matrix, x):
-    """``Y = A @ X`` (X dense ``(n, d)``) for any of the paper's formats."""
+def spmm(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1):
+    """``Y = A @ X`` (X dense ``(n, d)``) for any of the paper's formats.
+
+    Same PlanCache-backed kernel dispatch as :func:`spmv`.
+    """
+    if _use_kernel(a, impl):
+        from repro.kernels import ops as kops
+        plan = kops.get_plan(a, chunks_per_step=chunks_per_step)
+        return kops.rgcsr_spmm(plan, x)
     return _SPMM[type(a)](a, x)

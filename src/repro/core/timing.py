@@ -1,0 +1,29 @@
+"""Single timing harness shared by the autotuner and the benchmark tables.
+
+One implementation so measured autotune winners stay comparable with the
+benchmark CSV figures (same warmup/block/median protocol).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+__all__ = ["time_us"]
+
+
+def time_us(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall time of fn(*args) in µs (jit-warmed, device-blocked)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))

@@ -1,15 +1,29 @@
 """Pallas TPU kernels for the paper's compute hot-spot (SpMV/SpMM).
 
 Layout: ``rgcsr_spmv.py`` / ``rgcsr_spmm.py`` / ``ell_spmv.py`` hold the
-``pl.pallas_call`` kernels with explicit BlockSpec VMEM tiling; ``ops.py`` is
-the jit'd public API (plans + wrappers); ``ref.py`` the pure-jnp oracles.
+``pl.pallas_call`` kernels with explicit BlockSpec VMEM tiling (chunk-
+coarsened via ``chunks_per_step``, DESIGN.md §3); ``ops.py`` is the jit'd
+public API (plans, the process-wide ``PlanCache`` + wrappers);
+``autotune.py`` searches kernel configs per matrix signature; ``ref.py``
+the pure-jnp oracles.
 """
 from repro.kernels.ops import (  # noqa: F401
+    PLAN_CACHE,
     EllPlan,
+    PlanCache,
     RgCSRPlan,
     ell_spmv,
+    get_plan,
     make_ell_plan,
     make_plan,
     rgcsr_spmm,
     rgcsr_spmv,
+)
+from repro.kernels.autotune import (  # noqa: F401
+    TuneConfig,
+    TuneResult,
+    autotune_spmm,
+    autotune_spmv,
+    matrix_signature,
+    tuned_plan,
 )

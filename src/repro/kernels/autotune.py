@@ -1,0 +1,224 @@
+"""Per-matrix autotuning of the RgCSR kernel pipeline (DESIGN.md §3.3).
+
+CSR5 (Liu & Vinter 2015) and SELL-C-σ (Kreutzer et al. 2011) both show that
+on wide-SIMD hardware the winning sparse schedule is a *tuned tile size*
+chosen per matrix.  For our pipeline the knobs are:
+
+* ``chunks_per_step`` — grid coarsening of the SpMV/SpMM kernels: fewer,
+  fatter grid steps vs more padding on short groups;
+* ``group_size``      — rows per RgCSR group: fill ratio vs lane utilization
+  (the paper's Table 4 experiment, now closed-loop);
+* ``d_tile``          — SpMM dense-width tile: X-panel residency vs output
+  block pressure.
+
+The harness *measures* candidate configs (median wall time of the actual
+kernel launch, jit-warmed and blocked) rather than modeling them, prunes
+candidates whose padded storage blows up past ``storage_cap`` × the
+baseline (the paper's fill-ratio pathology — a config that multiplies
+stored bytes on a memory-bound op cannot win), and memoizes the winner per
+**matrix signature** so structurally equivalent matrices (same log-bucketed
+shape/nnz/row-length profile) reuse the search result.  Winners feed the
+``PlanCache``: ``tuned_plan`` returns a ready, cached execution plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import RgCSR
+from repro.core.timing import time_us
+from repro.kernels import ops
+from repro.kernels.rgcsr_spmv import CHUNKS_PER_STEP_CHOICES, LANES
+
+__all__ = ["TuneConfig", "TuneResult", "matrix_signature", "candidate_configs",
+           "autotune_spmv", "autotune_spmm", "tuned_plan", "clear_memo",
+           "DEFAULT_GROUP_SIZES", "DEFAULT_D_TILES"]
+
+DEFAULT_GROUP_SIZES = (128, 256)
+DEFAULT_D_TILES = (128, 256)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class TuneConfig:
+    """One point in the kernel schedule space."""
+    chunks_per_step: int = 1
+    group_size: int = 128
+    d_tile: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Winner of one search, with the full timing table for inspection."""
+    config: TuneConfig
+    us_per_call: float
+    timings: Tuple[Tuple[TuneConfig, float], ...]
+    signature: tuple
+    from_memo: bool = False
+
+    @property
+    def baseline_us(self) -> float:
+        """Time of the uncoarsened default config (cps=1, g=128)."""
+        for cfg, us in self.timings:
+            if cfg.chunks_per_step == 1 and cfg.group_size == 128:
+                return us
+        return self.timings[0][1]
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline_us / max(self.us_per_call, 1e-9)
+
+
+# winner memo: (kind, signature) -> TuneResult
+_MEMO: Dict[tuple, TuneResult] = {}
+# winning (matrix, plan) per signature — the matrix is retained on purpose:
+# PLAN_CACHE evicts entries when their matrix is garbage-collected, so the
+# tuned plan stays cached only while we hold the matrix alive here.
+_TUNED: Dict[tuple, Tuple[RgCSR, "ops.RgCSRPlan"]] = {}
+
+
+def clear_memo() -> None:
+    _MEMO.clear()
+    _TUNED.clear()
+
+
+def _log_bucket(v: float) -> int:
+    return int(np.ceil(np.log2(v + 1.0)))
+
+
+def matrix_signature(dense: np.ndarray) -> tuple:
+    """Structural fingerprint driving winner reuse.
+
+    Log2-bucketed (rows, cols, nnz, row-length max/mean/std) — the same
+    row-statistics the paper's Table 6 uses to characterize matrices, which
+    are exactly what determines the padding/grid-step trade the tuner
+    explores.  Near-identical matrices share a bucket and reuse the winner.
+    """
+    dense = np.asarray(dense)
+    row_lens = (dense != 0).sum(axis=1) if dense.size else np.zeros(1)
+    return (
+        _log_bucket(dense.shape[0]),
+        _log_bucket(dense.shape[1] if dense.ndim > 1 else 0),
+        _log_bucket(float(row_lens.sum())),
+        _log_bucket(float(row_lens.max(initial=0))),
+        _log_bucket(float(row_lens.mean() if row_lens.size else 0.0)),
+        _log_bucket(float(row_lens.std() if row_lens.size else 0.0)),
+    )
+
+
+def candidate_configs(
+        chunks: Sequence[int] = CHUNKS_PER_STEP_CHOICES,
+        group_sizes: Sequence[int] = DEFAULT_GROUP_SIZES,
+        d_tiles: Sequence[int] = (LANES,)) -> Tuple[TuneConfig, ...]:
+    return tuple(TuneConfig(c, g, d)
+                 for g in group_sizes for c in chunks for d in d_tiles)
+
+
+def _search(dense: np.ndarray, run, kind: str, *,
+            candidates: Optional[Iterable[TuneConfig]],
+            repeats: int, storage_cap: float,
+            memo_key_extra: tuple = ()) -> TuneResult:
+    dense = np.asarray(dense)
+    sig = matrix_signature(dense)
+    if candidates is None:
+        candidates = candidate_configs(
+            d_tiles=DEFAULT_D_TILES if kind == "spmm" else (LANES,))
+    candidates = sorted(set(candidates))
+    # the candidate set is part of the memo key: a restricted search must
+    # never be answered with a winner outside its own candidate set
+    memo_key = (kind, sig, tuple(candidates), *memo_key_extra)
+    hit = _MEMO.get(memo_key)
+    if hit is not None:
+        return dataclasses.replace(hit, from_memo=True)
+
+    mats: Dict[int, RgCSR] = {}
+    plans: Dict[Tuple[int, int], ops.RgCSRPlan] = {}
+    baseline_slots = None
+    timings = []
+    for cfg in candidates:
+        if cfg.group_size not in mats:
+            mats[cfg.group_size] = RgCSR.from_dense(
+                dense, group_size=cfg.group_size)
+        pkey = (cfg.group_size, cfg.chunks_per_step)
+        if pkey not in plans:
+            plans[pkey] = ops.PLAN_CACHE.get(
+                mats[cfg.group_size], chunks_per_step=cfg.chunks_per_step)
+        plan = plans[pkey]
+        if baseline_slots is None:
+            baseline_slots = plan.stored_slots * plan.group_size
+        # fill-ratio pruning: a config that multiplies stored bytes on a
+        # memory-bound op cannot win — skip it without timing.
+        stored = plan.stored_slots * plan.group_size
+        if stored > storage_cap * max(baseline_slots, 1) and timings:
+            continue
+        us = time_us(run, plan, cfg, repeats=repeats, warmup=1)
+        timings.append((cfg, us))
+
+    best_cfg, best_us = min(timings, key=lambda t: t[1])
+    result = TuneResult(config=best_cfg, us_per_call=best_us,
+                        timings=tuple(timings), signature=sig)
+    _MEMO[memo_key] = result
+    return result
+
+
+def autotune_spmv(dense: np.ndarray, *,
+                  candidates: Optional[Iterable[TuneConfig]] = None,
+                  repeats: int = 3, storage_cap: float = 4.0,
+                  interpret: bool | None = None) -> TuneResult:
+    """Search (chunks_per_step, group_size) for SpMV on ``dense``.
+
+    The first candidate (the cps=1 baseline) is always timed; later
+    candidates are pruned when their padded storage exceeds
+    ``storage_cap ×`` the baseline's.  Winners are memoized per
+    :func:`matrix_signature`.
+    """
+    m = dense.shape[1] if np.asarray(dense).ndim > 1 else 0
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(m)
+                    .astype(np.float32))
+
+    def run(plan, cfg):
+        return ops.rgcsr_spmv(plan, x, interpret=interpret)
+
+    return _search(dense, run, "spmv", candidates=candidates,
+                   repeats=repeats, storage_cap=storage_cap)
+
+
+def autotune_spmm(dense: np.ndarray, d: int, *,
+                  candidates: Optional[Iterable[TuneConfig]] = None,
+                  repeats: int = 3, storage_cap: float = 4.0,
+                  interpret: bool | None = None) -> TuneResult:
+    """Search (chunks_per_step, group_size, d_tile) for SpMM at width ``d``."""
+    m = dense.shape[1] if np.asarray(dense).ndim > 1 else 0
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((m, d))
+                    .astype(np.float32))
+
+    def run(plan, cfg):
+        return ops.rgcsr_spmm(plan, x, d_tile=cfg.d_tile, interpret=interpret)
+
+    return _search(dense, run, "spmm", candidates=candidates,
+                   repeats=repeats, storage_cap=storage_cap,
+                   memo_key_extra=(_log_bucket(d),))
+
+
+def tuned_plan(dense: np.ndarray, *, repeats: int = 3,
+               interpret: bool | None = None
+               ) -> Tuple[ops.RgCSRPlan, TuneResult]:
+    """Autotune SpMV for ``dense`` and return the winning cached plan.
+
+    The winning matrix+plan pair is retained per signature (``_TUNED``) so
+    the PLAN_CACHE entry survives this call — without the strong reference
+    the matrix would be collected at return and its GC finalizer would
+    evict the plan immediately, repaying the host repack on every call.
+    """
+    result = autotune_spmv(dense, repeats=repeats, interpret=interpret)
+    key = (result.signature, result.config)
+    hit = _TUNED.get(key)
+    if hit is not None:
+        return hit[1], result
+    mat = RgCSR.from_dense(dense, group_size=result.config.group_size)
+    plan = ops.PLAN_CACHE.get(
+        mat, chunks_per_step=result.config.chunks_per_step)
+    _TUNED[key] = (mat, plan)
+    return plan, result

@@ -1,9 +1,18 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd public wrappers around the Pallas kernels + the plan/cache layer.
 
-``RgCSRPlan`` is the device-resident execution plan built once per matrix
-(the analogue of a real framework's format-compile step): the flat grouped
-storage reshaped into the ``(S, G)`` slot-major tile the kernel consumes,
-plus the chunk table that drives the data-dependent grid.
+``RgCSRPlan`` is the device-resident execution plan built once per
+(matrix, kernel config) — the analogue of a real framework's format-compile
+step: the flat grouped storage reshaped into the ``(S, G)`` slot-major tile
+the kernel consumes, plus the **step table** that drives the data-dependent
+grid.  With ``chunks_per_step > 1`` every group's slot count is padded up to
+a multiple of ``8·chunks_per_step`` so one grid step covers several 8-slot
+chunks of the same group (DESIGN.md §3); the padding is exact zeros with
+ghost column index 0, i.e. masked at plan time.
+
+``PlanCache`` is the process-wide memo: SpMV-heavy paths (core dispatch, the
+serving engine, the benchmark harness) fetch plans through ``get_plan``
+instead of rebuilding host-side layouts per call.  Entries are keyed on
+matrix identity + config and evicted when the matrix is garbage-collected.
 
 On CPU (this container) the kernels run in ``interpret=True`` mode — the
 kernel body executes in Python with identical semantics; on a real TPU pass
@@ -11,8 +20,11 @@ kernel body executes in Python with identical semantics; on a real TPU pass
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any
+import threading
+import weakref
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,10 +33,14 @@ import numpy as np
 from repro.core.formats import ELLPACK, RgCSR
 from repro.kernels.ell_spmv import ell_spmv_pallas
 from repro.kernels.rgcsr_spmm import rgcsr_spmm_pallas
-from repro.kernels.rgcsr_spmv import LANES, SUBLANES, rgcsr_spmv_pallas
+from repro.kernels.rgcsr_spmv import (CHUNKS_PER_STEP_CHOICES, LANES,
+                                      SUBLANES, rgcsr_spmv_pallas)
 
 __all__ = ["RgCSRPlan", "make_plan", "rgcsr_spmv", "rgcsr_spmm",
-           "EllPlan", "make_ell_plan", "ell_spmv", "default_interpret"]
+           "EllPlan", "make_ell_plan", "ell_spmv", "default_interpret",
+           "PlanCache", "PLAN_CACHE", "get_plan",
+           "plan_from_params", "warm_plans_from_params",
+           "DEFAULT_X_TILE_ELEMS"]
 
 
 def default_interpret() -> bool:
@@ -35,26 +51,59 @@ def _pad_to(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+# x elements staged into VMEM per SpMV grid step before column tiling kicks
+# in.  2^21 fp32 = 8 MiB — half the ~16 MiB/core VMEM, leaving room for the
+# (R, G) matrix tiles and the (1, G) accumulator.  Matrices at or below this
+# width keep the seed kernel's single unmasked whole-x stage; only wider
+# ones pay the masked multi-tile path.
+DEFAULT_X_TILE_ELEMS = 1 << 21
+
+
 @dataclasses.dataclass(frozen=True)
 class RgCSRPlan:
-    """Kernel-ready layout for one RgCSR matrix."""
+    """Kernel-ready layout for one RgCSR matrix at one kernel config.
+
+    ``step_group``/``step_first`` form the coarsened step table: grid step
+    ``s`` covers slot rows ``[R·s, R·(s+1))`` of ``values2d``/``columns2d``
+    (``R = 8·chunks_per_step``) and belongs to group ``step_group[s]``.
+    """
 
     values2d: Any       # (S, G)
     columns2d: Any      # (S, G) int32
-    chunk_group: Any    # (num_chunks,) int32
-    chunk_first: Any    # (num_chunks,) int32
+    step_group: Any     # (num_steps,) int32
+    step_first: Any     # (num_steps,) int32
     n_rows: int
     n_cols: int
     n_groups: int
     group_size: int
+    chunks_per_step: int = 1
+
+    @property
+    def num_steps(self) -> int:
+        """Grid steps the SpMV kernel launches (per x tile)."""
+        return int(self.step_group.shape[0])
 
     @property
     def num_chunks(self) -> int:
-        return int(self.chunk_group.shape[0])
+        """8-slot chunks covered (= num_steps · chunks_per_step)."""
+        return self.num_steps * self.chunks_per_step
+
+    @property
+    def stored_slots(self) -> int:
+        return int(self.values2d.shape[0])
 
 
-def make_plan(m: RgCSR) -> RgCSRPlan:
-    """Host-side plan construction (format-compile)."""
+def make_plan(m: RgCSR, *, chunks_per_step: int = 1) -> RgCSRPlan:
+    """Host-side plan construction (format-compile).
+
+    ``chunks_per_step`` coarsens the grid: each group's ``(K_g, G)`` tile is
+    re-padded so ``K_g`` is a multiple of ``8·chunks_per_step`` and one grid
+    step consumes the whole coarsened sub-tile.  The extra padding rows are
+    exact zeros (ghost column 0), so in-kernel accumulation over them is a
+    masked no-op — the paper's artificial-zeros accounting extended to the
+    coarsened tile.  The trade (fewer grid steps vs more padded bytes) is
+    what :mod:`repro.kernels.autotune` measures per matrix.
+    """
     if m.group_size % LANES != 0:
         raise ValueError(
             f"TPU plan needs group_size % {LANES} == 0, got {m.group_size} "
@@ -62,38 +111,158 @@ def make_plan(m: RgCSR) -> RgCSRPlan:
             f"— DESIGN.md §2)")
     if m.slot_pad % SUBLANES != 0:
         raise ValueError(f"slot_pad must be a multiple of {SUBLANES}")
+    if chunks_per_step not in CHUNKS_PER_STEP_CHOICES:
+        raise ValueError(
+            f"chunks_per_step must be one of {CHUNKS_PER_STEP_CHOICES}, "
+            f"got {chunks_per_step}")
     g = m.group_size
+    rows_per_step = chunks_per_step * SUBLANES
     slots = np.asarray(m.slots_per_group)
+    n_groups = len(slots)
     total_slots = int(slots.sum())
     values2d = np.asarray(m.values).reshape(total_slots, g)
     columns2d = np.asarray(m.columns).reshape(total_slots, g).astype(np.int32)
 
-    chunks_per_group = slots // SUBLANES
-    chunk_group = np.repeat(np.arange(len(slots), dtype=np.int32), chunks_per_group)
-    first_idx = np.cumsum(np.concatenate([[0], chunks_per_group[:-1]]))
-    chunk_first = np.zeros(len(chunk_group), dtype=np.int32)
-    chunk_first[first_idx] = 1
+    padded = (-(-slots // rows_per_step) * rows_per_step).astype(np.int64)
+    if int(padded.sum()) != total_slots:
+        # re-pad each group's tile up to the coarsened step granularity
+        src_off = np.concatenate([[0], np.cumsum(slots)[:-1]])
+        dst_off = np.concatenate([[0], np.cumsum(padded)[:-1]])
+        vp = np.zeros((int(padded.sum()), g), values2d.dtype)
+        cp = np.zeros((int(padded.sum()), g), np.int32)
+        for gi in range(n_groups):
+            k = int(slots[gi])
+            vp[dst_off[gi]: dst_off[gi] + k] = values2d[src_off[gi]: src_off[gi] + k]
+            cp[dst_off[gi]: dst_off[gi] + k] = columns2d[src_off[gi]: src_off[gi] + k]
+        values2d, columns2d = vp, cp
+
+    steps_per_group = (padded // rows_per_step).astype(np.int64)
+    step_group = np.repeat(np.arange(n_groups, dtype=np.int32), steps_per_group)
+    first_idx = np.cumsum(np.concatenate([[0], steps_per_group[:-1]]))
+    step_first = np.zeros(len(step_group), dtype=np.int32)
+    step_first[first_idx] = 1
     return RgCSRPlan(
         values2d=jnp.asarray(values2d),
         columns2d=jnp.asarray(columns2d),
-        chunk_group=jnp.asarray(chunk_group),
-        chunk_first=jnp.asarray(chunk_first),
+        step_group=jnp.asarray(step_group),
+        step_first=jnp.asarray(step_first),
         n_rows=m.shape[0],
         n_cols=m.shape[1],
         n_groups=m.n_groups,
         group_size=g,
+        chunks_per_step=chunks_per_step,
     )
 
 
-def rgcsr_spmv(plan: RgCSRPlan, x, *, interpret: bool | None = None):
-    """y = A @ x via the Pallas kernel. x: (n_cols,) -> y: (n_rows,)."""
+# ---------------------------------------------------------------------------
+# PlanCache — process-wide memo of (matrix identity, config) -> RgCSRPlan
+# ---------------------------------------------------------------------------
+
+
+class PlanCache:
+    """LRU plan cache keyed on matrix identity + kernel config.
+
+    Keys use ``id(matrix)``; a ``weakref.finalize`` hook evicts every config
+    of a matrix when it is garbage-collected (CPython runs the finalizer
+    during deallocation, before the id can be reused).  Thread-safe; plan
+    *construction* happens outside the lock so concurrent misses on
+    different matrices don't serialize.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = maxsize
+        self._plans: "collections.OrderedDict[tuple, RgCSRPlan]" = \
+            collections.OrderedDict()
+        self._finalized: set = set()
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, m: RgCSR, *, chunks_per_step: int = 1) -> RgCSRPlan:
+        key = (id(m), chunks_per_step)
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self.hits += 1
+                self._plans.move_to_end(key)
+                return plan
+        plan = make_plan(m, chunks_per_step=chunks_per_step)
+        with self._lock:
+            if key not in self._plans:
+                self.misses += 1
+                self._plans[key] = plan
+                if id(m) not in self._finalized:
+                    self._finalized.add(id(m))
+                    weakref.finalize(m, self._evict, id(m))
+                while len(self._plans) > self.maxsize:
+                    self._plans.popitem(last=False)
+            else:
+                self.hits += 1
+                plan = self._plans[key]
+        return plan
+
+    def _evict(self, mid: int) -> None:
+        with self._lock:
+            self._finalized.discard(mid)
+            for key in [k for k in self._plans if k[0] == mid]:
+                del self._plans[key]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._plans.clear()
+            self._finalized.clear()
+            self.hits = 0
+            self.misses = 0
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "entries": len(self._plans)}
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+
+PLAN_CACHE = PlanCache()
+
+
+def get_plan(m: RgCSR, *, chunks_per_step: int = 1) -> RgCSRPlan:
+    """Fetch (or build and memoize) the kernel plan for ``m``."""
+    return PLAN_CACHE.get(m, chunks_per_step=chunks_per_step)
+
+
+# ---------------------------------------------------------------------------
+# SpMV / SpMM wrappers
+# ---------------------------------------------------------------------------
+
+
+def _x_tile_for(n_pad_min: int, x_tile: Optional[int]) -> Tuple[int, int]:
+    """Resolve the x column-tile width and the final padded x length."""
+    if x_tile is None:
+        if n_pad_min <= DEFAULT_X_TILE_ELEMS:
+            return n_pad_min, n_pad_min          # single tile — seed behaviour
+        x_tile = DEFAULT_X_TILE_ELEMS
+    x_tile = _pad_to(x_tile, LANES)
+    return x_tile, _pad_to(n_pad_min, x_tile)
+
+
+def rgcsr_spmv(plan: RgCSRPlan, x, *, interpret: bool | None = None,
+               x_tile: int | None = None):
+    """y = A @ x via the Pallas kernel. x: (n_cols,) -> y: (n_rows,).
+
+    ``x_tile`` bounds the x slice staged into VMEM per grid step; ``None``
+    stages x whole when it fits (``DEFAULT_X_TILE_ELEMS``) and tiles it
+    otherwise, so wide matrices degrade smoothly instead of exhausting VMEM.
+    """
     if interpret is None:
         interpret = default_interpret()
-    n_pad = _pad_to(max(plan.n_cols, 1), LANES)
+    n_pad_min = _pad_to(max(plan.n_cols, 1), LANES)
+    xt, n_pad = _x_tile_for(n_pad_min, x_tile)
     x_pad = jnp.zeros((1, n_pad), x.dtype).at[0, : plan.n_cols].set(x)
     y = rgcsr_spmv_pallas(
-        plan.chunk_group, plan.chunk_first, plan.values2d, plan.columns2d,
+        plan.step_group, plan.step_first, plan.values2d, plan.columns2d,
         x_pad, n_groups=plan.n_groups, group_size=plan.group_size,
+        chunks_per_step=plan.chunks_per_step, x_tile=xt,
         interpret=interpret)
     return y.reshape(-1)[: plan.n_rows]
 
@@ -108,10 +277,120 @@ def rgcsr_spmm(plan: RgCSRPlan, x, *, d_tile: int = LANES,
     d_pad = _pad_to(max(d, 1), d_tile)
     x_pad = jnp.zeros((n_pad, d_pad), x.dtype).at[:n, :d].set(x)
     y = rgcsr_spmm_pallas(
-        plan.chunk_group, plan.chunk_first, plan.values2d, plan.columns2d,
+        plan.step_group, plan.step_first, plan.values2d, plan.columns2d,
         x_pad, n_groups=plan.n_groups, group_size=plan.group_size,
-        d_tile=d_tile, interpret=interpret)
+        d_tile=d_tile, chunks_per_step=plan.chunks_per_step,
+        interpret=interpret)
     return y[: plan.n_rows, :d]
+
+
+# ---------------------------------------------------------------------------
+# Plans over SparseLinear parameter trees (serving path)
+# ---------------------------------------------------------------------------
+
+# Memo keyed on (id(columns2d), dtype, d_out, d_in, group_size) — the dims
+# are part of the key so an entry built with different/misinferred dims can
+# never shadow a caller's correct ones.  The stored strong reference to the
+# source values array both validates the entry (values identity must match —
+# a training step invalidates it) and keeps the id stable.
+_PARAM_PLANS: "collections.OrderedDict[tuple, tuple]" = collections.OrderedDict()
+_PARAM_PLANS_MAX = 64
+_PARAM_PLANS_LOCK = threading.Lock()
+
+
+def plan_from_params(params, dtype, *, d_out: int, d_in: int,
+                     group_size: int) -> RgCSRPlan:
+    """RgCSRPlan view over SparseLinear param arrays (no host repack —
+    the params already live in the kernel's slot-major layout, cps=1).
+
+    With concrete arrays (eager per-layer paths) the container is memoized
+    so each layer's plan is built once per process (``Engine`` warms this at
+    init); under jit tracing the memo is bypassed and the container is
+    rebuilt per trace, which is free — the jit'd serving path never pays
+    per-call host plan work by construction.
+    """
+    n_groups = -(-d_out // group_size)
+    # either array traced means we're inside a transform (grad over values
+    # closes over concrete structure buffers) — never memoize tracers
+    tracing = (isinstance(params["columns2d"], jax.core.Tracer)
+               or isinstance(params["values2d"], jax.core.Tracer))
+    key = (id(params["columns2d"]), jnp.dtype(dtype).str, d_out, d_in,
+           group_size)
+    if not tracing:
+        with _PARAM_PLANS_LOCK:
+            entry = _PARAM_PLANS.get(key)
+            if entry is not None and entry[0] is params["values2d"]:
+                _PARAM_PLANS.move_to_end(key)
+                return entry[1]
+    values = params["values2d"]
+    if values.dtype != jnp.dtype(dtype):   # avoid a same-dtype device copy
+        values = values.astype(dtype)
+    plan = RgCSRPlan(
+        values2d=values,
+        columns2d=params["columns2d"],
+        step_group=params["chunk_group"],
+        step_first=params["chunk_first"],
+        n_rows=d_out, n_cols=d_in, n_groups=int(n_groups),
+        group_size=group_size, chunks_per_step=1)
+    if not tracing:
+        with _PARAM_PLANS_LOCK:
+            _PARAM_PLANS[key] = (params["values2d"], plan)
+            while len(_PARAM_PLANS) > _PARAM_PLANS_MAX:
+                _PARAM_PLANS.popitem(last=False)
+    return plan
+
+
+def param_plan_stats() -> Dict[str, int]:
+    """Size of the SparseLinear param-plan memo (serving-path cache)."""
+    with _PARAM_PLANS_LOCK:
+        return {"entries": len(_PARAM_PLANS)}
+
+
+def warm_plans_from_params(params, dtype=jnp.float32) -> int:
+    """Pre-stage SpMM plans for every SparseLinear subtree in ``params``.
+
+    Walks the parameter tree for the RgCSR layout signature
+    (``values2d``/``columns2d``/``chunk_group``/``chunk_first``) and builds
+    each layer's plan once so the first *eager* per-layer call pays no
+    host-side plan work.  Scope limits, by construction:
+
+    * the jit'd prefill/decode path assembles plan containers at trace time
+      (free) and never consults this memo — warming helps eager paths only;
+    * layer-stacked (3-D) sparse params are skipped — the stacked scan path
+      only ever sees traced slices;
+    * ``d_in``/``d_out`` are inferred from the buffers (max column + 1,
+      ``n_groups·G``); an eager caller passing different exact dims simply
+      misses this entry and builds its own (dims are part of the memo key —
+      a misinferred warm entry can never shadow correct dims).
+
+    Returns #plans warmed.
+    """
+    warmed = 0
+
+    def visit(node) -> None:
+        nonlocal warmed
+        if not isinstance(node, dict):
+            return
+        if {"values2d", "columns2d", "chunk_group", "chunk_first"} <= set(node):
+            if getattr(node["values2d"], "ndim", 0) == 2:
+                g = int(node["columns2d"].shape[1])
+                n_groups = int(np.asarray(node["chunk_group"])[-1]) + 1 \
+                    if node["chunk_group"].shape[0] else 1
+                d_in = int(np.asarray(node["columns2d"]).max()) + 1
+                plan_from_params(node, dtype, d_out=n_groups * g,
+                                 d_in=d_in, group_size=g)
+                warmed += 1
+            return
+        for v in node.values():
+            visit(v)
+
+    visit(params)
+    return warmed
+
+
+# ---------------------------------------------------------------------------
+# ELLPACK
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,11 +8,18 @@ per stored element we still move ``itemsize + 4`` bytes of matrix but now do
 weight sparsity can pay on TPU despite SpMV itself being hopelessly
 memory-bound (paper §1: intensity ≤ 1).
 
-Schedule: grid ``(d_tiles, num_chunks)`` — chunk dim innermost so the output
+Schedule: grid ``(d_tiles, num_steps)`` — step dim innermost so the output
 block ``(group, d_tile)`` is revisited consecutively while a fixed
 ``(n_pad, DT)`` X panel stays VMEM-resident; the matrix streams once per
 d-tile (weights-streamed schedule; optimal when X-panel reuse dominates,
 i.e. small d — for large d swap the grid, see ops.spmm_grid_order).
+
+**Chunk coarsening** (DESIGN.md §3): one grid step processes
+``chunks_per_step`` 8-slot chunks of one group — the same step table and
+group-padded ``(S, G)`` storage as the SpMV kernel, so one
+:class:`repro.kernels.ops.RgCSRPlan` drives both kernels.  Coarsening
+amortizes the per-step grid overhead over ``8·chunks_per_step`` FMA waves
+and enlarges the per-step contiguous matrix DMA.
 """
 from __future__ import annotations
 
@@ -29,49 +36,53 @@ LANES = 128
 __all__ = ["rgcsr_spmm_kernel", "rgcsr_spmm_pallas"]
 
 
-def rgcsr_spmm_kernel(chunk_group_ref, chunk_first_ref,
+def rgcsr_spmm_kernel(step_group_ref, step_first_ref,
                       values_ref, columns_ref, x_ref, y_ref):
-    """Blocks: values/columns (8, G); x (n_pad, DT) whole-rows panel; y (G, DT)."""
-    c = pl.program_id(1)
+    """Blocks: values/columns (R, G), R = 8·chunks_per_step;
+    x (n_pad, DT) whole-rows panel; y (G, DT)."""
+    s = pl.program_id(1)
 
-    @pl.when(chunk_first_ref[c] == 1)
+    @pl.when(step_first_ref[s] == 1)
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
-    vals = values_ref[...]                      # (8, G)
-    cols = columns_ref[...]                     # (8, G)
+    vals = values_ref[...]                      # (R, G)
+    cols = columns_ref[...]                     # (R, G)
     x = x_ref[...]                              # (n_pad, DT)
     acc = y_ref[...]
-    for s in range(SUBLANES):                   # static unroll: 8 FMA waves
-        xg = jnp.take(x, cols[s], axis=0)       # (G, DT) row gather
-        acc = acc + vals[s][:, None] * xg
+    for k in range(vals.shape[0]):              # static unroll: R FMA waves
+        xg = jnp.take(x, cols[k], axis=0)       # (G, DT) row gather
+        acc = acc + vals[k][:, None] * xg
     y_ref[...] = acc
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("n_groups", "group_size", "d_tile", "interpret"))
-def rgcsr_spmm_pallas(chunk_group, chunk_first, values2d, columns2d, x_pad,
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_groups", "group_size", "d_tile", "chunks_per_step",
+                     "interpret"))
+def rgcsr_spmm_pallas(step_group, step_first, values2d, columns2d, x_pad,
                       *, n_groups: int, group_size: int, d_tile: int = LANES,
-                      interpret: bool = True):
+                      chunks_per_step: int = 1, interpret: bool = True):
     """Launch RgCSR SpMM.  ``x_pad``: (n_pad, d_pad); returns (n_groups*G, d_pad)."""
-    num_chunks = chunk_group.shape[0]
+    num_steps = step_group.shape[0]
     g = group_size
+    rows_per_step = chunks_per_step * SUBLANES
     n_pad, d_pad = x_pad.shape
     d_tiles = d_pad // d_tile
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(d_tiles, num_chunks),
+        grid=(d_tiles, num_steps),
         in_specs=[
-            pl.BlockSpec((SUBLANES, g), lambda t, c, cg, cf: (c, 0)),
-            pl.BlockSpec((SUBLANES, g), lambda t, c, cg, cf: (c, 0)),
-            pl.BlockSpec((n_pad, d_tile), lambda t, c, cg, cf: (0, t)),
+            pl.BlockSpec((rows_per_step, g), lambda t, s, sg, sf: (s, 0)),
+            pl.BlockSpec((rows_per_step, g), lambda t, s, sg, sf: (s, 0)),
+            pl.BlockSpec((n_pad, d_tile), lambda t, s, sg, sf: (0, t)),
         ],
-        out_specs=pl.BlockSpec((g, d_tile), lambda t, c, cg, cf: (cg[c], t)),
+        out_specs=pl.BlockSpec((g, d_tile), lambda t, s, sg, sf: (sg[s], t)),
     )
     return pl.pallas_call(
         rgcsr_spmm_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_groups * g, d_pad), values2d.dtype),
         interpret=interpret,
-    )(chunk_group, chunk_first, values2d, columns2d, x_pad)
+    )(step_group, step_first, values2d, columns2d, x_pad)

@@ -11,28 +11,44 @@ Mapping from the paper's CUDA kernel (§3.4) to TPU (DESIGN.md §2):
   equivalent of coalescing: contiguous, layout-aligned DMA.
 
 The ragged group structure (K_g varies per group — the whole point of RgCSR
-vs ELLPACK) is handled with a **chunk table** built at plan time:
+vs ELLPACK) is handled with a **step table** built at plan time
+(DESIGN.md §3):
 
 * the flat grouped storage is reshaped to ``values2d/columns2d: (S, G)``
-  where ``S = Σ_g K_g`` (each K_g padded to 8 sublanes);
-* chunk ``c`` covers slot rows ``[8c, 8c+8)`` and belongs to exactly one
-  group ``chunk_group[c]`` (K_g % 8 == 0 guarantees no chunk straddles);
-* the grid is ``(num_chunks,)`` — *no* grid step is spent on nonexistent
-  slots of short groups.  This realizes the paper's "skip meaningless
-  arithmetic via rowLengths" at DMA granularity, which is what matters on a
-  memory-bound op (the VPU flops on padding are free; the HBM bytes and
-  grid steps are not).
+  where ``S = Σ_g K_g`` (each K_g padded to ``8 · chunks_per_step``
+  sublanes);
+* grid step ``s`` covers slot rows ``[R·s, R·(s+1))`` with
+  ``R = 8 · chunks_per_step`` and belongs to exactly one group
+  ``step_group[s]`` (K_g % R == 0 guarantees no step straddles a group);
+* the grid is ``(num_steps, x_tiles)`` — *no* grid step is spent on
+  nonexistent slots of short groups.  This realizes the paper's "skip
+  meaningless arithmetic via rowLengths" at DMA granularity, which is what
+  matters on a memory-bound op (the VPU flops on padding are free; the HBM
+  bytes and grid steps are not).
 
-``x`` is staged into VMEM whole (the paper's texture-cache remedy, made
-explicit): valid while ``n * itemsize`` fits VMEM (≈4M fp32 elements).  The
-per-slot gather ``x[columns]`` is an in-VMEM vector gather.  For larger
-matrices, shard columns over the mesh (see repro.sharding) so each shard's
-x-slice fits — the distributed extension of the paper's caching argument.
+**Chunk coarsening** (``chunks_per_step`` ∈ {1, 2, 4, 8}): one grid step
+processes ``chunks_per_step`` 8-slot chunks of the same group, accumulating
+across the coarsened tile in-kernel.  Fewer grid steps → less per-step
+launch/DMA-descriptor overhead and a larger contiguous matrix DMA per step;
+the cost is padding short groups up to the coarsened tile (masked by exact
+zeros placed at plan time via the chunk table).  The autotuner
+(:mod:`repro.kernels.autotune`) measures this trade per matrix.
 
-Scalar-prefetch carries ``chunk_group`` (output index map) and
-``chunk_first`` (accumulator init).  The same output block is revisited only
-by consecutive grid steps (chunks of a group are contiguous), which is the
-Pallas TPU requirement for read-modify-write output accumulation.
+**Column-tiled x staging**: ``x`` is staged into VMEM in ``(1, XT)`` tiles
+instead of whole (the paper's texture-cache remedy, bounded): the inner grid
+dimension walks the tiles and per-element contributions outside the resident
+tile are masked.  With a single tile (``n_pad <= XT``) the kernel is
+bit-identical in structure to the uncoarsened seed kernel; with many tiles,
+matrices whose ``n_cols · itemsize`` exceeds the VMEM budget no longer fall
+off a cliff (previously: whole-``x`` staging failed or thrashed for
+``n ≳ 4M`` fp32 elements).  For distributed runs, additionally shard columns
+over the mesh (see repro.sharding).
+
+Scalar-prefetch carries ``step_group`` (output index map) and ``step_first``
+(accumulator init).  The same output block is revisited only by consecutive
+grid steps (steps of a group are contiguous, and all x-tiles of one step are
+consecutive inner iterations), which is the Pallas TPU requirement for
+read-modify-write output accumulation.
 """
 from __future__ import annotations
 
@@ -46,58 +62,97 @@ from jax.experimental.pallas import tpu as pltpu
 SUBLANES = 8
 LANES = 128
 
-__all__ = ["rgcsr_spmv_kernel", "rgcsr_spmv_pallas"]
+# Candidate coarsening factors: how many 8-slot chunks one grid step covers.
+CHUNKS_PER_STEP_CHOICES = (1, 2, 4, 8)
+
+__all__ = ["rgcsr_spmv_kernel", "rgcsr_spmv_pallas",
+           "CHUNKS_PER_STEP_CHOICES", "SUBLANES", "LANES"]
 
 
-def rgcsr_spmv_kernel(chunk_group_ref, chunk_first_ref,
-                      values_ref, columns_ref, x_ref, y_ref):
-    """Kernel body. Blocks: values/columns (8, G); x (1, n_pad) whole; y (1, G)."""
-    c = pl.program_id(0)
+def rgcsr_spmv_kernel(step_group_ref, step_first_ref,
+                      values_ref, columns_ref, x_ref, y_ref,
+                      *, x_tiled: bool):
+    """Kernel body.
 
-    @pl.when(chunk_first_ref[c] == 1)
+    Blocks: values/columns ``(R, G)`` with ``R = 8·chunks_per_step``;
+    x ``(1, XT)`` column tile; y ``(1, G)``.
+
+    ``x_tiled`` is static: with a single x tile the gather is unmasked
+    (identical arithmetic to the seed kernel); with several tiles each
+    element's contribution is masked to the resident tile.
+    """
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when((step_first_ref[s] == 1) & (t == 0))
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
-    vals = values_ref[...]                          # (8, G)
-    cols = columns_ref[...]                         # (8, G) int32
-    x = x_ref[0, :]                                 # (n_pad,)
-    gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
-    y_ref[...] += jnp.sum(vals * gathered, axis=0, keepdims=True)
+    vals = values_ref[...]                          # (R, G)
+    cols = columns_ref[...]                         # (R, G) int32
+    x = x_ref[0, :]                                 # (XT,)
+    if x_tiled:
+        xt = x_ref.shape[1]
+        local = cols - t * xt
+        in_tile = (local >= 0) & (local < xt)
+        safe = jnp.clip(local, 0, xt - 1)
+        gathered = jnp.take(x, safe.reshape(-1), axis=0).reshape(cols.shape)
+        prods = jnp.where(in_tile, vals * gathered, jnp.zeros_like(vals))
+    else:
+        gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
+        prods = vals * gathered
+    y_ref[...] += jnp.sum(prods, axis=0, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("n_groups", "group_size", "interpret"))
-def rgcsr_spmv_pallas(chunk_group, chunk_first, values2d, columns2d, x_pad,
-                      *, n_groups: int, group_size: int, interpret: bool = True):
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_groups", "group_size", "chunks_per_step", "x_tile",
+                     "interpret"))
+def rgcsr_spmv_pallas(step_group, step_first, values2d, columns2d, x_pad,
+                      *, n_groups: int, group_size: int,
+                      chunks_per_step: int = 1, x_tile: int | None = None,
+                      interpret: bool = True):
     """Launch the RgCSR SpMV kernel.
 
     Args:
-      chunk_group:  (num_chunks,) int32 — group id of each 8-slot chunk.
-      chunk_first:  (num_chunks,) int32 — 1 iff first chunk of its group.
-      values2d:     (S, G) slot-major values (S = total padded slots).
+      step_group:   (num_steps,) int32 — group id of each coarsened step.
+      step_first:   (num_steps,) int32 — 1 iff first step of its group.
+      values2d:     (S, G) slot-major values (S = total padded slots; every
+                    group's slot count is a multiple of 8·chunks_per_step).
       columns2d:    (S, G) int32 column indices (ghost index 0 on padding).
-      x_pad:        (1, n_pad) the dense vector, lane-padded.
-      n_groups, group_size: static layout parameters.
+      x_pad:        (1, n_pad) the dense vector, padded to a multiple of
+                    ``x_tile`` (or of 128 when untiled).
+      n_groups, group_size, chunks_per_step: static layout parameters.
+      x_tile:       x column-tile width (multiple of 128 dividing n_pad);
+                    None stages x whole (seed behaviour).
       interpret:    run in interpret mode (CPU validation) or compile for TPU.
 
     Returns:
       (n_groups, G) per-group result rows; caller reshapes/unpads.
     """
-    num_chunks = chunk_group.shape[0]
+    num_steps = step_group.shape[0]
     g = group_size
+    rows_per_step = chunks_per_step * SUBLANES
+    n_pad = x_pad.shape[1]
+    xt = n_pad if x_tile is None else x_tile
+    if n_pad % xt:
+        raise ValueError(f"x_tile {xt} must divide padded x width {n_pad}")
+    n_x_tiles = n_pad // xt
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(num_chunks,),
+        grid=(num_steps, n_x_tiles),
         in_specs=[
-            pl.BlockSpec((SUBLANES, g), lambda c, cg, cf: (c, 0)),
-            pl.BlockSpec((SUBLANES, g), lambda c, cg, cf: (c, 0)),
-            pl.BlockSpec((1, x_pad.shape[1]), lambda c, cg, cf: (0, 0)),
+            pl.BlockSpec((rows_per_step, g), lambda s, t, sg, sf: (s, 0)),
+            pl.BlockSpec((rows_per_step, g), lambda s, t, sg, sf: (s, 0)),
+            pl.BlockSpec((1, xt), lambda s, t, sg, sf: (0, t)),
         ],
-        out_specs=pl.BlockSpec((1, g), lambda c, cg, cf: (cg[c], 0)),
+        out_specs=pl.BlockSpec((1, g), lambda s, t, sg, sf: (sg[s], 0)),
     )
+    kernel = functools.partial(rgcsr_spmv_kernel, x_tiled=n_x_tiles > 1)
     return pl.pallas_call(
-        rgcsr_spmv_kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_groups, g), values2d.dtype),
         interpret=interpret,
-    )(chunk_group, chunk_first, values2d, columns2d, x_pad)
+    )(step_group, step_first, values2d, columns2d, x_pad)

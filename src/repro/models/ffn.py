@@ -163,13 +163,11 @@ def sparse_linear_apply(params, cfg, x, d_out: int):
     xt = x.reshape(-1, d_in).T                            # (d_in, T)
     n_groups = -(-d_out // g)
     if cfg.sparsity.impl_is_kernel():
-        from repro.kernels.ops import RgCSRPlan, rgcsr_spmm
-        plan = RgCSRPlan(
-            values2d=params["values2d"].astype(x.dtype),
-            columns2d=params["columns2d"],
-            chunk_group=params["chunk_group"],
-            chunk_first=params["chunk_first"],
-            n_rows=d_out, n_cols=d_in, n_groups=int(n_groups), group_size=g)
+        from repro.kernels.ops import plan_from_params, rgcsr_spmm
+        # memoized on the param identity (serving: built once per layer,
+        # warmed by Engine.__init__); free under jit tracing
+        plan = plan_from_params(params, x.dtype, d_out=d_out, d_in=d_in,
+                                group_size=g)
         y = rgcsr_spmm(plan, xt)                          # (d_out, T)
     else:
         # jnp oracle: segment-sum over slot-major storage (SPMD-shardable)

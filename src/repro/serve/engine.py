@@ -59,6 +59,28 @@ class Engine:
             lambda p, b: self.model.prefill(p, b, self.cfg.max_seq),
             static_argnums=())
         self._key = jax.random.PRNGKey(serve_cfg.seed)
+        # Sparse (RgCSR) weights: pre-stage kernel plan containers at model
+        # load for eager per-layer paths (DESIGN.md §3.2).  The jit'd
+        # prefill/decode below assemble their plans at trace time, so the
+        # latency path pays no per-call host plan work either way; warming
+        # is a no-op for layer-stacked param trees (plans_warmed == 0).
+        self.plans_warmed = 0
+        if model_cfg.sparsity.enabled and model_cfg.sparsity.impl_is_kernel():
+            from repro.kernels import ops as kops
+            # warm at the model's compute dtype — the dtype the eager apply
+            # path will request (a float32 default would never be hit under
+            # the bfloat16 default config)
+            self.plans_warmed = kops.warm_plans_from_params(
+                self.params, dtype=jnp.dtype(model_cfg.dtype))
+
+    def plan_cache_stats(self):
+        """Plan-cache counters: the matrix PlanCache (core spmv dispatch)
+        and the SparseLinear param-plan memo (this engine's sparse layers),
+        plus how many plans this engine warmed at init."""
+        from repro.kernels import ops as kops
+        return {"plan_cache": kops.PLAN_CACHE.stats(),
+                "param_plans": kops.param_plan_stats(),
+                "plans_warmed": self.plans_warmed}
 
     # ---------------------------------------------------------------- sample
     def _sample(self, logits) -> jax.Array:

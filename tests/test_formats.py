@@ -2,7 +2,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import FORMATS, from_dense, spmm, spmv
 from repro.core.analyze import GTX280, peak_model_gflops, row_stats

@@ -8,7 +8,8 @@ import dataclasses
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import from_dense
 from repro.kernels import (ell_spmv, make_ell_plan, make_plan, rgcsr_spmm,

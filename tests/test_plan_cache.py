@@ -1,0 +1,299 @@
+"""Plan construction, chunk coarsening, PlanCache semantics, autotuner.
+
+The coarsened kernel must be bit-identical (up to fp reassociation) to the
+jnp oracle at every ``chunks_per_step``; the cache must hit on repeat
+lookups, miss across configs, and evict with its matrix.
+"""
+import gc
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import from_dense
+from repro.core.spmv import spmv
+from repro.core.suite import generate
+from repro.kernels import autotune
+from repro.kernels.ops import (PLAN_CACHE, PlanCache, get_plan, make_plan,
+                               plan_from_params, rgcsr_spmv, rgcsr_spmm,
+                               warm_plans_from_params)
+
+CPS_ALL = (1, 2, 4, 8)
+
+
+def _rand(seed, n, m, density):
+    rng = np.random.default_rng(seed)
+    a = (rng.uniform(size=(n, m)) < density).astype(np.float32)
+    a *= rng.uniform(0.5, 1.5, size=(n, m)).astype(np.float32)
+    return a
+
+
+# ---------------------------------------------------------------- plan shape
+
+
+@pytest.mark.parametrize("cps", CPS_ALL)
+def test_plan_empty_matrix(cps):
+    a = np.zeros((0, 40), np.float32)
+    mat = from_dense(a, "rgcsr", group_size=128)
+    plan = make_plan(mat, chunks_per_step=cps)
+    assert plan.num_steps >= 1                     # one padded group
+    y = np.asarray(rgcsr_spmv(plan, jnp.zeros(40), interpret=True))
+    assert y.shape == (0,)
+
+
+@pytest.mark.parametrize("cps", CPS_ALL)
+def test_plan_single_group(cps):
+    a = _rand(0, 100, 80, 0.1)                     # 100 rows < one 128-group
+    mat = from_dense(a, "rgcsr", group_size=128)
+    plan = make_plan(mat, chunks_per_step=cps)
+    assert plan.n_groups == 1
+    assert plan.stored_slots % (8 * cps) == 0
+    x = np.random.default_rng(1).standard_normal(80).astype(np.float32)
+    got = np.asarray(rgcsr_spmv(plan, jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, a @ x, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("cps", CPS_ALL)
+def test_plan_ragged_last_group(cps):
+    a = _rand(1, 300, 120, 0.08)                   # 300 = 2 full + 44 ragged
+    mat = from_dense(a, "rgcsr", group_size=128)
+    plan = make_plan(mat, chunks_per_step=cps)
+    assert plan.n_groups == 3
+    x = np.random.default_rng(2).standard_normal(120).astype(np.float32)
+    got = np.asarray(rgcsr_spmv(plan, jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, a @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_cps_exceeds_chunks_in_group_masking():
+    """Groups with a single 8-slot chunk padded up to an 8-chunk step: the
+    padding rows are exact zeros (ghost column 0) — masked accumulation."""
+    a = _rand(2, 256, 64, 0.03)                    # sparse: K_g = 8 per group
+    mat = from_dense(a, "rgcsr", group_size=128)
+    base = make_plan(mat, chunks_per_step=1)
+    assert base.stored_slots == 16                 # 2 groups x 8 slots
+    plan = make_plan(mat, chunks_per_step=8)
+    assert plan.stored_slots == 128                # padded to 64 slots each
+    assert plan.num_steps == 2                     # one coarse step per group
+    x = np.random.default_rng(3).standard_normal(64).astype(np.float32)
+    got = np.asarray(rgcsr_spmv(plan, jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, a @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_plan_rejects_bad_chunks_per_step():
+    mat = from_dense(_rand(3, 64, 64, 0.1), "rgcsr", group_size=128)
+    with pytest.raises(ValueError):
+        make_plan(mat, chunks_per_step=3)
+
+
+# ------------------------------------------------- oracle equivalence sweep
+
+
+@pytest.mark.parametrize("family", ["stencil", "uniform", "circuit",
+                                    "powerlaw", "banded"])
+@pytest.mark.parametrize("cps", CPS_ALL)
+def test_coarsened_matches_oracle_on_corpus(family, cps):
+    a = generate(family, 256, seed=0)
+    mat = from_dense(a, "rgcsr", group_size=128)
+    x = np.random.default_rng(4).standard_normal(a.shape[1]).astype(np.float32)
+    ref = np.asarray(spmv(mat, jnp.asarray(x), impl="ref"))
+    plan = make_plan(mat, chunks_per_step=cps)
+    got = np.asarray(rgcsr_spmv(plan, jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_spmv_x_tiling_matches_untiled():
+    a = _rand(5, 130, 1000, 0.02)
+    mat = from_dense(a, "rgcsr", group_size=128)
+    plan = make_plan(mat, chunks_per_step=2)
+    x = np.random.default_rng(6).standard_normal(1000).astype(np.float32)
+    whole = np.asarray(rgcsr_spmv(plan, jnp.asarray(x), interpret=True))
+    tiled = np.asarray(rgcsr_spmv(plan, jnp.asarray(x), interpret=True,
+                                  x_tile=128))
+    np.testing.assert_allclose(tiled, whole, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(tiled, a @ x, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("cps", (1, 4))
+def test_coarsened_spmm(cps):
+    a = _rand(7, 150, 140, 0.07)
+    mat = from_dense(a, "rgcsr", group_size=128)
+    plan = make_plan(mat, chunks_per_step=cps)
+    x = np.random.default_rng(8).standard_normal((140, 9)).astype(np.float32)
+    got = np.asarray(rgcsr_spmm(plan, jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, a @ x, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------------- cache
+
+
+def test_plan_cache_hit_miss_semantics():
+    cache = PlanCache(maxsize=8)
+    mat = from_dense(_rand(9, 64, 64, 0.1), "rgcsr", group_size=128)
+    p1 = cache.get(mat)
+    assert cache.stats() == {"hits": 0, "misses": 1, "entries": 1}
+    p2 = cache.get(mat)
+    assert p2 is p1                                # same object, no rebuild
+    assert cache.stats()["hits"] == 1
+    p4 = cache.get(mat, chunks_per_step=4)        # different config → miss
+    assert p4 is not p1
+    assert cache.stats() == {"hits": 1, "misses": 2, "entries": 2}
+    other = from_dense(_rand(10, 64, 64, 0.1), "rgcsr", group_size=128)
+    cache.get(other)                               # different matrix → miss
+    assert cache.stats()["misses"] == 3
+
+
+def test_plan_cache_evicts_on_gc():
+    cache = PlanCache(maxsize=8)
+    mat = from_dense(_rand(11, 64, 64, 0.1), "rgcsr", group_size=128)
+    cache.get(mat)
+    cache.get(mat, chunks_per_step=2)
+    assert len(cache) == 2
+    del mat
+    gc.collect()
+    assert len(cache) == 0
+
+
+def test_plan_cache_lru_bound():
+    cache = PlanCache(maxsize=2)
+    mats = [from_dense(_rand(20 + i, 64, 64, 0.1), "rgcsr", group_size=128)
+            for i in range(4)]
+    for m in mats:
+        cache.get(m)
+    assert len(cache) == 2                         # oldest two evicted
+
+
+def test_global_get_plan_and_spmv_kernel_dispatch():
+    mat = from_dense(_rand(12, 96, 96, 0.08), "rgcsr", group_size=128)
+    x = np.random.default_rng(13).standard_normal(96).astype(np.float32)
+    before = PLAN_CACHE.stats()
+    y_k = np.asarray(spmv(mat, jnp.asarray(x), impl="kernel"))
+    y_r = np.asarray(spmv(mat, jnp.asarray(x), impl="ref"))
+    np.testing.assert_allclose(y_k, y_r, rtol=1e-4, atol=1e-4)
+    spmv(mat, jnp.asarray(x), impl="kernel")      # second call: cache hit
+    after = PLAN_CACHE.stats()
+    assert after["misses"] == before["misses"] + 1
+    assert after["hits"] >= before["hits"] + 1
+    assert get_plan(mat) is get_plan(mat)
+
+
+# ----------------------------------------------------- param plans / warmup
+
+
+def _sparse_params(seed, n_groups=2, g=128, k=16, d_in=64):
+    rng = np.random.default_rng(seed)
+    s = n_groups * k
+    cols = np.stack([np.sort(rng.choice(d_in, size=k, replace=False))
+                     for _ in range(n_groups * g)]).astype(np.int32)
+    cols = cols.reshape(n_groups, g, k).transpose(0, 2, 1).reshape(s, g)
+    return {
+        "values2d": jnp.asarray(rng.standard_normal((s, g)).astype(np.float32)),
+        "columns2d": jnp.asarray(cols),
+        "chunk_group": jnp.asarray(
+            np.repeat(np.arange(n_groups, dtype=np.int32), k // 8)),
+        "chunk_first": jnp.asarray(np.tile(
+            np.eye(1, k // 8, dtype=np.int32)[0], n_groups)),
+    }
+
+
+def test_plan_from_params_memoizes_on_identity():
+    params = _sparse_params(0)
+    p1 = plan_from_params(params, jnp.float32, d_out=200, d_in=64,
+                          group_size=128)
+    p2 = plan_from_params(params, jnp.float32, d_out=200, d_in=64,
+                          group_size=128)
+    assert p2 is p1
+    # new values (a training step) invalidates the memo
+    params2 = dict(params, values2d=params["values2d"] + 1.0)
+    p3 = plan_from_params(params2, jnp.float32, d_out=200, d_in=64,
+                          group_size=128)
+    assert p3 is not p1
+
+
+def test_warm_plans_from_params_walks_tree():
+    tree = {"layer0": {"ffn": {"w_out": _sparse_params(1)}},
+            "layer1": {"dense": {"w": jnp.zeros((4, 4))}}}
+    assert warm_plans_from_params(tree) == 1
+
+
+# ------------------------------------------------------------- autotune
+
+
+def test_autotune_picks_valid_config_and_memoizes():
+    autotune.clear_memo()
+    a = generate("uniform", 256, seed=0)
+    res = autotune.autotune_spmv(a, repeats=1)
+    assert res.config.chunks_per_step in CPS_ALL
+    assert res.config.group_size in autotune.DEFAULT_GROUP_SIZES
+    assert res.us_per_call > 0 and len(res.timings) >= 2
+    assert not res.from_memo
+    res2 = autotune.autotune_spmv(a, repeats=1)
+    assert res2.from_memo and res2.config == res.config
+    # same signature bucket → winner reuse without re-timing
+    res3 = autotune.autotune_spmv(generate("uniform", 256, seed=1), repeats=1)
+    assert res3.from_memo
+
+
+def test_autotune_prefers_coarsening_on_chunky_matrix():
+    """Interpret mode pays per grid step, so a matrix with many chunks per
+    group must tune to chunks_per_step > 1 (the acceptance criterion's
+    'selects coarsening on at least one corpus matrix')."""
+    autotune.clear_memo()
+    a = generate("banded", 256, seed=0)            # ~4 chunks per group
+    res = autotune.autotune_spmv(a, repeats=2)
+    assert res.config.chunks_per_step > 1
+    assert res.speedup >= 1.0
+
+
+def test_tuned_plan_roundtrip():
+    autotune.clear_memo()
+    a = generate("circuit", 256, seed=0)
+    plan, res = autotune.tuned_plan(a, repeats=1)
+    assert plan.chunks_per_step == res.config.chunks_per_step
+    x = np.random.default_rng(0).standard_normal(a.shape[1]).astype(np.float32)
+    got = np.asarray(rgcsr_spmv(plan, jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, a @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_tuned_plan_survives_gc_and_reuses():
+    """The winning matrix is retained, so the PLAN_CACHE entry must not be
+    evicted at return and repeat calls must hand back the same plan."""
+    autotune.clear_memo()
+    a = generate("banded", 256, seed=3)
+    plan1, _ = autotune.tuned_plan(a, repeats=1)
+    gc.collect()                                   # would fire the finalizer
+    plan2, res2 = autotune.tuned_plan(a, repeats=1)
+    assert plan2 is plan1
+    assert res2.from_memo
+
+
+def test_spmv_impl_validated_for_all_formats():
+    csr = from_dense(_rand(30, 32, 32, 0.1), "csr")
+    x = jnp.zeros(32)
+    with pytest.raises(ValueError, match="unknown impl"):
+        spmv(csr, x, impl="kernal")                # typo'd, non-RgCSR input
+
+
+def test_auto_dispatch_skips_kernel_incompatible(monkeypatch):
+    """impl='auto' on TPU must leave small modeled group sizes (the format
+    tests sweep g ∈ {4,8,32}) on the oracle instead of crashing in
+    make_plan."""
+    import importlib
+    spmv_mod = importlib.import_module("repro.core.spmv")
+    monkeypatch.setattr(spmv_mod.jax, "default_backend", lambda: "tpu")
+    small = from_dense(_rand(31, 40, 40, 0.1), "rgcsr", group_size=32,
+                       slot_pad=4)
+    assert not spmv_mod._use_kernel(small, "auto")
+    ok = from_dense(_rand(32, 40, 40, 0.1), "rgcsr", group_size=128)
+    assert spmv_mod._use_kernel(ok, "auto")
+
+
+def test_autotune_restricted_candidates_not_shadowed():
+    """A candidate-restricted search must never be answered from the memo
+    of a wider search: its winner must come from its own candidate set."""
+    autotune.clear_memo()
+    a = generate("uniform", 256, seed=0)
+    autotune.autotune_spmv(a, repeats=1)           # full-grid winner memoized
+    cands = [autotune.TuneConfig(1, 128), autotune.TuneConfig(2, 128)]
+    res = autotune.autotune_spmv(a, repeats=1, candidates=cands)
+    assert not res.from_memo
+    assert res.config in cands
