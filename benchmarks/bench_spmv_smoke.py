@@ -7,9 +7,17 @@ trajectory of the kernel pipeline is tracked from PR 1 onward:
 
 Per matrix it records the jnp-oracle µs/call for the reference formats, the
 Pallas RgCSR kernel µs/call + grid steps at ``chunks_per_step`` 1 (the seed
-schedule) and 4 (the coarsened schedule), and the autotuner's winning
-config.  The summary aggregates the grid-step reduction and the tuned
-speedup — the two acceptance figures of the coarsening PR.
+schedule) and 4 (the coarsened schedule), the **adaptive** regrouped plan
+(descending-length grouping + heuristic pathological-row spill, DESIGN.md
+§5) with its ``padded_slot_fraction``, and the autotuner's winning config
+from the joint ``(chunks, group, ordering, spill)`` search.  The summary
+aggregates the grid-step reduction, the tuned speedup, and the
+padding-reduction on the skewed (powerlaw/circuit) subset — the acceptance
+figures of the coarsening (PR 1) and adaptive-grouping (PR 2) changes.
+
+CI then gates on ``benchmarks/check_bench_regression.py``: the committed
+``BENCH_spmv.json`` is the baseline, and a ≥10% tuned-geomean regression
+fails the build.
 
 Numbers are CPU interpret-mode on this container: per-grid-step overhead is
 Python-level, so the *relative* effect of coarsening (fewer steps) is
@@ -31,8 +39,18 @@ from benchmarks.common import emit, spmv_gflops_measured, spmv_us_kernel
 from repro.core import from_dense
 from repro.core.suite import small_corpus
 from repro.kernels import autotune
+from repro.kernels import ops as kops
 
 ORACLE_FORMATS = ("csr", "ellpack", "rgcsr")
+
+# families with skewed row-length profiles — where adaptive grouping must win
+SKEWED_FAMILIES = ("powerlaw", "circuit")
+
+
+def _heuristic_spill(a: np.ndarray) -> int:
+    """First matrix-derived spill threshold (0 when the profile is flat)."""
+    cands = autotune.spill_threshold_candidates((a != 0).sum(axis=1))
+    return cands[1] if len(cands) > 1 else 0
 
 
 def bench_one(spec, *, repeats: int, tune_max_n: int) -> Dict:
@@ -41,7 +59,7 @@ def bench_one(spec, *, repeats: int, tune_max_n: int) -> Dict:
         np.random.default_rng(1).standard_normal(a.shape[1])
         .astype(np.float32))
     row: Dict = {"n": int(a.shape[0]), "nnz": int((a != 0).sum()),
-                 "formats_us": {}, "kernel": {}}
+                 "family": spec.family, "formats_us": {}, "kernel": {}}
 
     for fmt in ORACLE_FORMATS:
         mat = from_dense(a, fmt)
@@ -52,27 +70,63 @@ def bench_one(spec, *, repeats: int, tune_max_n: int) -> Dict:
     rg = from_dense(a, "rgcsr")
     us1, steps1 = spmv_us_kernel(rg, x, chunks_per_step=1, repeats=repeats)
     us4, steps4 = spmv_us_kernel(rg, x, chunks_per_step=4, repeats=repeats)
+    spill = _heuristic_spill(a)
+    usa, steps_a = spmv_us_kernel(rg, x, chunks_per_step=1,
+                                  ordering="adaptive",
+                                  spill_threshold=spill, repeats=repeats)
+    plan_block = kops.get_plan(rg, chunks_per_step=1)
+    plan_adapt = kops.get_plan(rg, chunks_per_step=1, ordering="adaptive",
+                               spill_threshold=spill)
     row["kernel"] = {
         "us_cps1": round(us1, 2), "steps_cps1": steps1,
         "us_cps4": round(us4, 2), "steps_cps4": steps4,
         "step_reduction_cps4": round(steps1 / max(steps4, 1), 3),
+        "us_adaptive": round(usa, 2), "steps_adaptive": steps_a,
+        "adaptive_spill_threshold": spill,
+        "padded_slot_fraction_block":
+            round(plan_block.padded_slot_fraction, 4),
+        "padded_slot_fraction_adaptive":
+            round(plan_adapt.padded_slot_fraction, 4),
+        # artificial zeros stored (= wasted HBM bytes / itemsize+4); the
+        # unsaturated twin of the fraction above — the fraction has hard
+        # floors (128-lane groups when n < G, 8-slot sublane alignment)
+        # that padding-count reduction does not.
+        "padded_slots_block":
+            plan_block.stored_elements - plan_block.nnz,
+        "padded_slots_adaptive":
+            plan_adapt.stored_elements - plan_adapt.nnz,
     }
-    emit(f"{spec.name}/rgcsr_kernel_cps1", us1, f"steps={steps1}")
+    emit(f"{spec.name}/rgcsr_kernel_cps1", us1,
+         f"steps={steps1},padfrac={plan_block.padded_slot_fraction:.3f}")
     emit(f"{spec.name}/rgcsr_kernel_cps4", us4, f"steps={steps4}")
+    emit(f"{spec.name}/rgcsr_kernel_adaptive", usa,
+         f"steps={steps_a},spill={spill},"
+         f"padfrac={plan_adapt.padded_slot_fraction:.3f}")
 
     if a.shape[0] <= tune_max_n:
         result = autotune.autotune_spmv(a, repeats=repeats)
+        win = result.config
+        tuned_plan, _ = autotune.tuned_plan(a, repeats=repeats)
         row["kernel"]["tuned"] = {
-            "chunks_per_step": result.config.chunks_per_step,
-            "group_size": result.config.group_size,
+            "chunks_per_step": win.chunks_per_step,
+            "group_size": win.group_size,
+            "ordering": win.ordering,
+            "spill_threshold": win.spill_threshold,
             "us": round(result.us_per_call, 2),
             "speedup_vs_baseline": round(result.speedup, 3),
+            "padded_slot_fraction":
+                round(tuned_plan.padded_slot_fraction, 4),
             "from_memo": result.from_memo,
         }
         emit(f"{spec.name}/rgcsr_kernel_tuned", result.us_per_call,
-             f"cps={result.config.chunks_per_step},"
-             f"g={result.config.group_size}")
+             f"cps={win.chunks_per_step},g={win.group_size},"
+             f"ord={win.ordering},spill={win.spill_threshold}")
     return row
+
+
+def _geomean(vals) -> float:
+    vals = np.asarray([max(float(v), 1e-9) for v in vals])
+    return float(np.exp(np.log(vals).mean())) if vals.size else float("nan")
 
 
 def main(argv=None) -> int:
@@ -92,25 +146,50 @@ def main(argv=None) -> int:
         matrices[spec.name] = bench_one(spec, repeats=args.repeats,
                                         tune_max_n=args.tune_max_n)
 
-    steps1 = sum(m["kernel"]["steps_cps1"] for m in matrices.values())
-    steps4 = sum(m["kernel"]["steps_cps4"] for m in matrices.values())
-    tuned = [m["kernel"]["tuned"] for m in matrices.values()
-             if "tuned" in m["kernel"]]
-    us1 = np.array([m["kernel"]["us_cps1"] for m in matrices.values()])
-    us4 = np.array([m["kernel"]["us_cps4"] for m in matrices.values()])
+    kernels = [m["kernel"] for m in matrices.values()]
+    steps1 = sum(k["steps_cps1"] for k in kernels)
+    steps4 = sum(k["steps_cps4"] for k in kernels)
+    tuned = [k["tuned"] for k in kernels if "tuned" in k]
+    skewed = [m["kernel"] for m in matrices.values()
+              if m["family"] in SKEWED_FAMILIES]
+    skewed_tuned = [m["kernel"]["tuned"] for m in matrices.values()
+                    if m["family"] in SKEWED_FAMILIES
+                    and "tuned" in m["kernel"]]
     summary = {
         "total_grid_steps_cps1": steps1,
         "total_grid_steps_cps4": steps4,
         "overall_step_reduction_cps4": round(steps1 / max(steps4, 1), 3),
-        "kernel_us_geomean_cps1": round(float(np.exp(np.log(us1).mean())), 2),
-        "kernel_us_geomean_cps4": round(float(np.exp(np.log(us4).mean())), 2),
-        "kernel_us_geomean_tuned": round(float(np.exp(np.mean(
-            [np.log(t["us"]) for t in tuned]))), 2) if tuned else None,
+        "kernel_us_geomean_cps1": round(
+            _geomean(k["us_cps1"] for k in kernels), 2),
+        "kernel_us_geomean_cps4": round(
+            _geomean(k["us_cps4"] for k in kernels), 2),
+        "kernel_us_geomean_adaptive": round(
+            _geomean(k["us_adaptive"] for k in kernels), 2),
+        "kernel_us_geomean_tuned": round(
+            _geomean(t["us"] for t in tuned), 2) if tuned else None,
         "n_autotuned": len(tuned),
         "n_tuned_coarsened": sum(t["chunks_per_step"] > 1 for t in tuned),
-        "tuned_speedup_geomean": round(float(np.exp(np.mean(
-            [np.log(max(t["speedup_vs_baseline"], 1e-9)) for t in tuned]
-        ))), 3) if tuned else None,
+        "n_tuned_adaptive": sum(t["ordering"] == "adaptive" for t in tuned),
+        "tuned_speedup_geomean": round(_geomean(
+            t["speedup_vs_baseline"] for t in tuned), 3) if tuned else None,
+        # the adaptive-grouping acceptance figures (skewed subset)
+        "skewed_padfrac_block_mean": round(float(np.mean(
+            [k["padded_slot_fraction_block"] for k in skewed])), 4)
+            if skewed else None,
+        "skewed_padfrac_adaptive_mean": round(float(np.mean(
+            [k["padded_slot_fraction_adaptive"] for k in skewed])), 4)
+            if skewed else None,
+        "skewed_padded_slots_reduction_geomean": round(_geomean(
+            k["padded_slots_block"] / max(k["padded_slots_adaptive"], 1)
+            for k in skewed), 2) if skewed else None,
+        "skewed_us_geomean_cps1": round(
+            _geomean(k["us_cps1"] for k in skewed), 2) if skewed else None,
+        "skewed_us_geomean_adaptive": round(
+            _geomean(k["us_adaptive"] for k in skewed), 2)
+            if skewed else None,
+        "skewed_us_geomean_tuned": round(
+            _geomean(t["us"] for t in skewed_tuned), 2)
+            if skewed_tuned else None,
     }
     doc = {
         "meta": {
@@ -127,8 +206,11 @@ def main(argv=None) -> int:
         json.dump(doc, f, indent=2)
     print(f"# wrote {args.out}: steps {steps1}→{steps4} "
           f"({summary['overall_step_reduction_cps4']}x), "
-          f"{summary['n_tuned_coarsened']}/{summary['n_autotuned']} matrices "
-          f"tuned to chunks_per_step>1")
+          f"{summary['n_tuned_coarsened']}/{summary['n_autotuned']} tuned to "
+          f"cps>1, {summary['n_tuned_adaptive']}/{summary['n_autotuned']} "
+          f"tuned to adaptive; skewed padfrac "
+          f"{summary['skewed_padfrac_block_mean']}→"
+          f"{summary['skewed_padfrac_adaptive_mean']}")
     return 0
 
 

@@ -1,0 +1,93 @@
+"""CI perf gate: diff a fresh BENCH_spmv.json against the committed baseline.
+
+    python benchmarks/check_bench_regression.py \
+        --baseline BENCH_baseline.json --new BENCH_spmv.json \
+        --max-geomean-regression 0.10
+
+Interpret-mode µs are machine-speed-dependent, and the committed baseline
+was produced on a different machine than the CI runner — so the gate
+compares a **within-run normalized** metric: each matrix's tuned kernel µs
+divided by the *same run's* cps=1 block-schedule µs.  Uniform machine speed
+cancels out of that ratio; what remains is how much the tuned schedule
+beats the fixed reference schedule, which is exactly what a code regression
+in the plan/tuner/kernel pipeline degrades.  Matrices without a tuned
+entry on both sides are skipped (adding/dropping a tuner entry for one
+matrix cannot flip the gate).
+
+The gate fails when the geomean of (normalized_new / normalized_baseline)
+exceeds ``1 + threshold`` (default: 10%).  Per-matrix ratios print
+worst-first so a red run names its regressing matrices; the gate is on the
+geomean, not the max, because per-matrix interpret-mode jitter is large.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+
+def _normalized_us(kernel: dict):
+    """tuned µs / same-run cps=1 µs, or None when not comparable."""
+    tuned = kernel.get("tuned")
+    base = float(kernel.get("us_cps1", 0))
+    if tuned is None or base <= 0:
+        return None
+    return float(tuned["us"]) / base
+
+
+def compare(baseline: dict, new: dict):
+    """Returns (ratios {name: normalized_new/normalized_old}, geomean)."""
+    ratios = {}
+    for name, row in new.get("matrices", {}).items():
+        base_row = baseline.get("matrices", {}).get(name)
+        if base_row is None:
+            continue
+        old = _normalized_us(base_row["kernel"])
+        cur = _normalized_us(row["kernel"])
+        if old and cur:
+            ratios[name] = cur / old
+    if not ratios:
+        return ratios, 1.0
+    geomean = float(np.exp(np.mean([np.log(r) for r in ratios.values()])))
+    return ratios, geomean
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--new", required=True)
+    ap.add_argument("--max-geomean-regression", type=float, default=0.10,
+                    help="fail when geomean(new/baseline) > 1 + this")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+
+    ratios, geomean = compare(baseline, new)
+    if not ratios:
+        print("# no comparable matrices between baseline and new run; "
+              "nothing to gate")
+        return 0
+
+    for name, r in sorted(ratios.items(), key=lambda kv: -kv[1]):
+        flag = " <-- regressed" if r > 1.0 + args.max_geomean_regression \
+            else ""
+        print(f"{name},{r:.3f}{flag}")
+    limit = 1.0 + args.max_geomean_regression
+    print(f"# geomean of normalized tuned-us ratios = {geomean:.3f} "
+          f"(limit {limit:.3f}, {len(ratios)} matrices)")
+    if geomean > limit:
+        print(f"# FAIL: tuned SpMV (normalized to the in-run cps=1 "
+              f"schedule) regressed {100 * (geomean - 1):.1f}% > "
+              f"{100 * args.max_geomean_regression:.0f}%", file=sys.stderr)
+        return 1
+    print("# PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,12 +43,16 @@ def spmv_gflops_measured(mat, x, repeats: int = 5) -> Tuple[float, float]:
 
 
 def spmv_us_kernel(mat, x, *, chunks_per_step: int = 1, repeats: int = 5,
+                   ordering: str = "block", spill_threshold: int = 0,
                    interpret: bool | None = None) -> Tuple[float, int]:
     """µs/call of the Pallas RgCSR kernel through the process-wide PlanCache
     (plan built once, not per call).  Returns ``(us_per_call, grid_steps)``.
+    ``ordering``/``spill_threshold`` select the adaptive regrouped plan
+    (DESIGN.md §5); timing includes its fused gather/spill epilogue.
     """
     from repro.kernels import ops as kops
-    plan = kops.get_plan(mat, chunks_per_step=chunks_per_step)
+    plan = kops.get_plan(mat, chunks_per_step=chunks_per_step,
+                         ordering=ordering, spill_threshold=spill_threshold)
     us = time_us(lambda p, v: kops.rgcsr_spmv(p, v, interpret=interpret),
                  plan, x, repeats=repeats)
     return us, plan.num_steps
@@ -61,7 +65,7 @@ def bench_corpus(small_only: bool = False) -> List[MatrixSpec]:
                   seeds=(0,))
 
 
-# the paper's small/large boundary, scaled with the corpus (DESIGN.md §8)
+# the paper's small/large boundary, scaled with the corpus (DESIGN.md §9)
 LARGE_BOUNDARY = 2048
 
 

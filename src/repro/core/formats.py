@@ -568,6 +568,31 @@ class RgCSR:
         np.add.at(out, (rows[mask], cols[mask]), vals[mask])
         return out
 
+    def to_csr_arrays(self):
+        """Host CSR triplet ``(values, columns, row_ptr)`` recovered from the
+        grouped slot-major storage — no densification.
+
+        Used by the adaptive planner (kernels/ops, ordering='adaptive') to
+        regroup rows by length.  Extraction is *positional*: row ``r`` owns
+        slots ``[0, row_lengths[r])`` of its lane, i.e. flat indices
+        ``group_pointers[r // G] + slot·G + (r % G)``.  Selecting by stored
+        value (``!= 0``) would misalign every subsequent row if a true
+        element happens to equal 0.0 (e.g. a trained value crossing zero),
+        so positions — not values — define membership.
+        """
+        vals = np.asarray(self.values)
+        cols = np.asarray(self.columns)
+        g = self.group_size
+        row_lens = np.asarray(self.row_lengths).astype(np.int64)
+        gp = np.asarray(self.group_pointers).astype(np.int64)
+        row_ptr = np.concatenate([[0], np.cumsum(row_lens)])
+        total = int(row_ptr[-1])
+        rows = np.repeat(np.arange(len(row_lens), dtype=np.int64), row_lens)
+        slot = np.arange(total, dtype=np.int64) - np.repeat(
+            row_ptr[:-1], row_lens)
+        flat = gp[rows // g] + slot * g + (rows % g)
+        return vals[flat], cols[flat], row_ptr
+
 
 @_tree_dataclass
 class SlicedEllpack:

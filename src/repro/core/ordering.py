@@ -10,17 +10,21 @@ The paper evaluates three orderings of the row index:
   (reverse Cuthill–McKee, via scipy) — the same role in the experiment: a
   bandwidth/profile-reducing symmetric permutation that improves x-reuse at
   the cost of more artificial zeros than descending.  The substitution is
-  recorded in DESIGN.md §7 and labeled in every benchmark table.
+  recorded in DESIGN.md §8 and labeled in every benchmark table.
 
 All orderings are host-side (numpy/scipy) — format construction time, exactly
 as in the paper.
 """
 from __future__ import annotations
 
+from typing import Tuple
+
 import numpy as np
 
 __all__ = [
     "descending_ordering",
+    "descending_from_lengths",
+    "split_spill_rows",
     "rcm_ordering",
     "random_ordering",
     "permute_rows",
@@ -33,6 +37,35 @@ def descending_ordering(dense: np.ndarray) -> np.ndarray:
     """Permutation sorting rows by decreasing nonzero count (stable)."""
     row_lens = (np.asarray(dense) != 0).sum(axis=1)
     return np.argsort(-row_lens, kind="stable")
+
+
+def descending_from_lengths(row_lens: np.ndarray) -> np.ndarray:
+    """Descending-length permutation straight from a row-length vector.
+
+    The adaptive RgCSR planner (kernels/ops.make_plan, ordering='adaptive')
+    already holds exact per-row nonzero counts, so it permutes without
+    touching the dense matrix.  Stable: equal-length rows keep their
+    original relative order, which keeps the permutation deterministic and
+    x-locality as good as descending allows.
+    """
+    return np.argsort(-np.asarray(row_lens), kind="stable")
+
+
+def split_spill_rows(row_lens: np.ndarray, threshold: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """(grouped_rows, spilled_rows) split at ``threshold`` nonzeros.
+
+    Rows longer than ``threshold`` are pathological for any grouped padded
+    format (one long row inflates its whole group's slot count, paper
+    Table 6); the adaptive planner routes them to a COO tail instead
+    (Bell–Garland Hybrid spill).  ``threshold <= 0`` disables spilling.
+    """
+    row_lens = np.asarray(row_lens)
+    if threshold <= 0:
+        return np.arange(len(row_lens)), np.empty(0, dtype=np.int64)
+    spilled = np.nonzero(row_lens > threshold)[0]
+    grouped = np.nonzero(row_lens <= threshold)[0]
+    return grouped, spilled
 
 
 def rcm_ordering(dense: np.ndarray) -> np.ndarray:

@@ -200,28 +200,40 @@ def _use_kernel(a, impl: str) -> bool:
             and a.group_size % 128 == 0 and a.slot_pad % 8 == 0)
 
 
-def spmv(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1):
+def spmv(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1,
+         ordering: str = "block", spill_threshold: int = 0):
     """``y = A @ x`` for any of the paper's formats.
 
     RgCSR matrices can dispatch to the Pallas kernel through the process-wide
     :data:`repro.kernels.ops.PLAN_CACHE` (see ``impl`` in :func:`_use_kernel`)
     so repeated SpMV on the same matrix — the serving / iterative-solver
     pattern — builds its host-side execution plan exactly once.
+
+    ``ordering='adaptive'`` selects the length-aware regrouped plan (and,
+    with ``spill_threshold > 0``, the pathological-row COO spill); results
+    are identical up to fp reassociation — the plan's fused inverse gather
+    restores the original row order.  Oracle paths ignore both knobs.
     """
     if _use_kernel(a, impl):
         from repro.kernels import ops as kops
-        plan = kops.get_plan(a, chunks_per_step=chunks_per_step)
+        plan = kops.get_plan(a, chunks_per_step=chunks_per_step,
+                             ordering=ordering,
+                             spill_threshold=spill_threshold)
         return kops.rgcsr_spmv(plan, x)
     return _SPMV[type(a)](a, x)
 
 
-def spmm(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1):
+def spmm(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1,
+         ordering: str = "block", spill_threshold: int = 0):
     """``Y = A @ X`` (X dense ``(n, d)``) for any of the paper's formats.
 
-    Same PlanCache-backed kernel dispatch as :func:`spmv`.
+    Same PlanCache-backed kernel dispatch (and adaptive-plan knobs) as
+    :func:`spmv`.
     """
     if _use_kernel(a, impl):
         from repro.kernels import ops as kops
-        plan = kops.get_plan(a, chunks_per_step=chunks_per_step)
+        plan = kops.get_plan(a, chunks_per_step=chunks_per_step,
+                             ordering=ordering,
+                             spill_threshold=spill_threshold)
         return kops.rgcsr_spmm(plan, x)
     return _SPMM[type(a)](a, x)

@@ -25,5 +25,6 @@ from repro.kernels.autotune import (  # noqa: F401
     autotune_spmm,
     autotune_spmv,
     matrix_signature,
+    spill_threshold_candidates,
     tuned_plan,
 )

@@ -9,7 +9,13 @@ chosen per matrix.  For our pipeline the knobs are:
 * ``group_size``      — rows per RgCSR group: fill ratio vs lane utilization
   (the paper's Table 4 experiment, now closed-loop);
 * ``d_tile``          — SpMM dense-width tile: X-panel residency vs output
-  block pressure.
+  block pressure;
+* ``ordering``        — block (consecutive rows, PR 1) vs adaptive
+  (descending-length regrouping, DESIGN.md §5): less padding on skewed
+  row-length profiles vs an output gather on the epilogue;
+* ``spill_threshold`` — adaptive only: rows longer than this leave the
+  grouped storage for a COO tail (the Table 6 pathological-row remedy).
+  Candidates are matrix-derived (:func:`spill_threshold_candidates`).
 
 The harness *measures* candidate configs (median wall time of the actual
 kernel launch, jit-warmed and blocked) rather than modeling them, prunes
@@ -34,19 +40,29 @@ from repro.kernels import ops
 from repro.kernels.rgcsr_spmv import CHUNKS_PER_STEP_CHOICES, LANES
 
 __all__ = ["TuneConfig", "TuneResult", "matrix_signature", "candidate_configs",
-           "autotune_spmv", "autotune_spmm", "tuned_plan", "clear_memo",
-           "DEFAULT_GROUP_SIZES", "DEFAULT_D_TILES"]
+           "spill_threshold_candidates", "autotune_spmv", "autotune_spmm",
+           "tuned_plan", "clear_memo",
+           "DEFAULT_GROUP_SIZES", "DEFAULT_D_TILES", "DEFAULT_ORDERINGS"]
 
 DEFAULT_GROUP_SIZES = (128, 256)
 DEFAULT_D_TILES = (128, 256)
+DEFAULT_ORDERINGS = ("block", "adaptive")
 
 
 @dataclasses.dataclass(frozen=True, order=True)
 class TuneConfig:
-    """One point in the kernel schedule space."""
+    """One point in the kernel schedule space.
+
+    ``ordering``/``spill_threshold`` are the adaptive-grouping axes
+    (DESIGN.md §5): ``'adaptive'`` regroups rows by descending length;
+    ``spill_threshold > 0`` (adaptive only) additionally routes rows longer
+    than the threshold to a COO tail.  ``0`` disables spilling.
+    """
     chunks_per_step: int = 1
     group_size: int = 128
     d_tile: int = 128
+    ordering: str = "block"
+    spill_threshold: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,9 +76,11 @@ class TuneResult:
 
     @property
     def baseline_us(self) -> float:
-        """Time of the uncoarsened default config (cps=1, g=128)."""
+        """Time of the uncoarsened default config (block, cps=1, g=128) —
+        the PR 1 baseline schedule the speedup is quoted against."""
         for cfg, us in self.timings:
-            if cfg.chunks_per_step == 1 and cfg.group_size == 128:
+            if (cfg.chunks_per_step == 1 and cfg.group_size == 128
+                    and cfg.ordering == "block"):
                 return us
         return self.timings[0][1]
 
@@ -88,6 +106,14 @@ def _log_bucket(v: float) -> int:
     return int(np.ceil(np.log2(v + 1.0)))
 
 
+def _plan_bytes(plan: "ops.RgCSRPlan") -> int:
+    """HBM bytes one SpMV streams for this plan's matrix storage: grouped
+    slots at (itemsize + 4 col) each, COO tail at (itemsize + 8 idx)."""
+    itemsize = jnp.dtype(plan.values2d.dtype).itemsize
+    return (plan.stored_slots * plan.group_size * (itemsize + 4)
+            + plan.n_spilled_elements * (itemsize + 8))
+
+
 def matrix_signature(dense: np.ndarray) -> tuple:
     """Structural fingerprint driving winner reuse.
 
@@ -108,12 +134,56 @@ def matrix_signature(dense: np.ndarray) -> tuple:
     )
 
 
+def spill_threshold_candidates(row_lens: np.ndarray,
+                               max_candidates: int = 2) -> Tuple[int, ...]:
+    """Matrix-derived spill thresholds worth measuring (plus 0 = no spill).
+
+    Spilling pays when a few rows are far longer than typical: each spilled
+    row trades ``K_g·(itemsize+4)`` grouped bytes for ``len·(itemsize+8)``
+    COO bytes *and* deflates its group's slot count for the other G-1 rows.
+
+    Candidates are powers of two at ~2× and ~8× the mean row length,
+    emitted only when the max row length's bucket sits strictly above them
+    (i.e. spilling would actually split rows off).  Both the thresholds and
+    the gate are computed from the *same log2 buckets*
+    :func:`matrix_signature` uses — including the same all-rows mean — so
+    every matrix in one signature bucket gets the identical candidate set,
+    a requirement for winner-memo reuse (the candidate set is part of the
+    memo key).
+    """
+    row_lens = np.asarray(row_lens)
+    if row_lens.size == 0 or row_lens.max(initial=0) == 0:
+        return (0,)
+    mean_b = _log_bucket(float(row_lens.mean()))
+    max_b = _log_bucket(float(row_lens.max()))
+    # 1 << mean_b is already ~2× the mean (ceil-log bucket), so shifts 0/2
+    # put the thresholds at ~2× and ~8× the mean row length — measured to
+    # dominate laxer thresholds on both padded bytes and µs for the zipf
+    # and few-dense-rows profiles (the COO tail is cheap; the group slots a
+    # long row forces on its G-1 neighbours are not).
+    cands = []
+    for shift in (0, 2):
+        if max_b > mean_b + shift:           # bucket-level "max > threshold"
+            cands.append(1 << (mean_b + shift))
+    return (0,) + tuple(cands[:max_candidates])
+
+
 def candidate_configs(
         chunks: Sequence[int] = CHUNKS_PER_STEP_CHOICES,
         group_sizes: Sequence[int] = DEFAULT_GROUP_SIZES,
-        d_tiles: Sequence[int] = (LANES,)) -> Tuple[TuneConfig, ...]:
-    return tuple(TuneConfig(c, g, d)
-                 for g in group_sizes for c in chunks for d in d_tiles)
+        d_tiles: Sequence[int] = (LANES,),
+        orderings: Sequence[str] = ("block",),
+        spill_thresholds: Sequence[int] = (0,)) -> Tuple[TuneConfig, ...]:
+    """Cartesian schedule grid.  ``spill_thresholds`` applies to adaptive
+    configs only (block grouping cannot spill); 0 = no spill."""
+    out = []
+    for g in group_sizes:
+        for c in chunks:
+            for d in d_tiles:
+                for o in orderings:
+                    for t in (spill_thresholds if o == "adaptive" else (0,)):
+                        out.append(TuneConfig(c, g, d, o, t))
+    return tuple(out)
 
 
 def _search(dense: np.ndarray, run, kind: str, *,
@@ -123,9 +193,16 @@ def _search(dense: np.ndarray, run, kind: str, *,
     dense = np.asarray(dense)
     sig = matrix_signature(dense)
     if candidates is None:
+        row_lens = ((dense != 0).sum(axis=1) if dense.size
+                    else np.zeros(0, np.int64))
         candidates = candidate_configs(
-            d_tiles=DEFAULT_D_TILES if kind == "spmm" else (LANES,))
-    candidates = sorted(set(candidates))
+            d_tiles=DEFAULT_D_TILES if kind == "spmm" else (LANES,),
+            orderings=DEFAULT_ORDERINGS,
+            spill_thresholds=spill_threshold_candidates(row_lens))
+    # block configs sort (and therefore time) first so the storage-pruning
+    # baseline and TuneResult.baseline_us are the PR 1 block schedule
+    candidates = sorted(set(candidates),
+                        key=lambda c: (c.ordering != "block", c))
     # the candidate set is part of the memo key: a restricted search must
     # never be answered with a winner outside its own candidate set
     memo_key = (kind, sig, tuple(candidates), *memo_key_extra)
@@ -134,24 +211,44 @@ def _search(dense: np.ndarray, run, kind: str, *,
         return dataclasses.replace(hit, from_memo=True)
 
     mats: Dict[int, RgCSR] = {}
-    plans: Dict[Tuple[int, int], ops.RgCSRPlan] = {}
+    plans: Dict[Tuple[int, int, str, int], ops.RgCSRPlan] = {}
+    block_bytes: Dict[Tuple[int, int], Tuple[int, int]] = {}
     baseline_slots = None
     timings = []
     for cfg in candidates:
         if cfg.group_size not in mats:
             mats[cfg.group_size] = RgCSR.from_dense(
                 dense, group_size=cfg.group_size)
-        pkey = (cfg.group_size, cfg.chunks_per_step)
+        pkey = (cfg.group_size, cfg.chunks_per_step, cfg.ordering,
+                cfg.spill_threshold)
         if pkey not in plans:
             plans[pkey] = ops.PLAN_CACHE.get(
-                mats[cfg.group_size], chunks_per_step=cfg.chunks_per_step)
+                mats[cfg.group_size], chunks_per_step=cfg.chunks_per_step,
+                ordering=cfg.ordering,
+                spill_threshold=cfg.spill_threshold)
         plan = plans[pkey]
         if baseline_slots is None:
-            baseline_slots = plan.stored_slots * plan.group_size
+            baseline_slots = plan.stored_elements
+        if cfg.ordering == "block":
+            block_bytes[(cfg.group_size, cfg.chunks_per_step)] = \
+                (_plan_bytes(plan), plan.num_steps)
+        else:
+            # dominance pruning: an adaptive plan that moves the same (or
+            # more) HBM bytes (the TPU cost model) AND launches the same
+            # (or more) grid steps (the interpret-mode cost model) as the
+            # already-timed block plan of the same (G, cps) buys nothing
+            # in either regime and still pays the output gather — it
+            # cannot win, so don't let measurement noise crown it.  Flat
+            # row-length profiles (stencils) prune their whole adaptive
+            # side here; a plan cheaper under either model is still timed.
+            bb = block_bytes.get((cfg.group_size, cfg.chunks_per_step))
+            if bb is not None and _plan_bytes(plan) >= bb[0] \
+                    and plan.num_steps >= bb[1]:
+                continue
         # fill-ratio pruning: a config that multiplies stored bytes on a
         # memory-bound op cannot win — skip it without timing.
-        stored = plan.stored_slots * plan.group_size
-        if stored > storage_cap * max(baseline_slots, 1) and timings:
+        if plan.stored_elements > storage_cap * max(baseline_slots, 1) \
+                and timings:
             continue
         us = time_us(run, plan, cfg, repeats=repeats, warmup=1)
         timings.append((cfg, us))
@@ -219,6 +316,8 @@ def tuned_plan(dense: np.ndarray, *, repeats: int = 3,
         return hit[1], result
     mat = RgCSR.from_dense(dense, group_size=result.config.group_size)
     plan = ops.PLAN_CACHE.get(
-        mat, chunks_per_step=result.config.chunks_per_step)
+        mat, chunks_per_step=result.config.chunks_per_step,
+        ordering=result.config.ordering,
+        spill_threshold=result.config.spill_threshold)
     _TUNED[key] = (mat, plan)
     return plan, result

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import threading
 import weakref
 from typing import Any, Dict, Optional, Tuple
@@ -66,6 +67,13 @@ class RgCSRPlan:
     ``step_group``/``step_first`` form the coarsened step table: grid step
     ``s`` covers slot rows ``[R·s, R·(s+1))`` of ``values2d``/``columns2d``
     (``R = 8·chunks_per_step``) and belongs to group ``step_group[s]``.
+
+    **Adaptive plans** (``ordering='adaptive'``, DESIGN.md §5): groups hold
+    length-sorted rows instead of consecutive ones, so the kernel's output
+    lives in the *permuted* row space.  ``gather_idx``/``grouped_mask`` are
+    the fused inverse-permutation map back to original rows, and rows longer
+    than ``spill_threshold`` live in the COO tail (``spill_*``), combined
+    with a segment-sum in the epilogue.  Block plans leave these ``None``.
     """
 
     values2d: Any       # (S, G)
@@ -77,6 +85,15 @@ class RgCSRPlan:
     n_groups: int
     group_size: int
     chunks_per_step: int = 1
+    # --- adaptive grouping (None/defaults on block plans) ---
+    ordering: str = "block"        # "block" | "adaptive"
+    spill_threshold: int = 0       # 0 = no spill
+    nnz: int = -1                  # true nonzeros incl. spill (-1 = unknown)
+    gather_idx: Any = None         # (n_rows,) int32: flat kernel-output index
+    grouped_mask: Any = None       # (n_rows,) bool: False = row is spilled
+    spill_values: Any = None       # (nnz_spill,)
+    spill_rows: Any = None         # (nnz_spill,) int32 original row ids
+    spill_columns: Any = None      # (nnz_spill,) int32
 
     @property
     def num_steps(self) -> int:
@@ -92,8 +109,32 @@ class RgCSRPlan:
     def stored_slots(self) -> int:
         return int(self.values2d.shape[0])
 
+    @property
+    def n_spilled_elements(self) -> int:
+        return 0 if self.spill_values is None else int(
+            self.spill_values.shape[0])
 
-def make_plan(m: RgCSR, *, chunks_per_step: int = 1) -> RgCSRPlan:
+    @property
+    def stored_elements(self) -> int:
+        """Grouped slots × lanes + COO tail (the format's byte footprint)."""
+        return self.stored_slots * self.group_size + self.n_spilled_elements
+
+    @property
+    def padded_slot_fraction(self) -> float:
+        """Fraction of stored elements that are padding (artificial zeros).
+
+        The paper's fill-ratio metric normalized to stored bytes: on a
+        memory-bound op this is directly the fraction of wasted HBM traffic.
+        Requires ``nnz`` (set by ``make_plan``; -1 on raw param-view plans).
+        """
+        if self.nnz < 0 or self.stored_elements == 0:
+            return 0.0
+        return (self.stored_elements - self.nnz) / self.stored_elements
+
+
+def make_plan(m: RgCSR, *, chunks_per_step: int = 1,
+              ordering: str = "block",
+              spill_threshold: int = 0) -> RgCSRPlan:
     """Host-side plan construction (format-compile).
 
     ``chunks_per_step`` coarsens the grid: each group's ``(K_g, G)`` tile is
@@ -103,6 +144,13 @@ def make_plan(m: RgCSR, *, chunks_per_step: int = 1) -> RgCSRPlan:
     masked no-op — the paper's artificial-zeros accounting extended to the
     coarsened tile.  The trade (fewer grid steps vs more padded bytes) is
     what :mod:`repro.kernels.autotune` measures per matrix.
+
+    ``ordering='adaptive'`` (DESIGN.md §5) regroups rows by descending
+    length so same-length rows share groups (each group's slot count is its
+    own max, not the max over an arbitrary consecutive window), and rows
+    longer than ``spill_threshold`` (> 0) leave the grouped storage for a
+    COO tail.  The kernel then computes in the permuted row space; the
+    SpMV/SpMM wrappers fuse the inverse gather + tail back in.
     """
     if m.group_size % LANES != 0:
         raise ValueError(
@@ -115,6 +163,16 @@ def make_plan(m: RgCSR, *, chunks_per_step: int = 1) -> RgCSRPlan:
         raise ValueError(
             f"chunks_per_step must be one of {CHUNKS_PER_STEP_CHOICES}, "
             f"got {chunks_per_step}")
+    if ordering not in ("block", "adaptive"):
+        raise ValueError(
+            f"ordering must be 'block' or 'adaptive', got {ordering!r}")
+    if ordering == "adaptive":
+        return _make_adaptive_plan(m, chunks_per_step=chunks_per_step,
+                                   spill_threshold=int(spill_threshold))
+    if spill_threshold:
+        raise ValueError(
+            "spill_threshold requires ordering='adaptive' (block grouping "
+            "cannot drop rows without a permutation gather)")
     g = m.group_size
     rows_per_step = chunks_per_step * SUBLANES
     slots = np.asarray(m.slots_per_group)
@@ -136,11 +194,7 @@ def make_plan(m: RgCSR, *, chunks_per_step: int = 1) -> RgCSRPlan:
             cp[dst_off[gi]: dst_off[gi] + k] = columns2d[src_off[gi]: src_off[gi] + k]
         values2d, columns2d = vp, cp
 
-    steps_per_group = (padded // rows_per_step).astype(np.int64)
-    step_group = np.repeat(np.arange(n_groups, dtype=np.int32), steps_per_group)
-    first_idx = np.cumsum(np.concatenate([[0], steps_per_group[:-1]]))
-    step_first = np.zeros(len(step_group), dtype=np.int32)
-    step_first[first_idx] = 1
+    step_group, step_first = _step_table(padded, rows_per_step)
     return RgCSRPlan(
         values2d=jnp.asarray(values2d),
         columns2d=jnp.asarray(columns2d),
@@ -151,6 +205,100 @@ def make_plan(m: RgCSR, *, chunks_per_step: int = 1) -> RgCSRPlan:
         n_groups=m.n_groups,
         group_size=g,
         chunks_per_step=chunks_per_step,
+        nnz=m.nnz,
+    )
+
+
+def _step_table(padded_slots: np.ndarray, rows_per_step: int):
+    """(step_group, step_first) for per-group padded slot counts."""
+    steps_per_group = (padded_slots // rows_per_step).astype(np.int64)
+    n_groups = len(steps_per_group)
+    step_group = np.repeat(np.arange(n_groups, dtype=np.int32),
+                           steps_per_group)
+    first_idx = np.cumsum(np.concatenate([[0], steps_per_group[:-1]]))
+    step_first = np.zeros(len(step_group), dtype=np.int32)
+    step_first[first_idx] = 1
+    return step_group, step_first
+
+
+def _make_adaptive_plan(m: RgCSR, *, chunks_per_step: int,
+                        spill_threshold: int) -> RgCSRPlan:
+    """Length-aware regrouping + pathological-row spill (DESIGN.md §5).
+
+    1. rows with nnz > ``spill_threshold`` (if > 0) leave for the COO tail;
+    2. remaining rows are permuted by descending length (stable), so each
+       group of ``G`` rows has near-uniform lengths and its slot count
+       ``K_g = roundup(max len in group, 8·chunks_per_step)`` carries
+       minimal padding under the alignment constraint;
+    3. the kernel output is in permuted space — ``gather_idx`` maps original
+       row ``r`` to its flat output lane, ``grouped_mask`` marks spilled
+       rows (their value comes from the tail's segment-sum alone).
+    """
+    from repro.core.ordering import descending_from_lengths, split_spill_rows
+
+    g = m.group_size
+    rows_per_step = chunks_per_step * SUBLANES
+    n_rows, n_cols = m.shape
+    row_lens = np.asarray(m.row_lengths).astype(np.int64)
+    csr_v, csr_c, row_ptr = m.to_csr_arrays()
+
+    grouped_rows, spilled_rows = split_spill_rows(row_lens, spill_threshold)
+    order = descending_from_lengths(row_lens[grouped_rows])
+    perm = grouped_rows[order]                 # position p holds row perm[p]
+    n_grouped = len(perm)
+    n_groups = max(1, -(-n_grouped // g))
+
+    # per-group slot counts: own max length, aligned to the step granularity
+    slots = np.empty(n_groups, dtype=np.int64)
+    for gi in range(n_groups):
+        rows_g = perm[gi * g: (gi + 1) * g]
+        k_g = int(row_lens[rows_g].max()) if len(rows_g) else 0
+        slots[gi] = -(-max(k_g, 1) // rows_per_step) * rows_per_step
+    offsets = np.concatenate([[0], np.cumsum(slots)[:-1]])
+
+    values2d = np.zeros((int(slots.sum()), g), np.asarray(m.values).dtype)
+    columns2d = np.zeros((int(slots.sum()), g), np.int32)
+    for p in range(n_grouped):
+        r = int(perm[p])
+        gi, lane = p // g, p % g
+        lo, hi = int(row_ptr[r]), int(row_ptr[r + 1])
+        base = int(offsets[gi])
+        values2d[base: base + (hi - lo), lane] = csr_v[lo:hi]
+        columns2d[base: base + (hi - lo), lane] = csr_c[lo:hi]
+
+    step_group, step_first = _step_table(slots, rows_per_step)
+
+    gather_idx = np.zeros(n_rows, np.int32)
+    grouped_mask = np.zeros(n_rows, bool)
+    gather_idx[perm] = np.arange(n_grouped, dtype=np.int32)
+    grouped_mask[perm] = True
+
+    spill_sel = np.zeros(len(csr_v), bool)
+    for r in spilled_rows:
+        spill_sel[int(row_ptr[r]): int(row_ptr[r + 1])] = True
+    spill_row_ids = np.repeat(
+        spilled_rows.astype(np.int32),
+        (row_ptr[spilled_rows + 1] - row_ptr[spilled_rows]).astype(np.int64)
+        if len(spilled_rows) else np.empty(0, np.int64))
+
+    return RgCSRPlan(
+        values2d=jnp.asarray(values2d),
+        columns2d=jnp.asarray(columns2d),
+        step_group=jnp.asarray(step_group),
+        step_first=jnp.asarray(step_first),
+        n_rows=n_rows,
+        n_cols=n_cols,
+        n_groups=n_groups,
+        group_size=g,
+        chunks_per_step=chunks_per_step,
+        ordering="adaptive",
+        spill_threshold=spill_threshold,
+        nnz=m.nnz,
+        gather_idx=jnp.asarray(gather_idx),
+        grouped_mask=jnp.asarray(grouped_mask),
+        spill_values=jnp.asarray(csr_v[spill_sel]),
+        spill_rows=jnp.asarray(spill_row_ids),
+        spill_columns=jnp.asarray(csr_c[spill_sel].astype(np.int32)),
     )
 
 
@@ -162,11 +310,14 @@ def make_plan(m: RgCSR, *, chunks_per_step: int = 1) -> RgCSRPlan:
 class PlanCache:
     """LRU plan cache keyed on matrix identity + kernel config.
 
-    Keys use ``id(matrix)``; a ``weakref.finalize`` hook evicts every config
-    of a matrix when it is garbage-collected (CPython runs the finalizer
-    during deallocation, before the id can be reused).  Thread-safe; plan
-    *construction* happens outside the lock so concurrent misses on
-    different matrices don't serialize.
+    Keys use ``id(matrix)`` plus every plan-shaping config field —
+    ``(chunks_per_step, ordering, spill_threshold)`` — so a block plan and
+    an adaptive plan of the same matrix (or two adaptive plans at different
+    spill thresholds) can never shadow each other.  A ``weakref.finalize``
+    hook evicts every config of a matrix when it is garbage-collected
+    (CPython runs the finalizer during deallocation, before the id can be
+    reused).  Thread-safe; plan *construction* happens outside the lock so
+    concurrent misses on different matrices don't serialize.
     """
 
     def __init__(self, maxsize: int = 256):
@@ -178,15 +329,17 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
 
-    def get(self, m: RgCSR, *, chunks_per_step: int = 1) -> RgCSRPlan:
-        key = (id(m), chunks_per_step)
+    def get(self, m: RgCSR, *, chunks_per_step: int = 1,
+            ordering: str = "block", spill_threshold: int = 0) -> RgCSRPlan:
+        key = (id(m), chunks_per_step, ordering, int(spill_threshold))
         with self._lock:
             plan = self._plans.get(key)
             if plan is not None:
                 self.hits += 1
                 self._plans.move_to_end(key)
                 return plan
-        plan = make_plan(m, chunks_per_step=chunks_per_step)
+        plan = make_plan(m, chunks_per_step=chunks_per_step,
+                         ordering=ordering, spill_threshold=spill_threshold)
         with self._lock:
             if key not in self._plans:
                 self.misses += 1
@@ -226,9 +379,11 @@ class PlanCache:
 PLAN_CACHE = PlanCache()
 
 
-def get_plan(m: RgCSR, *, chunks_per_step: int = 1) -> RgCSRPlan:
+def get_plan(m: RgCSR, *, chunks_per_step: int = 1, ordering: str = "block",
+             spill_threshold: int = 0) -> RgCSRPlan:
     """Fetch (or build and memoize) the kernel plan for ``m``."""
-    return PLAN_CACHE.get(m, chunks_per_step=chunks_per_step)
+    return PLAN_CACHE.get(m, chunks_per_step=chunks_per_step,
+                          ordering=ordering, spill_threshold=spill_threshold)
 
 
 # ---------------------------------------------------------------------------
@@ -246,6 +401,41 @@ def _x_tile_for(n_pad_min: int, x_tile: Optional[int]) -> Tuple[int, int]:
     return x_tile, _pad_to(n_pad_min, x_tile)
 
 
+@functools.partial(jax.jit, static_argnames=("n_rows", "has_spill"))
+def _adaptive_finish_spmv(y_flat, x, gather_idx, grouped_mask,
+                          spill_values, spill_rows, spill_columns,
+                          *, n_rows: int, has_spill: bool):
+    """Fused adaptive epilogue: inverse-permutation gather + COO tail.
+
+    One jit region, no materialized scatter: original row ``r`` reads lane
+    ``gather_idx[r]`` of the permuted kernel output (spilled rows masked to
+    zero) and the pathological rows come back as a segment-sum over the COO
+    tail — both fuse into a single gather/scatter pass over HBM.
+    """
+    out = jnp.where(grouped_mask, jnp.take(y_flat, gather_idx, axis=0),
+                    jnp.zeros((), y_flat.dtype))
+    if has_spill:
+        prods = spill_values * jnp.take(x, spill_columns, axis=0)
+        out = out + jax.ops.segment_sum(prods, spill_rows,
+                                        num_segments=n_rows)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "has_spill"))
+def _adaptive_finish_spmm(y2d, x, gather_idx, grouped_mask,
+                          spill_values, spill_rows, spill_columns,
+                          *, n_rows: int, has_spill: bool):
+    """SpMM twin of :func:`_adaptive_finish_spmv` (row gather over axis 0)."""
+    out = jnp.where(grouped_mask[:, None],
+                    jnp.take(y2d, gather_idx, axis=0),
+                    jnp.zeros((), y2d.dtype))[:, : x.shape[1]]
+    if has_spill:
+        prods = jnp.take(x, spill_columns, axis=0) * spill_values[:, None]
+        out = out + jax.ops.segment_sum(prods, spill_rows,
+                                        num_segments=n_rows)
+    return out
+
+
 def rgcsr_spmv(plan: RgCSRPlan, x, *, interpret: bool | None = None,
                x_tile: int | None = None):
     """y = A @ x via the Pallas kernel. x: (n_cols,) -> y: (n_rows,).
@@ -253,6 +443,9 @@ def rgcsr_spmv(plan: RgCSRPlan, x, *, interpret: bool | None = None,
     ``x_tile`` bounds the x slice staged into VMEM per grid step; ``None``
     stages x whole when it fits (``DEFAULT_X_TILE_ELEMS``) and tiles it
     otherwise, so wide matrices degrade smoothly instead of exhausting VMEM.
+
+    Adaptive plans return through the fused epilogue (inverse gather +
+    spill segment-sum); block plans slice the contiguous rows as before.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -264,7 +457,13 @@ def rgcsr_spmv(plan: RgCSRPlan, x, *, interpret: bool | None = None,
         x_pad, n_groups=plan.n_groups, group_size=plan.group_size,
         chunks_per_step=plan.chunks_per_step, x_tile=xt,
         interpret=interpret)
-    return y.reshape(-1)[: plan.n_rows]
+    y_flat = y.reshape(-1)
+    if plan.ordering != "adaptive":
+        return y_flat[: plan.n_rows]
+    return _adaptive_finish_spmv(
+        y_flat, jnp.asarray(x), plan.gather_idx, plan.grouped_mask,
+        plan.spill_values, plan.spill_rows, plan.spill_columns,
+        n_rows=plan.n_rows, has_spill=plan.n_spilled_elements > 0)
 
 
 def rgcsr_spmm(plan: RgCSRPlan, x, *, d_tile: int = LANES,
@@ -281,7 +480,12 @@ def rgcsr_spmm(plan: RgCSRPlan, x, *, d_tile: int = LANES,
         x_pad, n_groups=plan.n_groups, group_size=plan.group_size,
         d_tile=d_tile, chunks_per_step=plan.chunks_per_step,
         interpret=interpret)
-    return y[: plan.n_rows, :d]
+    if plan.ordering != "adaptive":
+        return y[: plan.n_rows, :d]
+    return _adaptive_finish_spmm(
+        y, jnp.asarray(x), plan.gather_idx, plan.grouped_mask,
+        plan.spill_values, plan.spill_rows, plan.spill_columns,
+        n_rows=plan.n_rows, has_spill=plan.n_spilled_elements > 0)
 
 
 # ---------------------------------------------------------------------------

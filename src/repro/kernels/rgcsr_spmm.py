@@ -20,6 +20,11 @@ group-padded ``(S, G)`` storage as the SpMV kernel, so one
 :class:`repro.kernels.ops.RgCSRPlan` drives both kernels.  Coarsening
 amortizes the per-step grid overhead over ``8·chunks_per_step`` FMA waves
 and enlarges the per-step contiguous matrix DMA.
+
+Like the SpMV kernel, the output index map is the step table alone, so
+adaptive (length-regrouped) plans run unchanged: ``y`` rows come back in
+the permuted row space and ``ops.rgcsr_spmm`` fuses the inverse gather +
+COO spill tail on the way out (DESIGN.md §5).
 """
 from __future__ import annotations
 

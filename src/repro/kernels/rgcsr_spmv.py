@@ -49,6 +49,16 @@ Scalar-prefetch carries ``step_group`` (output index map) and ``step_first``
 grid steps (steps of a group are contiguous, and all x-tiles of one step are
 consecutive inner iterations), which is the Pallas TPU requirement for
 read-modify-write output accumulation.
+
+**Permuted row space** (adaptive plans, DESIGN.md §5): the kernel is
+deliberately agnostic to *which* rows a group holds — the step table is the
+only output index map, and the accumulator init (``step_first``) fires on
+each group's first step regardless of row identity.  An adaptive plan
+exploits this: its groups hold length-sorted rows, so ``y_ref`` rows are in
+the permuted space and the wrapper's fused epilogue
+(:func:`repro.kernels.ops._adaptive_finish_spmv`) gathers them back to
+original row order and adds the COO spill tail.  No kernel change needed —
+the permutation lives entirely in plan metadata.
 """
 from __future__ import annotations
 

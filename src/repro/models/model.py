@@ -144,7 +144,13 @@ class LanguageModel:
         return logits
 
     # ---------------------------------------------------------------- forward
-    def forward(self, params, batch, *, shape_kind: str = "train"):
+    def forward(self, params, batch, *, shape_kind: str = "train",
+                mode: str = "eval"):
+        """Full-sequence forward.  ``mode='eval'`` (default) is the inference
+        semantics — MoE layers run dropless, so this is the oracle that
+        prefill+decode must reproduce token-exactly.  ``loss`` passes
+        ``mode='train'`` to keep GShard capacity drops in the training step.
+        """
         cfg = self.cfg
         enc_out = None
         if cfg.enc_dec:
@@ -152,7 +158,7 @@ class LanguageModel:
         x = self._embed_sequence(params, batch)
         pos = rope_positions(x.shape[0], x.shape[1])
         x, _, aux = tfm.stack_apply(params["stack"], cfg, x, pos,
-                                    mode="train", shape_kind=shape_kind,
+                                    mode=mode, shape_kind=shape_kind,
                                     enc_out=enc_out)
         h = rmsnorm(params["final_norm"], x)
         return self._logits(params, h), h, aux
@@ -160,7 +166,8 @@ class LanguageModel:
     # ------------------------------------------------------------------ loss
     def loss(self, params, batch, *, shape_kind: str = "train"):
         cfg = self.cfg
-        logits, h, aux = self.forward(params, batch, shape_kind=shape_kind)
+        logits, h, aux = self.forward(params, batch, shape_kind=shape_kind,
+                                      mode="train")
         labels = batch["labels"]
         if cfg.frontend == "vision":
             # frontend positions carry no labels

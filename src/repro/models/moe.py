@@ -88,13 +88,22 @@ def _routing(params, cfg, x_flat):
     return idx, w.astype(x_flat.dtype), aux
 
 
-def _capacity(cfg, n_tokens: int) -> int:
+# dropless einsum dispatch/combine tensors are (T, E, cap≈T); above this
+# element budget (~256 MB fp32 for the pair) moe_apply reroutes to scatter
+_DROPLESS_EINSUM_BUDGET = 1 << 25
+
+
+def _capacity(cfg, n_tokens: int, dropless: bool = False) -> int:
     m = cfg.moe
+    if dropless:
+        # Each token lands on top_k *distinct* experts, so no expert can
+        # receive more than n_tokens copies: cap = n_tokens drops nothing.
+        return max(8, -(-n_tokens // 8) * 8)
     c = int(m.capacity_factor * m.top_k * n_tokens / m.n_experts)
     return max(8, -(-c // 8) * 8)  # sublane-align
 
 
-def _dispatch_einsum(params, cfg, x_flat, idx, w):
+def _dispatch_einsum(params, cfg, x_flat, idx, w, *, dropless=False):
     """GShard dense dispatch: (T,E,C) one-hot dispatch/combine tensors.
 
     Built with a static loop over the k routing slots — the rank-4
@@ -103,7 +112,7 @@ def _dispatch_einsum(params, cfg, x_flat, idx, w):
     compile time on the 256-expert cells."""
     m = cfg.moe
     t = x_flat.shape[0]
-    cap = _capacity(cfg, t)
+    cap = _capacity(cfg, t, dropless)
     onehot = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.int32)    # (T,k,E)
     pos_in_expert = (jnp.cumsum(onehot.reshape(t * m.top_k, m.n_experts),
                                 axis=0).reshape(t, m.top_k, m.n_experts)
@@ -125,7 +134,7 @@ def _dispatch_einsum(params, cfg, x_flat, idx, w):
     return jnp.einsum("tec,ecd->td", combine, expert_out)
 
 
-def _dispatch_scatter(params, cfg, x_flat, idx, w):
+def _dispatch_scatter(params, cfg, x_flat, idx, w, *, dropless=False):
     """Sort-based ragged dispatch: flop-free token movement (optimized path).
 
     Tokens are ordered by target expert with a stable argsort; each expert's
@@ -135,7 +144,7 @@ def _dispatch_scatter(params, cfg, x_flat, idx, w):
     """
     m = cfg.moe
     t = x_flat.shape[0]
-    cap = _capacity(cfg, t)
+    cap = _capacity(cfg, t, dropless)
     flat_e = idx.reshape(-1)                                      # (T*k,)
     order = jnp.argsort(flat_e, stable=True)                      # (T*k,)
     sorted_e = flat_e[order]
@@ -164,15 +173,41 @@ def _dispatch_scatter(params, cfg, x_flat, idx, w):
     return y
 
 
-def moe_apply(params, cfg, x) -> Tuple[jax.Array, dict]:
-    """x: (B, S, d) -> (y, aux). Shared experts added on top (DeepSeek)."""
+def moe_apply(params, cfg, x, *, dropless: bool = False
+              ) -> Tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (y, aux). Shared experts added on top (DeepSeek).
+
+    ``dropless``: skip capacity-based token dropping.  Capacity drops are a
+    training-time compute bound (GShard semantics); at inference they make a
+    token's output depend on what else shares its batch, so eval forward,
+    prefill and decode would disagree with each other.  Inference paths pass
+    ``dropless=True`` (capacity = token count, which provably drops nothing).
+
+    Scale note: dropless capacity makes the dispatch buffers O(T²·E)
+    (einsum) or O(E·T·d) (scatter; what oversized einsum calls reroute to).
+    That is fine at the token counts this repo executes, but truly dropless
+    dispatch on production-length prefills needs ragged expert kernels
+    (MegaBlocks-style) that dense one-hot/capacity formulations cannot
+    express — decode (T = batch) is unaffected either way.
+    """
     b, s, d = x.shape
     x_flat = x.reshape(b * s, d)
+    t = b * s
     idx, w, aux = _routing(params, cfg, x_flat)
-    if cfg.moe.dispatch == "scatter":
-        y = _dispatch_scatter(params, cfg, x_flat, idx, w)
+    use_scatter = cfg.moe.dispatch == "scatter"
+    if dropless and not use_scatter:
+        # Dropless capacity is O(T), so the einsum one-hot dispatch/combine
+        # tensors are (T, E, ~T) — quadratic in tokens.  Past a budget,
+        # reroute through the flop-free scatter dispatch (identical math,
+        # O(E·T·d) buffer) instead of OOMing a long prefill.  Small token
+        # counts stay on the configured path so einsum-vs-scatter tests
+        # keep comparing distinct implementations.
+        cap = _capacity(cfg, t, dropless=True)
+        use_scatter = t * cfg.moe.n_experts * cap > _DROPLESS_EINSUM_BUDGET
+    if use_scatter:
+        y = _dispatch_scatter(params, cfg, x_flat, idx, w, dropless=dropless)
     else:
-        y = _dispatch_einsum(params, cfg, x_flat, idx, w)
+        y = _dispatch_einsum(params, cfg, x_flat, idx, w, dropless=dropless)
     if cfg.moe.n_shared:
         from repro.models.ffn import gated_ffn_apply
         y = y + gated_ffn_apply(params["shared"], cfg, x_flat)

@@ -79,7 +79,7 @@ def _effective_window(cfg, kind: str, shape_kind: str) -> Optional[int]:
     if kind == "attn_local":
         return cfg.window
     if shape_kind == "long_decode" and not cfg.is_subquadratic:
-        # DESIGN.md §7: full-attention archs fall back to a sliding window
+        # DESIGN.md §8: full-attention archs fall back to a sliding window
         # at 500k (recorded as `fallback` in every table row).
         return cfg.fallback_window
     return None
@@ -141,7 +141,8 @@ def block_apply(params, cfg, kind: str, x, positions, *, mode: str = "train",
 
     h2 = rmsnorm(params["ln2"], x)
     if kind == "moe":
-        y2, aux = moe_apply(params["ffn"], cfg, h2)
+        y2, aux = moe_apply(params["ffn"], cfg, h2,
+                            dropless=mode != "train")
     else:
         y2 = ffn_apply(params["ffn"], cfg, h2)
     return x + y2, new_cache, aux

@@ -65,6 +65,7 @@ class Engine:
         # latency path pays no per-call host plan work either way; warming
         # is a no-op for layer-stacked param trees (plans_warmed == 0).
         self.plans_warmed = 0
+        self.spmv_plans_warmed = 0
         if model_cfg.sparsity.enabled and model_cfg.sparsity.impl_is_kernel():
             from repro.kernels import ops as kops
             # warm at the model's compute dtype — the dtype the eager apply
@@ -73,6 +74,35 @@ class Engine:
             self.plans_warmed = kops.warm_plans_from_params(
                 self.params, dtype=jnp.dtype(model_cfg.dtype))
 
+    def warm_spmv_plans(self, matrices, *, repeats: int = 1):
+        """Pre-tune and stage SpMV plans for auxiliary sparse matrices.
+
+        Serving deployments that also answer SpMV traffic (iterative
+        solvers, graph scoring) hand their matrices here at startup: each
+        one runs the joint autotune search — ``(chunks_per_step,
+        group_size, ordering, spill_threshold)``, DESIGN.md §5 — and the
+        winning plan (block or adaptive, whichever measured faster) lands
+        in the process-wide ``PLAN_CACHE`` before the first request.
+
+        Contract: the warmed entries are keyed to the tuner's own RgCSR
+        containers (retained per matrix signature), so the request path
+        hits them by fetching through ``autotune.tuned_plan(dense)`` —
+        a signature-memo hit, no re-timing, no plan rebuild.  A caller
+        that instead runs ``core.spmv`` on its *own* RgCSR object gets a
+        fresh plan under that object's identity and must thread the
+        returned config's ``(ordering, spill_threshold, chunks_per_step)``
+        itself.  Returns the winning
+        :class:`repro.kernels.autotune.TuneConfig` per matrix, in order.
+        """
+        from repro.kernels import autotune
+        winners = []
+        for dense in matrices:
+            _, result = autotune.tuned_plan(np.asarray(dense),
+                                            repeats=repeats)
+            winners.append(result.config)
+        self.spmv_plans_warmed += len(winners)
+        return winners
+
     def plan_cache_stats(self):
         """Plan-cache counters: the matrix PlanCache (core spmv dispatch)
         and the SparseLinear param-plan memo (this engine's sparse layers),
@@ -80,7 +110,8 @@ class Engine:
         from repro.kernels import ops as kops
         return {"plan_cache": kops.PLAN_CACHE.stats(),
                 "param_plans": kops.param_plan_stats(),
-                "plans_warmed": self.plans_warmed}
+                "plans_warmed": self.plans_warmed,
+                "spmv_plans_warmed": self.spmv_plans_warmed}
 
     # ---------------------------------------------------------------- sample
     def _sample(self, logits) -> jax.Array:

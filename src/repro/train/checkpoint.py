@@ -168,6 +168,10 @@ class CheckpointManager:
         if self._pending is not None:
             self._pending.result()
             self._pending = None
+            # The done-callback's _gc runs on the executor thread and is not
+            # ordered with respect to result() returning — prune here too so
+            # retention is guaranteed once wait() returns.
+            self._gc()
 
     def _gc(self):
         steps = sorted(
