@@ -7,6 +7,7 @@ from repro.core.formats import (  # noqa: F401
     BlockedCSR,
     HybridEllCoo,
     RgCSR,
+    ShardedRgCSR,
     SlicedEllpack,
     from_dense,
 )

@@ -47,6 +47,7 @@ __all__ = [
     "BlockedCSR",
     "SlicedEllpack",
     "RgCSR",
+    "ShardedRgCSR",
     "from_dense",
     "FORMATS",
 ]
@@ -648,6 +649,87 @@ class SlicedEllpack:
         rows = np.asarray(self.row_of_element)
         mask = vals != 0
         np.add.at(out, (rows[mask], cols[mask]), vals[mask])
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Row-sharded RgCSR — one RgCSR per device shard (multi-device SpMV)
+# ---------------------------------------------------------------------------
+
+
+@_tree_dataclass
+class ShardedRgCSR:
+    """RgCSR partitioned by rows over a 1-D mesh axis (DESIGN.md §10).
+
+    The canonical distributed-SpMV decomposition (Kreutzer et al.,
+    arXiv:1112.5588): shard ``d`` owns the contiguous row block
+    ``[d·rows_per_shard, (d+1)·rows_per_shard)`` and stores it as its own
+    :class:`RgCSR` — so block/adaptive grouping, slot padding and the step
+    table all apply *per shard*, and per-device stored slots and grid steps
+    shrink ~1/D.  Columns keep their **global** indices here; the local /
+    remote split (columns owned by this device vs. columns whose x-entries
+    must be communicated) is computed at plan time
+    (:func:`repro.kernels.ops.make_sharded_plan`) because it depends on the
+    execution mode.
+
+    Every shard is built over exactly ``rows_per_shard`` rows (the trailing
+    shard is padded with empty rows), so all shards have the *same* group
+    count — the uniformity `shard_map` needs for SPMD execution.
+    """
+
+    shards: Tuple[RgCSR, ...] = _arr()   # pytree children (one per device)
+    shape: Tuple[int, int] = _static()
+    n_shards: int = _static()
+    rows_per_shard: int = _static()
+    group_size: int = _static()
+    slot_pad: int = _static()
+
+    name: ClassVar[str] = "sharded_rgcsr"
+
+    @classmethod
+    def from_dense(cls, dense: np.ndarray, n_shards: int,
+                   group_size: int = TPU_LANES,
+                   slot_pad: int = TPU_SUBLANES) -> "ShardedRgCSR":
+        dense = _as_2d(dense)
+        n_rows, n_cols = dense.shape
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        rps = max(1, -(-n_rows // n_shards))
+        shards = []
+        for d in range(n_shards):
+            lo, hi = d * rps, min((d + 1) * rps, n_rows)
+            block = np.zeros((rps, n_cols), dtype=dense.dtype)
+            if hi > lo:
+                block[: hi - lo] = dense[lo:hi]
+            shards.append(RgCSR.from_dense(block, group_size=group_size,
+                                           slot_pad=slot_pad))
+        return cls(shards=tuple(shards), shape=dense.shape,
+                   n_shards=int(n_shards), rows_per_shard=rps,
+                   group_size=int(group_size), slot_pad=int(slot_pad))
+
+    @property
+    def nnz(self) -> int:
+        return sum(s.nnz for s in self.shards)
+
+    @property
+    def stored_elements(self) -> int:
+        return sum(s.stored_elements for s in self.shards)
+
+    def storage_bytes(self) -> int:
+        return sum(s.storage_bytes() for s in self.shards)
+
+    def shard_rows(self, d: int) -> Tuple[int, int]:
+        """(lo, hi) global row range truly owned by shard ``d`` (unpadded)."""
+        lo = d * self.rows_per_shard
+        return lo, min(lo + self.rows_per_shard, self.shape[0])
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape,
+                       dtype=np.asarray(self.shards[0].values).dtype)
+        for d, s in enumerate(self.shards):
+            lo, hi = self.shard_rows(d)
+            if hi > lo:
+                out[lo:hi] = s.to_dense()[: hi - lo]
         return out
 
 

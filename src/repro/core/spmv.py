@@ -24,10 +24,12 @@ from repro.core.formats import (
     BlockedCSR,
     HybridEllCoo,
     RgCSR,
+    ShardedRgCSR,
     SlicedEllpack,
 )
 
-Matrix = Union[CSR, COO, ELLPACK, HybridEllCoo, BlockedCSR, RgCSR, SlicedEllpack]
+Matrix = Union[CSR, COO, ELLPACK, HybridEllCoo, BlockedCSR, RgCSR,
+               SlicedEllpack, ShardedRgCSR]
 
 __all__ = ["spmv", "spmm"]
 
@@ -200,8 +202,29 @@ def _use_kernel(a, impl: str) -> bool:
             and a.group_size % 128 == 0 and a.slot_pad % 8 == 0)
 
 
+def _sharded_dispatch(a: ShardedRgCSR, mesh, mesh_axis,
+                      chunks_per_step, ordering, spill_threshold, x_mode):
+    """Resolve the sharded plan + mesh axis for a ShardedRgCSR call."""
+    from repro.kernels import ops as kops
+    if mesh is None:
+        raise ValueError(
+            "ShardedRgCSR spmv/spmm needs mesh= (and usually mesh_axis=): "
+            "the row shards execute under shard_map over a 1-D mesh axis "
+            "(DESIGN.md §10)")
+    if mesh_axis is None:
+        from repro.sharding import resolve_spmv_shard_axis
+        mesh_axis = resolve_spmv_shard_axis(mesh)
+    plan = kops.get_sharded_plan(a, chunks_per_step=chunks_per_step,
+                                 ordering=ordering,
+                                 spill_threshold=spill_threshold,
+                                 x_mode=x_mode)
+    return plan, mesh_axis
+
+
 def spmv(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1,
-         ordering: str = "block", spill_threshold: int = 0):
+         ordering: str = "block", spill_threshold: int = 0,
+         mesh=None, mesh_axis: str | None = None,
+         x_mode: str = "replicated"):
     """``y = A @ x`` for any of the paper's formats.
 
     RgCSR matrices can dispatch to the Pallas kernel through the process-wide
@@ -213,7 +236,17 @@ def spmv(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1,
     with ``spill_threshold > 0``, the pathological-row COO spill); results
     are identical up to fp reassociation — the plan's fused inverse gather
     restores the original row order.  Oracle paths ignore both knobs.
+
+    :class:`ShardedRgCSR` matrices run the multi-device shard_map path
+    (DESIGN.md §10): ``mesh`` is required, ``mesh_axis`` defaults to the
+    partitioner's ``sparse_rows`` rule, and ``x_mode`` picks replicated-x
+    vs the local/remote column split.
     """
+    if isinstance(a, ShardedRgCSR):
+        from repro.kernels import ops as kops
+        plan, axis = _sharded_dispatch(a, mesh, mesh_axis, chunks_per_step,
+                                       ordering, spill_threshold, x_mode)
+        return kops.sharded_rgcsr_spmv(plan, x, mesh=mesh, axis=axis)
     if _use_kernel(a, impl):
         from repro.kernels import ops as kops
         plan = kops.get_plan(a, chunks_per_step=chunks_per_step,
@@ -224,12 +257,19 @@ def spmv(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1,
 
 
 def spmm(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1,
-         ordering: str = "block", spill_threshold: int = 0):
+         ordering: str = "block", spill_threshold: int = 0,
+         mesh=None, mesh_axis: str | None = None,
+         x_mode: str = "replicated"):
     """``Y = A @ X`` (X dense ``(n, d)``) for any of the paper's formats.
 
-    Same PlanCache-backed kernel dispatch (and adaptive-plan knobs) as
-    :func:`spmv`.
+    Same PlanCache-backed kernel dispatch (and adaptive-plan / sharded
+    knobs) as :func:`spmv`.
     """
+    if isinstance(a, ShardedRgCSR):
+        from repro.kernels import ops as kops
+        plan, axis = _sharded_dispatch(a, mesh, mesh_axis, chunks_per_step,
+                                       ordering, spill_threshold, x_mode)
+        return kops.sharded_rgcsr_spmm(plan, x, mesh=mesh, axis=axis)
     if _use_kernel(a, impl):
         from repro.kernels import ops as kops
         plan = kops.get_plan(a, chunks_per_step=chunks_per_step,

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import ELLPACK, RgCSR
+from repro.core.formats import ELLPACK, RgCSR, ShardedRgCSR
 from repro.kernels.ell_spmv import ell_spmv_pallas
 from repro.kernels.rgcsr_spmm import rgcsr_spmm_pallas
 from repro.kernels.rgcsr_spmv import (CHUNKS_PER_STEP_CHOICES, LANES,
@@ -40,6 +40,9 @@ from repro.kernels.rgcsr_spmv import (CHUNKS_PER_STEP_CHOICES, LANES,
 __all__ = ["RgCSRPlan", "make_plan", "rgcsr_spmv", "rgcsr_spmm",
            "EllPlan", "make_ell_plan", "ell_spmv", "default_interpret",
            "PlanCache", "PLAN_CACHE", "get_plan",
+           "ShardedRgCSRPlan", "make_sharded_plan", "get_sharded_plan",
+           "sharded_rgcsr_spmv", "sharded_rgcsr_spmm",
+           "sharded_plan_cache_stats",
            "plan_from_params", "warm_plans_from_params",
            "DEFAULT_X_TILE_ELEMS"]
 
@@ -486,6 +489,431 @@ def rgcsr_spmm(plan: RgCSRPlan, x, *, d_tile: int = LANES,
         y, jnp.asarray(x), plan.gather_idx, plan.grouped_mask,
         plan.spill_values, plan.spill_rows, plan.spill_columns,
         n_rows=plan.n_rows, has_spill=plan.n_spilled_elements > 0)
+
+
+# ---------------------------------------------------------------------------
+# Row-sharded multi-device SpMV/SpMM (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedRgCSRPlan:
+    """Stacked, device-major execution plan for a :class:`ShardedRgCSR`.
+
+    Each shard's :class:`RgCSRPlan` (built by the unchanged ``make_plan`` —
+    block or adaptive grouping applies *per shard*) is padded to the
+    across-shard maxima and stacked on a leading device axis, which is what
+    ``shard_map`` needs: one SPMD program, per-device slices of uniform
+    shape.  Padding rows are exact zeros; padding *steps* point at the
+    shard's own last real group with ``step_first = 0``, so they accumulate
+    zeros into an already-initialized output block (the Pallas revisit rule
+    stays satisfied: padded steps extend the last group's consecutive run).
+
+    ``x_mode`` fixes how the dense vector is reconciled (arXiv:1112.5588's
+    local/remote split):
+
+    * ``'replicated'`` — x is replicated; columns keep global indices.
+      Zero communication, D× x memory: the fast path while x fits.
+    * ``'split'`` — x is row-sharded over the same axis
+      (``cols_per_shard`` entries per device).  At plan time each shard's
+      referenced columns are split into *local* (owned by this device) and
+      *remote* (``remote_cols``, usually tiny); stored column indices are
+      remapped into the compact ``[local ‖ remote]`` space, and at run time
+      the remote entries are gathered before the kernel.  The kernel's x
+      working set drops from ``n_cols`` to ``cols_per_shard + R_max``.
+    """
+
+    values3d: Any        # (D, S_pad, G)
+    columns3d: Any       # (D, S_pad, G) int32 (global or compact, per x_mode)
+    step_group2d: Any    # (D, T_max) int32
+    step_first2d: Any    # (D, T_max) int32
+    n_rows: int
+    n_cols: int
+    n_shards: int
+    rows_per_shard: int
+    cols_per_shard: int          # x entries owned per device (split mode)
+    n_groups: int                # max over shards (uniform kernel out shape)
+    group_size: int
+    chunks_per_step: int = 1
+    ordering: str = "block"
+    spill_threshold: int = 0
+    x_mode: str = "replicated"
+    nnz: int = -1
+    remote_cols: Any = None      # (D, R_max) int32 (split mode only)
+    gather_idx: Any = None       # (D, rows_per_shard) int32 (adaptive)
+    grouped_mask: Any = None     # (D, rows_per_shard) bool (adaptive)
+    spill_values: Any = None     # (D, E_max) (adaptive + spill)
+    spill_rows: Any = None       # (D, E_max) int32 local row ids
+    spill_columns: Any = None    # (D, E_max) int32 (global/compact per mode)
+    # true per-shard figures, pre-stacking (the ~1/D acceptance numbers)
+    shard_stored_slots: Tuple[int, ...] = ()
+    shard_num_steps: Tuple[int, ...] = ()
+    shard_remote_cols: Tuple[int, ...] = ()
+
+    @property
+    def num_steps_max(self) -> int:
+        return int(self.step_group2d.shape[1])
+
+    @property
+    def stored_slots_max(self) -> int:
+        """Per-device stored slot rows after stacking (= max over shards)."""
+        return int(self.values3d.shape[1])
+
+    @property
+    def n_spilled_max(self) -> int:
+        return 0 if self.spill_values is None else int(
+            self.spill_values.shape[1])
+
+    @property
+    def stored_elements(self) -> int:
+        """True (unstacked) grouped slots × lanes + COO tails, all shards."""
+        spilled = sum(self.shard_spilled_elements)
+        return sum(self.shard_stored_slots) * self.group_size + spilled
+
+    @property
+    def shard_spilled_elements(self) -> Tuple[int, ...]:
+        if self.spill_values is None:
+            return (0,) * self.n_shards
+        sv = np.asarray(self.spill_values)
+        return tuple(int((sv[d] != 0).sum()) for d in range(self.n_shards))
+
+    @property
+    def padded_slot_fraction(self) -> float:
+        if self.nnz < 0 or self.stored_elements == 0:
+            return 0.0
+        return (self.stored_elements - self.nnz) / self.stored_elements
+
+
+def make_sharded_plan(sm: ShardedRgCSR, *, chunks_per_step: int = 1,
+                      ordering: str = "block", spill_threshold: int = 0,
+                      x_mode: str = "replicated") -> ShardedRgCSRPlan:
+    """Build per-shard plans via :func:`make_plan`, then pad + stack them.
+
+    Reuses the whole single-device plan machinery per shard — the adaptive
+    length-aware permutation, per-group slot sizing, and COO spill are each
+    computed inside a shard's own row block, so the autotuner's
+    ``(chunks_per_step, ordering, spill_threshold)`` axes apply
+    independently of the sharding.
+    """
+    if x_mode not in ("replicated", "split"):
+        raise ValueError(
+            f"x_mode must be 'replicated' or 'split', got {x_mode!r}")
+    d_sh = sm.n_shards
+    n_rows, n_cols = sm.shape
+    g = sm.group_size
+    rows_per_step = chunks_per_step * SUBLANES
+    plans = [make_plan(s, chunks_per_step=chunks_per_step, ordering=ordering,
+                       spill_threshold=spill_threshold) for s in sm.shards]
+    adaptive = ordering == "adaptive"
+    n_groups = max(p.n_groups for p in plans)
+    t_max = max(p.num_steps for p in plans)
+    s_pad = t_max * rows_per_step
+    cstride = max(1, -(-n_cols // d_sh))
+
+    # per-shard local/remote column split + compact remap (split mode)
+    remaps, remotes = [], []
+    if x_mode == "split":
+        for d, shard in enumerate(sm.shards):
+            lo, hi = d * cstride, min((d + 1) * cstride, n_cols)
+            _, true_cols, _ = shard.to_csr_arrays()
+            ref = np.unique(true_cols.astype(np.int64))
+            remote = ref[(ref < lo) | (ref >= hi)]
+            table = np.zeros(max(n_cols, 1), np.int32)
+            if hi > lo:
+                table[lo:hi] = np.arange(hi - lo, dtype=np.int32)
+            table[remote] = cstride + np.arange(len(remote), dtype=np.int32)
+            remaps.append(table)
+            remotes.append(remote.astype(np.int32))
+        r_max = max(len(r) for r in remotes)
+    else:
+        r_max = 0
+
+    vals = np.zeros((d_sh, s_pad, g),
+                    np.asarray(plans[0].values2d).dtype)
+    cols = np.zeros((d_sh, s_pad, g), np.int32)
+    sg2 = np.zeros((d_sh, t_max), np.int32)
+    sf2 = np.zeros((d_sh, t_max), np.int32)
+    remote_cols = np.zeros((d_sh, r_max), np.int32)
+    e_max = max(p.n_spilled_elements for p in plans) if adaptive else 0
+    gidx = np.zeros((d_sh, sm.rows_per_shard), np.int32)
+    gmask = np.zeros((d_sh, sm.rows_per_shard), bool)
+    sp_v = np.zeros((d_sh, e_max), vals.dtype)
+    sp_r = np.zeros((d_sh, e_max), np.int32)
+    sp_c = np.zeros((d_sh, e_max), np.int32)
+
+    for d, p in enumerate(plans):
+        s_d, t_d = p.stored_slots, p.num_steps
+        vals[d, :s_d] = np.asarray(p.values2d)
+        c2d = np.asarray(p.columns2d)
+        if x_mode == "split":
+            c2d = remaps[d][c2d]
+        cols[d, :s_d] = c2d
+        sg2[d, :t_d] = np.asarray(p.step_group)
+        # padding steps extend the shard's own last group (step_first = 0,
+        # zero values): consecutive revisit of an initialized block
+        sg2[d, t_d:] = int(np.asarray(p.step_group)[-1]) if t_d else 0
+        sf2[d, :t_d] = np.asarray(p.step_first)
+        if x_mode == "split":
+            remote_cols[d, : len(remotes[d])] = remotes[d]
+        if adaptive:
+            gidx[d] = np.asarray(p.gather_idx)
+            gmask[d] = np.asarray(p.grouped_mask)
+            e_d = p.n_spilled_elements
+            if e_d:
+                sp_v[d, :e_d] = np.asarray(p.spill_values)
+                sp_r[d, :e_d] = np.asarray(p.spill_rows)
+                sc = np.asarray(p.spill_columns)
+                sp_c[d, :e_d] = remaps[d][sc] if x_mode == "split" else sc
+    return ShardedRgCSRPlan(
+        values3d=jnp.asarray(vals),
+        columns3d=jnp.asarray(cols),
+        step_group2d=jnp.asarray(sg2),
+        step_first2d=jnp.asarray(sf2),
+        n_rows=n_rows, n_cols=n_cols, n_shards=d_sh,
+        rows_per_shard=sm.rows_per_shard, cols_per_shard=cstride,
+        n_groups=n_groups, group_size=g, chunks_per_step=chunks_per_step,
+        ordering=ordering, spill_threshold=int(spill_threshold),
+        x_mode=x_mode, nnz=sm.nnz,
+        remote_cols=jnp.asarray(remote_cols) if x_mode == "split" else None,
+        gather_idx=jnp.asarray(gidx) if adaptive else None,
+        grouped_mask=jnp.asarray(gmask) if adaptive else None,
+        spill_values=jnp.asarray(sp_v) if adaptive else None,
+        spill_rows=jnp.asarray(sp_r) if adaptive else None,
+        spill_columns=jnp.asarray(sp_c) if adaptive else None,
+        shard_stored_slots=tuple(p.stored_slots for p in plans),
+        shard_num_steps=tuple(p.num_steps for p in plans),
+        shard_remote_cols=tuple(len(r) for r in remotes) if remotes
+        else (0,) * d_sh,
+    )
+
+
+# sharded plan memo: (id(matrix), config, x_mode) -> plan, GC-evicted like
+# PLAN_CACHE (plan keys include x_mode because the stored column indices
+# differ between the replicated and compact-split layouts)
+_SHARDED_PLANS: "collections.OrderedDict[tuple, ShardedRgCSRPlan]" = \
+    collections.OrderedDict()
+_SHARDED_PLANS_MAX = 64
+_SHARDED_LOCK = threading.RLock()
+_SHARDED_FINALIZED: set = set()
+_SHARDED_STATS = {"hits": 0, "misses": 0}
+
+
+def get_sharded_plan(sm: ShardedRgCSR, *, chunks_per_step: int = 1,
+                     ordering: str = "block", spill_threshold: int = 0,
+                     x_mode: str = "replicated") -> ShardedRgCSRPlan:
+    """Fetch (or build and memoize) the stacked sharded plan for ``sm``."""
+    key = (id(sm), chunks_per_step, ordering, int(spill_threshold), x_mode)
+    with _SHARDED_LOCK:
+        plan = _SHARDED_PLANS.get(key)
+        if plan is not None:
+            _SHARDED_STATS["hits"] += 1
+            _SHARDED_PLANS.move_to_end(key)
+            return plan
+    plan = make_sharded_plan(sm, chunks_per_step=chunks_per_step,
+                             ordering=ordering,
+                             spill_threshold=spill_threshold, x_mode=x_mode)
+    with _SHARDED_LOCK:
+        if key not in _SHARDED_PLANS:
+            _SHARDED_STATS["misses"] += 1
+            _SHARDED_PLANS[key] = plan
+            if id(sm) not in _SHARDED_FINALIZED:
+                _SHARDED_FINALIZED.add(id(sm))
+                weakref.finalize(sm, _evict_sharded, id(sm))
+            while len(_SHARDED_PLANS) > _SHARDED_PLANS_MAX:
+                _SHARDED_PLANS.popitem(last=False)
+        else:
+            _SHARDED_STATS["hits"] += 1
+            plan = _SHARDED_PLANS[key]
+    return plan
+
+
+def _evict_sharded(mid: int) -> None:
+    with _SHARDED_LOCK:
+        _SHARDED_FINALIZED.discard(mid)
+        for key in [k for k in _SHARDED_PLANS if k[0] == mid]:
+            del _SHARDED_PLANS[key]
+
+
+def sharded_plan_cache_stats() -> Dict[str, int]:
+    with _SHARDED_LOCK:
+        return {"hits": _SHARDED_STATS["hits"],
+                "misses": _SHARDED_STATS["misses"],
+                "entries": len(_SHARDED_PLANS)}
+
+
+# memo of jitted shard_map executables per (plan, mesh, axis, kind) — the
+# shard_map wrapper must be a stable callable for jax's jit cache to hit
+_SHARDED_EXEC: "collections.OrderedDict[tuple, Any]" = \
+    collections.OrderedDict()
+_SHARDED_EXEC_MAX = 32
+
+
+def _sharded_args(plan: ShardedRgCSRPlan):
+    """(args, per-arg PartitionSpec dim-count) in the inner-fn unpack order."""
+    args = [plan.values3d, plan.columns3d, plan.step_group2d,
+            plan.step_first2d]
+    ndims = [3, 3, 2, 2]
+    if plan.x_mode == "split":
+        args.append(plan.remote_cols)
+        ndims.append(2)
+    if plan.ordering == "adaptive":
+        args += [plan.gather_idx, plan.grouped_mask]
+        ndims += [2, 2]
+        if plan.n_spilled_max > 0:
+            args += [plan.spill_values, plan.spill_rows, plan.spill_columns]
+            ndims += [2, 2, 2]
+    return args, ndims
+
+
+def _build_sharded_exec(plan: ShardedRgCSRPlan, kind: str, mesh, axis: str,
+                        interpret: bool, d_tile: int):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    split = plan.x_mode == "split"
+    adaptive = plan.ordering == "adaptive"
+    has_spill = adaptive and plan.n_spilled_max > 0
+    rps = plan.rows_per_shard
+    empty_v = jnp.zeros((0,), plan.values3d.dtype)
+    empty_i = jnp.zeros((0,), jnp.int32)
+
+    def per_shard(*a):
+        it = iter(a)
+        vals, cols = next(it)[0], next(it)[0]            # (S_pad, G)
+        sg, sf = next(it)[0], next(it)[0]                # (T_max,)
+        remote = next(it)[0] if split else None
+        gi = next(it)[0] if adaptive else None
+        gm = next(it)[0] if adaptive else None
+        sv = next(it)[0] if has_spill else empty_v
+        sr = next(it)[0] if has_spill else empty_i
+        sc = next(it)[0] if has_spill else empty_i
+        x_in = next(it)
+        if split:
+            # local/remote reconciliation: own slice stays put; the (plan-
+            # time-computed, usually tiny) remote entries are gathered from
+            # the all-gathered vector.  On real hardware the all_gather
+            # becomes a sparse collective; the kernel working set is
+            # already bounded to cols_per_shard + R_max either way.
+            x_full = jax.lax.all_gather(x_in, axis, tiled=True)
+            if kind == "spmv":
+                x_use = jnp.concatenate(
+                    [x_in, jnp.take(x_full, remote, axis=0)])
+            else:
+                x_use = jnp.concatenate(
+                    [x_in, jnp.take(x_full, remote, axis=0)], axis=0)
+        else:
+            x_use = x_in
+        if kind == "spmv":
+            n_eff = x_use.shape[0]
+            # same VMEM-bounded column tiling as the single-device wrapper:
+            # single tile while x fits, masked multi-tile beyond
+            xt, n_pad = _x_tile_for(_pad_to(max(n_eff, 1), LANES), None)
+            x_pad = jnp.zeros((1, n_pad), x_use.dtype).at[0, :n_eff].set(
+                x_use)
+            y = rgcsr_spmv_pallas(
+                sg, sf, vals, cols, x_pad, n_groups=plan.n_groups,
+                group_size=plan.group_size,
+                chunks_per_step=plan.chunks_per_step, x_tile=xt,
+                interpret=interpret)
+            y_flat = y.reshape(-1)
+            if not adaptive:
+                return y_flat[:rps]
+            return _adaptive_finish_spmv(
+                y_flat, x_use, gi, gm, sv, sr, sc, n_rows=rps,
+                has_spill=has_spill)
+        n_eff, d = x_use.shape
+        n_pad = _pad_to(max(n_eff, 1), SUBLANES)
+        d_pad = _pad_to(max(d, 1), d_tile)
+        x_pad = jnp.zeros((n_pad, d_pad), x_use.dtype).at[
+            :n_eff, :d].set(x_use)
+        y = rgcsr_spmm_pallas(
+            sg, sf, vals, cols, x_pad, n_groups=plan.n_groups,
+            group_size=plan.group_size, d_tile=d_tile,
+            chunks_per_step=plan.chunks_per_step, interpret=interpret)
+        if not adaptive:
+            return y[:rps, :d]
+        return _adaptive_finish_spmm(
+            y, x_use, gi, gm, sv, sr, sc, n_rows=rps, has_spill=has_spill)
+
+    _, ndims = _sharded_args(plan)
+    in_specs = [P(*((axis,) + (None,) * (nd - 1))) for nd in ndims]
+    if kind == "spmv":
+        in_specs.append(P(axis) if split else P())
+        out_spec = P(axis)
+    else:
+        in_specs.append(P(axis, None) if split else P(None, None))
+        out_spec = P(axis, None)
+    return jax.jit(shard_map(per_shard, mesh=mesh,
+                             in_specs=tuple(in_specs), out_specs=out_spec,
+                             check_rep=False))
+
+
+def _sharded_exec(plan: ShardedRgCSRPlan, kind: str, mesh, axis: str,
+                  interpret: bool, d_tile: int = LANES):
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {axis!r}: {mesh.axis_names}")
+    if mesh.shape[axis] != plan.n_shards:
+        raise ValueError(
+            f"plan built for {plan.n_shards} shards but mesh axis "
+            f"{axis!r} has {mesh.shape[axis]} devices")
+    key = (id(plan), kind, id(mesh), axis, interpret, d_tile)
+    with _SHARDED_LOCK:
+        fn = _SHARDED_EXEC.get(key)
+        if fn is not None:
+            _SHARDED_EXEC.move_to_end(key)
+            return fn
+    fn = _build_sharded_exec(plan, kind, mesh, axis, interpret, d_tile)
+    with _SHARDED_LOCK:
+        if key not in _SHARDED_EXEC:
+            _SHARDED_EXEC[key] = fn
+            weakref.finalize(plan, _evict_sharded_exec, id(plan))
+            while len(_SHARDED_EXEC) > _SHARDED_EXEC_MAX:
+                _SHARDED_EXEC.popitem(last=False)
+        else:
+            fn = _SHARDED_EXEC[key]
+    return fn
+
+
+def _evict_sharded_exec(pid: int) -> None:
+    with _SHARDED_LOCK:
+        for key in [k for k in _SHARDED_EXEC if k[0] == pid]:
+            del _SHARDED_EXEC[key]
+
+
+def sharded_rgcsr_spmv(plan: ShardedRgCSRPlan, x, *, mesh, axis: str,
+                       interpret: bool | None = None):
+    """y = A @ x over a 1-D mesh axis: one shard_map program, each device
+    running the existing Pallas kernel on its row shard's local slice.
+
+    ``x``: the full (n_cols,) vector; in ``'split'`` mode it is padded to
+    ``n_shards · cols_per_shard`` and row-sharded over ``axis`` by GSPMD,
+    in ``'replicated'`` mode it is broadcast.  Returns (n_rows,).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    fn = _sharded_exec(plan, "spmv", mesh, axis, interpret)
+    args, _ = _sharded_args(plan)
+    x = jnp.asarray(x)
+    if plan.x_mode == "split":
+        xw = plan.n_shards * plan.cols_per_shard
+        x = jnp.zeros((xw,), x.dtype).at[: plan.n_cols].set(x)
+    y = fn(*args, x)
+    return y[: plan.n_rows]
+
+
+def sharded_rgcsr_spmm(plan: ShardedRgCSRPlan, x, *, mesh, axis: str,
+                       d_tile: int = LANES, interpret: bool | None = None):
+    """Y = A @ X over a 1-D mesh axis (X dense (n_cols, d)) -> (n_rows, d)."""
+    if interpret is None:
+        interpret = default_interpret()
+    fn = _sharded_exec(plan, "spmm", mesh, axis, interpret, d_tile)
+    args, _ = _sharded_args(plan)
+    x = jnp.asarray(x)
+    if plan.x_mode == "split":
+        xw = plan.n_shards * plan.cols_per_shard
+        x = jnp.zeros((xw, x.shape[1]), x.dtype).at[: plan.n_cols].set(x)
+    y = fn(*args, x)
+    return y[: plan.n_rows, : x.shape[1]]
 
 
 # ---------------------------------------------------------------------------

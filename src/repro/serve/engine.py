@@ -39,11 +39,23 @@ class ServeConfig:
 
 @dataclasses.dataclass
 class Request:
+    """One serving request.  Timing fields (all seconds, set by ``serve``):
+
+    * ``queue_s``   — time from ``serve()`` entry until this request was
+      slotted (head-of-line wait).
+    * ``prefill_s`` — its own prefill forward duration.
+    * ``latency_s`` — end-to-end latency measured from *this request's own
+      processing start* (slotting) to its completion — NOT from the start
+      of the whole serve call, which would bill earlier requests' work to
+      late-slotted ones.
+    """
     tokens: np.ndarray                  # (prompt_len,) int32
     max_new_tokens: int = 32
     out: Optional[List[int]] = None
     done: bool = False
     latency_s: float = 0.0
+    queue_s: float = 0.0
+    prefill_s: float = 0.0
 
 
 class Engine:
@@ -66,6 +78,9 @@ class Engine:
         # is a no-op for layer-stacked param trees (plans_warmed == 0).
         self.plans_warmed = 0
         self.spmv_plans_warmed = 0
+        self.sharded_spmv_plans_warmed = 0
+        self.sharded_spmv_shard_stats: List[Dict] = []
+        self._warm_sharded: List = []    # strong refs: keep cache entries
         if model_cfg.sparsity.enabled and model_cfg.sparsity.impl_is_kernel():
             from repro.kernels import ops as kops
             # warm at the model's compute dtype — the dtype the eager apply
@@ -74,7 +89,9 @@ class Engine:
             self.plans_warmed = kops.warm_plans_from_params(
                 self.params, dtype=jnp.dtype(model_cfg.dtype))
 
-    def warm_spmv_plans(self, matrices, *, repeats: int = 1):
+    def warm_spmv_plans(self, matrices, *, repeats: int = 1, mesh=None,
+                        mesh_axis: Optional[str] = None,
+                        x_mode: str = "replicated"):
         """Pre-tune and stage SpMV plans for auxiliary sparse matrices.
 
         Serving deployments that also answer SpMV traffic (iterative
@@ -93,13 +110,44 @@ class Engine:
         returned config's ``(ordering, spill_threshold, chunks_per_step)``
         itself.  Returns the winning
         :class:`repro.kernels.autotune.TuneConfig` per matrix, in order.
+
+        With ``mesh`` set, each matrix is additionally row-sharded over the
+        resolved mesh axis (``mesh_axis`` or the partitioner's
+        ``sparse_rows`` rule) and its stacked shard_map plan is built at the
+        tuned config and staged in the sharded plan cache (DESIGN.md §10) —
+        the per-shard plans reuse the winner's ``(chunks_per_step,
+        ordering, spill_threshold)`` axes, which apply independently per
+        shard.  The sharded matrices are retained on the engine so the
+        cache entries survive warmup.
         """
         from repro.kernels import autotune
         winners = []
+        if mesh is not None and mesh_axis is None:
+            from repro.sharding import resolve_spmv_shard_axis
+            mesh_axis = resolve_spmv_shard_axis(mesh)
         for dense in matrices:
-            _, result = autotune.tuned_plan(np.asarray(dense),
-                                            repeats=repeats)
+            dense = np.asarray(dense)
+            _, result = autotune.tuned_plan(dense, repeats=repeats)
             winners.append(result.config)
+            if mesh is not None:
+                from repro.core.formats import ShardedRgCSR
+                from repro.kernels import ops as kops
+                cfg = result.config
+                sm = ShardedRgCSR.from_dense(
+                    dense, n_shards=int(mesh.shape[mesh_axis]),
+                    group_size=cfg.group_size)
+                splan = kops.get_sharded_plan(
+                    sm, chunks_per_step=cfg.chunks_per_step,
+                    ordering=cfg.ordering,
+                    spill_threshold=cfg.spill_threshold, x_mode=x_mode)
+                self._warm_sharded.append((sm, splan))
+                self.sharded_spmv_plans_warmed += 1
+                self.sharded_spmv_shard_stats.append({
+                    "n_shards": splan.n_shards,
+                    "stored_slots": list(splan.shard_stored_slots),
+                    "num_steps": list(splan.shard_num_steps),
+                    "remote_cols": list(splan.shard_remote_cols),
+                })
         self.spmv_plans_warmed += len(winners)
         return winners
 
@@ -110,8 +158,10 @@ class Engine:
         from repro.kernels import ops as kops
         return {"plan_cache": kops.PLAN_CACHE.stats(),
                 "param_plans": kops.param_plan_stats(),
+                "sharded_plan_cache": kops.sharded_plan_cache_stats(),
                 "plans_warmed": self.plans_warmed,
-                "spmv_plans_warmed": self.spmv_plans_warmed}
+                "spmv_plans_warmed": self.spmv_plans_warmed,
+                "sharded_spmv_plans_warmed": self.sharded_spmv_plans_warmed}
 
     # ---------------------------------------------------------------- sample
     def _sample(self, logits) -> jax.Array:
@@ -120,23 +170,43 @@ class Engine:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self._key, sub = jax.random.split(self._key)
         logits = logits / self.cfg.temperature
-        if self.cfg.top_k:
-            kth = jnp.sort(logits, axis=-1)[:, -self.cfg.top_k][:, None]
+        # clamp top_k to the vocab: k >= vocab keeps every token (the sort
+        # index -k would otherwise read out of range), k <= 0 disables.
+        k = min(int(self.cfg.top_k), logits.shape[-1])
+        if 0 < k < logits.shape[-1]:
+            kth = jnp.sort(logits, axis=-1)[:, -k][:, None]
             logits = jnp.where(logits < kth, -1e30, logits)
         return jax.random.categorical(sub, logits).astype(jnp.int32)
 
     # ------------------------------------------------------------- one-shot
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 32
                  ) -> np.ndarray:
-        """Batch-synchronous generation (all prompts same length)."""
+        """Batch-synchronous generation (all prompts same length).
+
+        Output is always ``(b, max_new_tokens)``; with ``eos_id >= 0``,
+        sequences that sample EOS (including at prefill — the first token
+        counts) stop consuming decode steps and their remaining positions
+        are filled with ``eos_id``.  Once every sequence has finished the
+        decode loop exits instead of burning the rest of the budget.
+        """
         b = prompts.shape[0]
+        eos = self.cfg.eos_id
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         logits, caches = self._prefill(self.params, batch)
         tok = self._sample(logits)[:, None]
+        done = np.asarray(tok[:, 0] == eos) if eos >= 0 else np.zeros(b, bool)
         outs = [tok]
         for _ in range(max_new_tokens - 1):
+            if eos >= 0 and done.all():
+                pad = jnp.full((b, 1), eos, jnp.int32)
+                outs.extend([pad] * (max_new_tokens - len(outs)))
+                break
             logits, caches = self._decode(self.params, caches, tok)
-            tok = self._sample(logits)[:, None]
+            nxt = self._sample(logits)
+            if eos >= 0:
+                nxt = jnp.where(jnp.asarray(done), eos, nxt)
+                done |= np.asarray(nxt == eos)
+            tok = nxt[:, None]
             outs.append(tok)
         return np.asarray(jnp.concatenate(outs, axis=1))
 
@@ -148,12 +218,32 @@ class Engine:
         the fixed batch; prefill is per-request (batch 1) and its cache is
         spliced into the slot dimension.  Finished slots immediately pull
         the next request — no head-of-line blocking on long generations.
+
+        Constraints/semantics:
+
+        * the shared KV-cache position index means every request slotted
+          into one live batch must have the **same prompt length** — a
+          mismatch raises ``ValueError`` (the cache is reset whenever the
+          batch fully drains, so consecutive *generations* may differ).
+          The guard covers length mismatches only: a same-length request
+          refilled into a partially-decoded batch still inherits the
+          advanced shared index (zero-KV positions between its prompt and
+          the write head) — the pre-existing trade-off of scalar-index
+          splicing, tracked as the per-slot-index ROADMAP item;
+        * a request whose first (prefill-sampled) token is EOS, or whose
+          ``max_new_tokens <= 1``, completes immediately without spending
+          decode steps or a slot;
+        * per-request timing lands in ``queue_s`` / ``prefill_s`` /
+          ``latency_s`` (see :class:`Request`) — ``latency_s`` is measured
+          from the request's own processing start, not the serve() call.
         """
         n = self.cfg.n_slots
         queue = list(requests)
         active: List[Optional[Request]] = [None] * n
         remaining = [0] * n
+        slot_t0 = [0.0] * n                 # processing start per slot
         caches = None
+        batch_prompt_len: Optional[int] = None
         cur_tok = jnp.zeros((n, 1), jnp.int32)
         t_start = time.time()
 
@@ -190,24 +280,44 @@ class Engine:
             return jax.tree_util.tree_unflatten(treedef, leaves)
 
         while queue or any(a is not None for a in active):
-            # fill free slots
+            # fill free slots; a request finishing at prefill (EOS as its
+            # first token, or a 1-token budget) completes without ever
+            # occupying the slot, so the next queued request slots in
             for slot in range(n):
-                if active[slot] is None and queue:
+                while active[slot] is None and queue:
                     req = queue.pop(0)
+                    if (batch_prompt_len is not None
+                            and len(req.tokens) != batch_prompt_len):
+                        raise ValueError(
+                            f"mixed-length prompts in one continuous batch "
+                            f"are unsupported: the KV-cache position index "
+                            f"is shared across slots, so splicing a "
+                            f"{len(req.tokens)}-token prompt into a batch "
+                            f"established with {batch_prompt_len}-token "
+                            f"prompts would corrupt attention offsets for "
+                            f"every active slot.  Pad prompts to a common "
+                            f"length or serve them in separate batches.")
                     t0 = time.time()
+                    req.queue_s = t0 - t_start
                     logits, slot_cache = self._prefill(
                         self.params,
                         {"tokens": jnp.asarray(req.tokens[None, :],
                                                jnp.int32)})
-                    caches = splice(caches, slot_cache, slot)
                     first = int(self._sample(logits)[0])
                     req.out = [first]
-                    req.latency_s = time.time() - t0
+                    req.prefill_s = time.time() - t0
+                    if first == self.cfg.eos_id or req.max_new_tokens <= 1:
+                        req.done = True
+                        req.latency_s = time.time() - t0
+                        continue
+                    caches = splice(caches, slot_cache, slot)
+                    batch_prompt_len = len(req.tokens)
+                    slot_t0[slot] = t0
                     active[slot] = req
                     remaining[slot] = req.max_new_tokens - 1
                     cur_tok = cur_tok.at[slot, 0].set(first)
             if all(a is None for a in active):
-                break
+                break        # queue is empty too (the fill loop drained it)
             logits, caches = self._decode(self.params, caches, cur_tok)
             nxt = self._sample(logits)
             cur_tok = nxt[:, None]
@@ -220,6 +330,11 @@ class Engine:
                 remaining[slot] -= 1
                 if remaining[slot] <= 0 or tok == self.cfg.eos_id:
                     req.done = True
-                    req.latency_s = time.time() - t_start
+                    req.latency_s = time.time() - slot_t0[slot]
                     active[slot] = None
+            if all(a is None for a in active) and queue:
+                # batch fully drained with work left: drop the stale caches
+                # so the next generation re-establishes its prompt length
+                caches = None
+                batch_prompt_len = None
         return requests

@@ -4,4 +4,5 @@ from repro.sharding.partitioner import (  # noqa: F401
     ShardingRules,
     SERVE_RULES,
     TRAIN_RULES,
+    resolve_spmv_shard_axis,
 )

@@ -29,7 +29,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.models.spec import P
 
-__all__ = ["Partitioner", "ShardingRules", "TRAIN_RULES", "SERVE_RULES"]
+__all__ = ["Partitioner", "ShardingRules", "TRAIN_RULES", "SERVE_RULES",
+           "resolve_spmv_shard_axis"]
 
 _is_p = lambda x: isinstance(x, P)
 
@@ -107,6 +108,20 @@ def _filter_axis(mesh: Mesh, axis):
     return axis if axis in mesh.axis_names else None
 
 
+def resolve_spmv_shard_axis(mesh: Mesh, shape_kind: str = "decode") -> str:
+    """The mesh axis for row-sharded SpMV, or raise with guidance.
+
+    Single source of the lookup-or-raise shared by ``core.spmv`` dispatch
+    and ``Engine.warm_spmv_plans`` (DESIGN.md §10 routing).
+    """
+    axis = Partitioner(mesh, shape_kind).spmv_shard_axis()
+    if axis is None:
+        raise ValueError(
+            f"no mesh axis resolves the 'sparse_rows' rule on mesh axes "
+            f"{mesh.axis_names}; pass mesh_axis= explicitly")
+    return axis
+
+
 class Partitioner:
     def __init__(self, mesh: Mesh, shape_kind: str = "train",
                  rules: Optional[ShardingRules] = None):
@@ -137,6 +152,33 @@ class Partitioner:
 
     def _named(self, spec: PartitionSpec) -> NamedSharding:
         return NamedSharding(self.mesh, spec)
+
+    # ------------------------------------------------------------ sparse spmv
+    def spmv_shard_axis(self) -> Optional[str]:
+        """Mesh axis the ``sparse_rows`` rule resolves to on this mesh.
+
+        This is the routing hook for the row-sharded SpMV path
+        (DESIGN.md §10): ``ShardedRgCSR`` splits rows over exactly one mesh
+        axis, and both rule tables already map ``sparse_rows → model``.
+        Returns the first rule candidate that is a single axis present on
+        the mesh (row counts are padded per shard, so no divisibility check
+        applies), or ``None`` when every candidate filters away.
+        """
+        for cand in _candidates(self.rules.params.get("sparse_rows")):
+            cand = _filter_axis(self.mesh, cand)
+            if cand is None:
+                continue
+            if isinstance(cand, tuple):   # row shards need a single 1-D axis
+                cand = cand[0] if len(cand) == 1 else None
+                if cand is None:
+                    continue
+            return cand
+        return None
+
+    def spmv_shard_count(self) -> int:
+        """Device count of the resolved SpMV row-shard axis (1 = unsharded)."""
+        axis = self.spmv_shard_axis()
+        return 1 if axis is None else int(self.mesh.shape[axis])
 
     # ---------------------------------------------------------------- params
     def param_specs(self, spec_tree):

@@ -10,6 +10,34 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture
+def deterministic_autotune(monkeypatch):
+    """Replace the autotuner's measured timer with a deterministic cost
+    model so winner assertions cannot flake under machine load.
+
+    The model mirrors what interpret mode actually pays: a dominant
+    per-grid-step cost (Python-level step overhead), a stored-bytes term,
+    and an adaptive epilogue penalty (inverse gather + spill segment-sum).
+    Each candidate is still *executed* once — plan construction and the
+    kernel launch path stay covered; only the µs that rank the winners are
+    synthesized.  The memo is cleared on both sides so fake-timed winners
+    never leak into (or from) other tests.
+    """
+    from repro.kernels import autotune
+
+    def fake_time_us(run, plan, cfg, **kwargs):
+        run(plan, cfg)
+        us = 100.0 * plan.num_steps + 1e-3 * plan.stored_elements
+        if plan.ordering == "adaptive":
+            us += 20.0 + 5e-3 * plan.n_spilled_elements
+        return us
+
+    monkeypatch.setattr(autotune, "time_us", fake_time_us)
+    autotune.clear_memo()
+    yield
+    autotune.clear_memo()
+
+
 def random_sparse(rng, n, m=None, density=0.05, dtype=np.float32):
     m = m or n
     a = (rng.uniform(size=(n, m)) < density).astype(dtype)

@@ -203,8 +203,7 @@ def test_spill_threshold_candidates():
     assert autotune.spill_threshold_candidates(np.array([3, 3, 3])) == (0,)
 
 
-def test_autotune_searches_orderings_jointly():
-    autotune.clear_memo()
+def test_autotune_searches_orderings_jointly(deterministic_autotune):
     a = _skewed(13)
     res = autotune.autotune_spmv(a, repeats=1)
     orderings = {cfg.ordering for cfg, _ in res.timings}
@@ -215,12 +214,12 @@ def test_autotune_searches_orderings_jointly():
     assert res.us_per_call <= res.baseline_us
 
 
-def test_autotune_prefers_adaptive_on_skewed():
+def test_autotune_prefers_adaptive_on_skewed(deterministic_autotune):
     """On a pathological matrix the regrouped/spilled plan does far less
-    interpret-mode grid work, so the measured search must pick it."""
-    autotune.clear_memo()
+    grid work, so the search must pick it.  Ranked by the deterministic
+    fake timer (conftest): the real measured medians flaked under load."""
     a = generate("circuit", 256, seed=1)
-    res = autotune.autotune_spmv(a, repeats=2)
+    res = autotune.autotune_spmv(a, repeats=1)
     assert res.config.ordering == "adaptive"
     assert res.speedup >= 1.0
 

@@ -60,6 +60,119 @@ def test_temperature_sampling_varies():
     assert not np.array_equal(a, b)        # rng key advances
 
 
+# --------------------------------------------------- serving-loop bugfixes
+
+
+def _first_greedy_token(engine, prompt):
+    return int(engine.generate(prompt[None, :], max_new_tokens=1)[0, 0])
+
+
+def test_prefill_eos_ends_request_without_decode(engine):
+    """EOS sampled at prefill must finish the request immediately instead
+    of burning the full max_new_tokens decode budget."""
+    prompt = np.random.default_rng(6).integers(
+        0, engine.model.cfg.vocab, (9,)).astype(np.int32)
+    eos = _first_greedy_token(engine, prompt)
+    eng = Engine(engine.model.cfg, ServeConfig(max_seq=96, n_slots=2,
+                                               eos_id=eos))
+    eng.params = engine.params
+    decode_calls = []
+    orig = eng._decode
+    eng._decode = lambda *a: decode_calls.append(1) or orig(*a)
+    req = Request(tokens=prompt, max_new_tokens=8)
+    eng.serve([req])
+    assert req.done and req.out == [eos]
+    assert decode_calls == []                      # no decode steps spent
+    assert req.prefill_s > 0 and req.latency_s >= req.prefill_s
+
+
+def test_generate_stops_at_prefill_eos(engine):
+    prompt = np.random.default_rng(7).integers(
+        0, engine.model.cfg.vocab, (1, 9)).astype(np.int32)
+    eos = _first_greedy_token(engine, prompt[0])
+    eng = Engine(engine.model.cfg, ServeConfig(max_seq=96, eos_id=eos))
+    eng.params = engine.params
+    decode_calls = []
+    orig = eng._decode
+    eng._decode = lambda *a: decode_calls.append(1) or orig(*a)
+    out = eng.generate(prompt, max_new_tokens=6)
+    assert out.shape == (1, 6)                     # shape contract kept
+    assert (out == eos).all()                      # EOS-filled after stop
+    assert decode_calls == []
+
+
+def test_serve_single_token_budget(engine):
+    """max_new_tokens=1 must emit exactly one token (was: two)."""
+    prompt = np.random.default_rng(8).integers(
+        0, engine.model.cfg.vocab, (7,)).astype(np.int32)
+    req = Request(tokens=prompt, max_new_tokens=1)
+    engine.serve([req])
+    assert req.done and len(req.out) == 1
+
+
+def test_serve_rejects_mixed_length_prompts(engine):
+    rng = np.random.default_rng(9)
+    reqs = [Request(tokens=rng.integers(0, engine.model.cfg.vocab,
+                                        (ln,)).astype(np.int32),
+                    max_new_tokens=4) for ln in (10, 12)]
+    with pytest.raises(ValueError, match="mixed-length"):
+        engine.serve(reqs)                         # n_slots=2: concurrent
+
+
+def test_serve_mixed_lengths_ok_across_drained_batches(engine):
+    """With one slot the batch drains between requests, so different
+    prompt lengths are fine (the cache is re-established per request)."""
+    eng = Engine(engine.model.cfg, ServeConfig(max_seq=96, n_slots=1))
+    eng.params = engine.params
+    rng = np.random.default_rng(10)
+    reqs = [Request(tokens=rng.integers(0, engine.model.cfg.vocab,
+                                        (ln,)).astype(np.int32),
+                    max_new_tokens=3) for ln in (10, 14)]
+    done = eng.serve(reqs)
+    assert all(r.done for r in done)
+    assert all(len(r.out) == 3 for r in done)
+
+
+def test_serve_latency_accounting(engine):
+    """latency_s is per-request (from its own slotting), not from the
+    start of the whole serve call; queue_s + latency_s bounds elapsed."""
+    import time as _time
+    eng = Engine(engine.model.cfg, ServeConfig(max_seq=96, n_slots=1))
+    eng.params = engine.params
+    rng = np.random.default_rng(11)
+    reqs = [Request(tokens=rng.integers(0, engine.model.cfg.vocab,
+                                        (8,)).astype(np.int32),
+                    max_new_tokens=3) for _ in range(3)]
+    t0 = _time.time()
+    eng.serve(reqs)
+    elapsed = _time.time() - t0
+    assert all(r.prefill_s > 0 for r in reqs)
+    assert all(r.latency_s >= r.prefill_s for r in reqs)
+    # FIFO single slot: later requests wait longer
+    assert reqs[0].queue_s <= reqs[1].queue_s <= reqs[2].queue_s
+    # the regression: a late request's latency no longer includes the
+    # earlier requests' work (old code: latency_s ~= elapsed for the last)
+    for r in reqs:
+        assert r.queue_s + r.latency_s <= elapsed + 0.05
+
+
+def test_top_k_clamped_to_vocab():
+    cfg = get_smoke("granite-3-2b")
+    big_k = cfg.padded_vocab + 123
+    eng = Engine(cfg, ServeConfig(max_seq=64, temperature=1.0, top_k=big_k))
+    prompts = np.random.default_rng(12).integers(0, cfg.vocab,
+                                                 (2, 6)).astype(np.int32)
+    out = eng.generate(prompts, max_new_tokens=4)  # was: IndexError
+    assert out.shape == (2, 4)
+    assert (out >= 0).all() and (out < cfg.padded_vocab).all()
+    # exact-vocab k is a no-op filter, not an error
+    eng2 = Engine(cfg, ServeConfig(max_seq=64, temperature=1.0,
+                                   top_k=cfg.padded_vocab))
+    eng2.params = eng.params
+    out2 = eng2.generate(prompts, max_new_tokens=3)
+    assert out2.shape == (2, 3)
+
+
 def test_encdec_generate():
     cfg = get_smoke("seamless-m4t-medium")
     eng = Engine(cfg, ServeConfig(max_seq=64))

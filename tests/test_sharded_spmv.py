@@ -1,0 +1,293 @@
+"""Row-sharded multi-device RgCSR SpMV/SpMM (DESIGN.md §10).
+
+Two layers of coverage:
+
+* in-process tests validate the host-side machinery on the single real CPU
+  device — ShardedRgCSR construction, stacked-plan invariants, the
+  local/remote column split + compact remap (by emulating one device's
+  kernel call directly), and plan-cache keying;
+* subprocess tests run the actual ``shard_map`` execution path on 8 fake
+  host devices (``--xla_force_host_platform_device_count=8`` must live only
+  in the child, mirroring tests/test_distributed.py) and assert oracle
+  equivalence for ragged, empty-shard, powerlaw and spill-bearing matrices
+  plus the ~1/D per-shard stored-slots/grid-steps shrink.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import from_dense
+from repro.core.formats import ShardedRgCSR
+from repro.core.spmv import spmv
+from repro.kernels import ops as kops
+from repro.kernels.rgcsr_spmv import rgcsr_spmv_pallas
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rand(seed, n, m, density):
+    rng = np.random.default_rng(seed)
+    a = (rng.uniform(size=(n, m)) < density).astype(np.float32)
+    a *= rng.uniform(0.5, 1.5, size=(n, m)).astype(np.float32)
+    return a
+
+
+# ------------------------------------------------------------- construction
+
+
+def test_sharded_rgcsr_construction_covers_rows():
+    a = _rand(0, 300, 280, 0.05)                   # 300/8 → ragged last shard
+    sm = ShardedRgCSR.from_dense(a, n_shards=8)
+    assert sm.n_shards == 8 and sm.rows_per_shard == 38
+    assert sm.nnz == int((a != 0).sum())
+    assert all(s.shape == (38, 280) for s in sm.shards)
+    np.testing.assert_array_equal(sm.to_dense(), a)
+    lo, hi = sm.shard_rows(7)
+    assert (lo, hi) == (266, 300)                  # unpadded true range
+
+
+def test_sharded_rgcsr_empty_trailing_shard():
+    a = _rand(1, 20, 64, 0.2)
+    sm = ShardedRgCSR.from_dense(a, n_shards=8)    # rps=3: shard 7 is empty
+    assert sm.rows_per_shard == 3
+    lo, hi = sm.shard_rows(7)
+    assert hi <= lo                                # owns no real rows
+    assert sm.shards[7].nnz == 0
+    np.testing.assert_array_equal(sm.to_dense(), a)
+
+
+def test_sharded_rgcsr_rejects_bad_shards():
+    with pytest.raises(ValueError):
+        ShardedRgCSR.from_dense(_rand(2, 16, 16, 0.2), n_shards=0)
+
+
+# ------------------------------------------------------------ plan stacking
+
+
+def test_sharded_plan_uniform_stacking():
+    a = _rand(3, 300, 280, 0.05)
+    sm = ShardedRgCSR.from_dense(a, n_shards=4)
+    plan = kops.make_sharded_plan(sm, chunks_per_step=2)
+    d, s_pad, g = plan.values3d.shape
+    assert (d, g) == (4, 128)
+    assert s_pad == plan.num_steps_max * 2 * 8     # S_pad = T_max·R
+    assert plan.step_group2d.shape == (4, plan.num_steps_max)
+    assert len(plan.shard_stored_slots) == 4
+    # true per-shard slots never exceed the stacked (padded) slot count
+    assert max(plan.shard_stored_slots) <= s_pad
+    # per-shard padding steps carry no accumulator-init flags
+    sf = np.asarray(plan.step_first2d)
+    for i, t in enumerate(plan.shard_num_steps):
+        assert (sf[i, t:] == 0).all()
+
+
+def test_sharded_plan_split_remote_cols_disjoint_from_local():
+    a = _rand(4, 256, 256, 0.04)
+    sm = ShardedRgCSR.from_dense(a, n_shards=4)
+    plan = kops.make_sharded_plan(sm, x_mode="split")
+    assert plan.cols_per_shard == 64
+    rc = np.asarray(plan.remote_cols)
+    for d in range(4):
+        lo, hi = d * 64, (d + 1) * 64
+        real = rc[d, : plan.shard_remote_cols[d]]
+        assert ((real < lo) | (real >= hi)).all()  # remote = not owned
+        assert len(np.unique(real)) == len(real)
+    # compact indices stay inside the per-device x working set
+    assert int(np.asarray(plan.columns3d).max()) < \
+        plan.cols_per_shard + rc.shape[1]
+
+
+def _emulate_shard(plan, d, x):
+    """Run one device's slice of the stacked plan directly (no shard_map)."""
+    cstride = plan.cols_per_shard
+    if plan.x_mode == "split":
+        xw = plan.n_shards * cstride
+        x_glob = np.zeros(xw, np.float32)
+        x_glob[: plan.n_cols] = x
+        remote = np.asarray(plan.remote_cols)[d]
+        x_use = np.concatenate([x_glob[d * cstride: (d + 1) * cstride],
+                                x_glob[remote]])
+    else:
+        x_use = x
+    n_pad = -(-len(x_use) // 128) * 128
+    x_pad = jnp.zeros((1, n_pad), jnp.float32).at[0, : len(x_use)].set(
+        jnp.asarray(x_use))
+    y = rgcsr_spmv_pallas(
+        plan.step_group2d[d], plan.step_first2d[d], plan.values3d[d],
+        plan.columns3d[d], x_pad, n_groups=plan.n_groups,
+        group_size=plan.group_size, chunks_per_step=plan.chunks_per_step,
+        interpret=True)
+    return np.asarray(y).reshape(-1)[: plan.rows_per_shard]
+
+
+@pytest.mark.parametrize("x_mode", ["replicated", "split"])
+def test_sharded_plan_per_device_slices_match_blocks(x_mode):
+    """Each device's stacked slice × its compact x equals the dense row
+    block — the remap/local-remote split is exercised without any mesh."""
+    a = _rand(5, 200, 190, 0.06)
+    sm = ShardedRgCSR.from_dense(a, n_shards=4)
+    plan = kops.make_sharded_plan(sm, chunks_per_step=2, x_mode=x_mode)
+    x = np.random.default_rng(6).standard_normal(190).astype(np.float32)
+    for d in range(4):
+        lo, hi = sm.shard_rows(d)
+        y_d = _emulate_shard(plan, d, x)
+        np.testing.assert_allclose(y_d[: hi - lo], a[lo:hi] @ x,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_sharded_plan_cache_keys_on_x_mode_and_config():
+    sm = ShardedRgCSR.from_dense(_rand(7, 128, 128, 0.05), n_shards=4)
+    p1 = kops.get_sharded_plan(sm)
+    p2 = kops.get_sharded_plan(sm, x_mode="split")
+    p3 = kops.get_sharded_plan(sm, ordering="adaptive", spill_threshold=8)
+    assert p1 is not p2 and p2 is not p3
+    assert kops.get_sharded_plan(sm) is p1                 # repeat: hit
+    assert kops.get_sharded_plan(sm, x_mode="split") is p2
+    stats = kops.sharded_plan_cache_stats()
+    assert stats["hits"] >= 2 and stats["misses"] >= 3
+
+
+def test_sharded_spmv_requires_mesh():
+    sm = ShardedRgCSR.from_dense(_rand(8, 64, 64, 0.1), n_shards=2)
+    with pytest.raises(ValueError, match="mesh"):
+        spmv(sm, jnp.zeros(64))
+
+
+def test_partitioner_resolves_sparse_rows_axis():
+    import jax
+    from repro.sharding import Partitioner
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for kind in ("train", "decode"):
+        part = Partitioner(mesh, kind)
+        assert part.spmv_shard_axis() == "model"
+        assert part.spmv_shard_count() == 1
+
+
+# ---------------------------------------------- shard_map on 8 fake devices
+
+
+def _run(code: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert out.returncode == 0 and "OK" in out.stdout, \
+        (out.stdout[-1500:], out.stderr[-3000:])
+
+
+def test_sharded_spmv_matches_oracle_on_8_devices():
+    """The acceptance sweep: ragged, empty-shard, powerlaw and
+    spill-bearing matrices × {replicated, split} × {block, adaptive},
+    SpMV and SpMM, all equal to the jnp oracle up to fp reassociation —
+    plus the ~1/D per-shard stored-slots / grid-steps shrink."""
+    _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.core.formats import RgCSR, ShardedRgCSR
+        from repro.core.spmv import spmv, spmm
+        from repro.core.suite import generate
+        from repro.kernels import ops as kops
+
+        mesh = jax.make_mesh((8,), ("model",))
+        rng = np.random.default_rng(0)
+
+        def check(a, **kw):
+            sm = ShardedRgCSR.from_dense(a, n_shards=8)
+            x = rng.standard_normal(a.shape[1]).astype(np.float32)
+            y = np.asarray(spmv(sm, jnp.asarray(x), mesh=mesh, **kw))
+            np.testing.assert_allclose(y, a @ x, rtol=1e-4, atol=1e-4)
+
+        def rand(seed, n, m, density):
+            r = np.random.default_rng(seed)
+            a = (r.uniform(size=(n, m)) < density).astype(np.float32)
+            return a * r.uniform(0.5, 1.5, (n, m)).astype(np.float32)
+
+        ragged = rand(1, 300, 280, 0.05)           # 300 = 7·38 + 34
+        tiny = rand(2, 20, 64, 0.2)                # shard 7 empty
+        power = generate("powerlaw", 256, seed=0)
+        skew = rand(3, 256, 240, 0.02)
+        for r in np.random.default_rng(4).choice(256, 3, replace=False):
+            skew[r, :200] = 1.0                    # spill-bearing rows
+        for a in (ragged, tiny, power, skew):
+            for x_mode in ("replicated", "split"):
+                check(a, x_mode=x_mode)
+                check(a, x_mode=x_mode, ordering="adaptive")
+        check(skew, ordering="adaptive", spill_threshold=32, x_mode="split")
+        sm = ShardedRgCSR.from_dense(skew, n_shards=8)
+        plan = kops.get_sharded_plan(sm, ordering="adaptive",
+                                     spill_threshold=32, x_mode="split")
+        assert sum(plan.shard_spilled_elements) > 0
+
+        # SpMM on the same sharded plans
+        X = rng.standard_normal((280, 9)).astype(np.float32)
+        smr = ShardedRgCSR.from_dense(ragged, n_shards=8)
+        for x_mode in ("replicated", "split"):
+            Y = np.asarray(spmm(smr, jnp.asarray(X), mesh=mesh,
+                                mesh_axis="model", x_mode=x_mode,
+                                ordering="adaptive"))
+            np.testing.assert_allclose(Y, ragged @ X, rtol=1e-4, atol=1e-4)
+
+        # ~1/D: per-shard stored slots and grid steps vs the single-device
+        # plan of the same matrix/config (uniform profile: no padding floor)
+        big = rand(5, 1024, 512, 0.05)
+        single = kops.make_plan(RgCSR.from_dense(big), chunks_per_step=2)
+        sm8 = ShardedRgCSR.from_dense(big, n_shards=8)
+        p8 = kops.get_sharded_plan(sm8, chunks_per_step=2)
+        assert max(p8.shard_stored_slots) <= single.stored_slots / 8 * 1.5
+        assert max(p8.shard_num_steps) <= single.num_steps / 8 * 1.5
+        x = rng.standard_normal(512).astype(np.float32)
+        y = np.asarray(kops.sharded_rgcsr_spmv(p8, jnp.asarray(x),
+                                               mesh=mesh, axis="model"))
+        np.testing.assert_allclose(y, big @ x, rtol=1e-4, atol=1e-4)
+        print("OK")
+    """)
+
+
+def test_sharded_engine_warmup_and_partitioner_routing_on_8_devices():
+    """Engine.warm_spmv_plans with a mesh: autotuned winner config applied
+    per shard, sharded plan staged + stats recorded; core.spmv resolves the
+    mesh axis through the partitioner's sparse_rows rule."""
+    _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.configs import get_smoke
+        from repro.core.formats import ShardedRgCSR
+        from repro.core.spmv import spmv
+        from repro.core.suite import generate
+        from repro.serve import Engine, ServeConfig
+        from repro.sharding import Partitioner
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        part = Partitioner(mesh, "decode")
+        assert part.spmv_shard_axis() == "model"
+        assert part.spmv_shard_count() == 4
+
+        eng = Engine(get_smoke("granite-3-2b"), ServeConfig(max_seq=32))
+        mats = [generate("banded", 256, seed=4)]
+        winners = eng.warm_spmv_plans(mats, repeats=1, mesh=mesh)
+        assert len(winners) == 1
+        stats = eng.plan_cache_stats()
+        assert stats["sharded_spmv_plans_warmed"] == 1
+        assert stats["sharded_plan_cache"]["entries"] >= 1
+        shard_stats = eng.sharded_spmv_shard_stats[0]
+        assert shard_stats["n_shards"] == 4
+        assert len(shard_stats["stored_slots"]) == 4
+
+        # dispatch: mesh_axis defaults to the sparse_rows rule ('model')
+        a = generate("uniform", 256, seed=1)
+        sm = ShardedRgCSR.from_dense(a, n_shards=4)
+        x = np.random.default_rng(2).standard_normal(
+            a.shape[1]).astype(np.float32)
+        y = np.asarray(spmv(sm, jnp.asarray(x), mesh=mesh))
+        np.testing.assert_allclose(y, a @ x, rtol=1e-4, atol=1e-4)
+        print("OK")
+    """)
