@@ -8,15 +8,20 @@ before any jax import, unless the environment already provides one):
         --out BENCH_spmv_sharded.json
 
 Per matrix it builds the single-device plan and the 8-shard stacked plan at
-the same config (cps=2, block + heuristic-spill adaptive), verifies the
-shard_map result against the dense product, and records the tentpole's
-acceptance figures: **per-shard stored slots and grid steps vs 1/D of the
-single-device plan** (the ~1/D shrink), the split-mode remote-column count
-per shard (the communicated x entries of arXiv:1112.5588's local/remote
-decomposition — usually tiny), and µs/call for the replicated and split
-paths.  Absolute µs are CPU interpret-mode (every shard's kernel executes
-sequentially on the host), so only the *structural* figures are meaningful;
-timing is recorded to keep the path exercised end to end.
+a fixed config (cps=2, block + heuristic-spill adaptive) **plus the
+per-shard autotuned plan** (DESIGN.md §11: each shard's own
+``(chunks_per_step, ordering, spill_threshold)`` winner), verifies every
+shard_map result against the dense product, and records the acceptance
+figures: **per-shard stored slots and grid steps vs 1/D of the
+single-device plan** (the ~1/D shrink), the split-mode **exchange volume**
+of the §11 plan-driven sparse collective — received x entries per shard,
+asserted equal to that shard's plan-time remote column count, vs the
+``n_cols`` entries the old all_gather moved per device — and µs/call for
+the replicated, split and per-shard-tuned paths.  Absolute µs are CPU
+interpret-mode (every shard's kernel executes sequentially on the host), so
+only the *structural* figures are meaningful; timing is recorded to keep
+the path exercised end to end and to let the CI gate compare within-run
+normalized ratios (benchmarks/check_bench_regression.py --sharded-*).
 """
 from __future__ import annotations
 
@@ -29,6 +34,7 @@ import argparse          # noqa: E402
 import json              # noqa: E402
 import platform          # noqa: E402
 import sys               # noqa: E402
+import time              # noqa: E402
 from typing import Dict  # noqa: E402
 
 import jax               # noqa: E402
@@ -37,7 +43,6 @@ import numpy as np       # noqa: E402
 
 from repro.core.formats import RgCSR, ShardedRgCSR   # noqa: E402
 from repro.core.suite import generate                # noqa: E402
-from repro.core.timing import time_us                # noqa: E402
 from repro.kernels import autotune                   # noqa: E402
 from repro.kernels import ops as kops                # noqa: E402
 from repro.sharding import Partitioner               # noqa: E402
@@ -62,26 +67,56 @@ def bench_one(family: str, n: int, mesh, axis: str, d: int,
     spill = _heuristic_spill(a)
     single = kops.make_plan(RgCSR.from_dense(a), chunks_per_step=2)
     sm = ShardedRgCSR.from_dense(a, n_shards=d)
+    # §11 per-shard tuning: every shard searches (cps, ordering, spill)
+    # over its own local-column block (what split-mode grouped storage
+    # actually holds); the signature memo dedupes the light shards
+    shard_results = autotune.autotune_spmv_per_shard(a, d, repeats=repeats,
+                                                     x_mode="split")
+    shard_cfgs = autotune.harmonize_shard_winners(shard_results)
+    winners = [[c.chunks_per_step, c.ordering, c.spill_threshold]
+               for c in shard_cfgs]
     row: Dict = {"n": n, "family": family, "nnz": int((a != 0).sum()),
                  "single": {"stored_slots": single.stored_slots,
                             "grid_steps": single.num_steps},
                  "sharded": {}}
-    for label, ordering, th, x_mode in (
-            ("block_replicated", "block", 0, "replicated"),
-            ("block_split", "block", 0, "split"),
-            ("adaptive_split", "adaptive", spill, "split")):
-        plan = kops.get_sharded_plan(sm, chunks_per_step=2,
-                                     ordering=ordering, spill_threshold=th,
-                                     x_mode=x_mode)
+    variants = (
+        ("block_replicated", dict(chunks_per_step=2, ordering="block",
+                                  spill_threshold=0, x_mode="replicated")),
+        ("block_split", dict(chunks_per_step=2, ordering="block",
+                             spill_threshold=0, x_mode="split")),
+        ("adaptive_split", dict(chunks_per_step=2, ordering="adaptive",
+                                spill_threshold=spill, x_mode="split")),
+        ("tuned_per_shard", dict(x_mode="split",
+                                 shard_configs=shard_cfgs)))
+    plans = {label: kops.get_sharded_plan(sm, **kwargs)
+             for label, kwargs in variants}
+    # correctness + jit warmup for every variant before any timing
+    for label, plan in plans.items():
         y = np.asarray(kops.sharded_rgcsr_spmv(plan, x, mesh=mesh,
                                                axis=axis))
         np.testing.assert_allclose(y, a @ np.asarray(x), rtol=1e-4,
                                    atol=1e-4)
-        us = time_us(lambda p, v: kops.sharded_rgcsr_spmv(
-            p, v, mesh=mesh, axis=axis), plan, x, repeats=repeats, warmup=1)
+    # timing rounds are INTERLEAVED across variants: fake-device shard_map
+    # dispatch jitter drifts over seconds on a loaded host, so timing each
+    # variant in its own contiguous block would bias whole labels — the
+    # within-round rotation keeps the variant *comparison* fair, which is
+    # the number the tuned-vs-fixed figures and the CI gate consume
+    times: Dict[str, list] = {label: [] for label, _ in variants}
+    for _ in range(max(repeats, 3)):
+        for label, plan in plans.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(kops.sharded_rgcsr_spmv(
+                plan, x, mesh=mesh, axis=axis))
+            times[label].append((time.perf_counter() - t0) * 1e6)
+    for label, kwargs in variants:
+        plan = plans[label]
+        us = float(np.median(times[label]))
         slots_max = max(plan.shard_stored_slots)
         steps_max = max(plan.shard_num_steps)
-        row["sharded"][label] = {
+        # the acceptance bound: the sparse collective moves exactly each
+        # shard's plan-time remote set — never more
+        assert plan.shard_exchange_recv_cols == plan.shard_remote_cols
+        entry = {
             "us": round(us, 2),
             "shard_stored_slots_max": slots_max,
             "shard_grid_steps_max": steps_max,
@@ -91,11 +126,24 @@ def bench_one(family: str, n: int, mesh, axis: str, d: int,
             "steps_shrink_vs_single": round(
                 single.num_steps / max(steps_max * d, 1), 3),
             "remote_cols_per_shard": list(plan.shard_remote_cols),
-            "spill_threshold": th,
+            # §11 sparse-collective exchange volume (all zeros when
+            # replicated: that mode communicates nothing by construction)
+            "exchange_recv_cols_per_shard": list(
+                plan.shard_exchange_recv_cols),
+            "exchange_bytes_per_shard": list(plan.shard_exchange_bytes),
+            "exchange_padded_recv_cols": plan.exchange_padded_recv_cols,
+            "spill_threshold": kwargs.get("spill_threshold", 0),
             "padded_slot_fraction": round(plan.padded_slot_fraction, 4),
         }
+        if label == "tuned_per_shard":
+            entry["shard_winner_configs"] = winners
+            entry["winners_differ_across_shards"] = \
+                len({tuple(w) for w in winners}) > 1
+            entry["kernel_chunks_per_step"] = plan.chunks_per_step
+        row["sharded"][label] = entry
         print(f"{family}/{label},{us:.2f},slots_max={slots_max},"
-              f"steps_max={steps_max},remote={max(plan.shard_remote_cols)}")
+              f"steps_max={steps_max},"
+              f"xchg={max(plan.shard_exchange_recv_cols)}")
     return row
 
 
@@ -125,6 +173,45 @@ def main(argv=None) -> int:
 
     remote = [max(r["sharded"]["block_split"]["remote_cols_per_shard"])
               for r in rows]
+    xchg_bytes = [max(r["sharded"]["block_split"]["exchange_bytes_per_shard"])
+                  for r in rows]
+    # per-shard tuning pays when the tuned-split plan beats the best fixed
+    # single-config split schedule of the same run.  The decisive figures
+    # are STRUCTURAL (stacked grid steps and padded slots — deterministic
+    # plan properties, and the quantities the schedule knobs actually
+    # optimize); µs is reported but informational only: each variant is a
+    # separately compiled shard_map executable and on the fake-device CPU
+    # host per-executable dispatch varies ~2x run to run, swamping the
+    # kernel-level differences the tuner targets.
+    tuned_vs_fixed = {}
+    for name, r in matrices.items():
+        sh = r["sharded"]
+        fixed_us = min(sh["block_split"]["us"], sh["adaptive_split"]["us"])
+        fixed_steps = min(sh["block_split"]["shard_grid_steps_max"],
+                          sh["adaptive_split"]["shard_grid_steps_max"])
+        fixed_slots = min(sh["block_split"]["shard_stored_slots_max"],
+                          sh["adaptive_split"]["shard_stored_slots_max"])
+        t = sh["tuned_per_shard"]
+        steps, slots = t["shard_grid_steps_max"], t["shard_stored_slots_max"]
+        tuned_vs_fixed[name] = {
+            "tuned_us_over_best_fixed_split": round(
+                t["us"] / max(fixed_us, 1e-9), 3),
+            "tuned_steps_max": steps,
+            "best_fixed_steps_max": fixed_steps,
+            "tuned_slots_max": slots,
+            "best_fixed_slots_max": fixed_slots,
+            # never structurally worse, strictly better on >= one axis
+            "structurally_improves": (steps <= fixed_steps
+                                      and slots <= fixed_slots
+                                      and (steps < fixed_steps
+                                           or slots < fixed_slots)),
+            "winners_differ": t["winners_differ_across_shards"],
+        }
+    skewed_improved = [
+        name for name, r in matrices.items()
+        if r["family"] in ("powerlaw", "circuit")
+        and tuned_vs_fixed[name]["structurally_improves"]
+        and tuned_vs_fixed[name]["winners_differ"]]
     summary = {
         "n_devices": d,
         "mesh_axis": axis,
@@ -141,6 +228,13 @@ def main(argv=None) -> int:
             [r["sharded"]["adaptive_split"]["slots_shrink_vs_single"]
              for r in rows]),
         "max_remote_cols": int(max(remote)),
+        # §11 sparse collective: worst per-device exchange, and the factor
+        # vs the n_cols·itemsize every device paid under the all_gather
+        "max_exchange_bytes_per_shard": int(max(xchg_bytes)),
+        "allgather_bytes_per_shard": int(
+            max(r["n"] for r in rows) * 4),
+        "tuned_vs_fixed_split": tuned_vs_fixed,
+        "skewed_improved_by_per_shard_winners": skewed_improved,
     }
     doc = {"meta": {"backend": jax.default_backend(),
                     "python": platform.python_version(),
@@ -151,7 +245,10 @@ def main(argv=None) -> int:
     print(f"# wrote {args.out}: per-shard slots shrink "
           f"{summary['slots_shrink_geomean']}x of ideal 1/{d}, steps "
           f"{summary['steps_shrink_geomean']}x, max remote cols "
-          f"{summary['max_remote_cols']}")
+          f"{summary['max_remote_cols']}, max exchange "
+          f"{summary['max_exchange_bytes_per_shard']} B/device (all_gather "
+          f"paid {summary['allgather_bytes_per_shard']} B), per-shard "
+          f"winners improved: {skewed_improved}")
     return 0
 
 

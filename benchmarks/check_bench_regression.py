@@ -1,8 +1,12 @@
-"""CI perf gate: diff a fresh BENCH_spmv.json against the committed baseline.
+"""CI perf gate: diff fresh benchmark JSONs against the committed baselines.
 
     python benchmarks/check_bench_regression.py \
         --baseline BENCH_baseline.json --new BENCH_spmv.json \
         --max-geomean-regression 0.10
+
+    python benchmarks/check_bench_regression.py \
+        --sharded-baseline BENCH_sharded_baseline.json \
+        --sharded-new BENCH_spmv_sharded.json
 
 Interpret-mode µs are machine-speed-dependent, and the committed baseline
 was produced on a different machine than the CI runner — so the gate
@@ -18,6 +22,16 @@ The gate fails when the geomean of (normalized_new / normalized_baseline)
 exceeds ``1 + threshold`` (default: 10%).  Per-matrix ratios print
 worst-first so a red run names its regressing matrices; the gate is on the
 geomean, not the max, because per-matrix interpret-mode jitter is large.
+
+The **sharded** gate applies the same normalization to
+``BENCH_spmv_sharded.json`` — each split/tuned variant's µs over the same
+run's ``block_replicated`` µs, compared per (matrix, variant) — and
+additionally gates the §11 sparse-collective **exchange volume**: the new
+run must (a) satisfy the structural bound ``exchange_recv_cols ==
+remote_cols`` per shard, and (b) never move more exchange bytes per matrix
+than the baseline did (falling back to the baseline's remote-column counts
+× 4 B when it predates the exchange metric).  Exchange figures are
+deterministic plan properties, so they gate exactly, machine-independent.
 """
 from __future__ import annotations
 
@@ -54,39 +68,156 @@ def compare(baseline: dict, new: dict):
     return ratios, geomean
 
 
+def _sharded_normalized(row: dict, label: str):
+    """variant µs / same-run block_replicated µs, or None."""
+    sh = row.get("sharded", {})
+    base = float(sh.get("block_replicated", {}).get("us", 0))
+    entry = sh.get(label)
+    if entry is None or base <= 0:
+        return None
+    return float(entry["us"]) / base
+
+
+def _exchange_bytes_total(row: dict):
+    """Total exchange bytes a matrix's split path moves, from the newest
+    metric available: exchange_bytes_per_shard, else remote_cols × 4 B
+    (pre-§11 baselines recorded the plan-time remote sets only — the
+    sparse collective moves exactly those entries, so they are the bound)."""
+    entry = row.get("sharded", {}).get("block_split")
+    if entry is None:
+        return None
+    if "exchange_bytes_per_shard" in entry:
+        return sum(entry["exchange_bytes_per_shard"])
+    if "remote_cols_per_shard" in entry:
+        return sum(entry["remote_cols_per_shard"]) * 4
+    return None
+
+
+def _exchange_padded_cols(row: dict):
+    """The per-device collective buffer width D·e_max — the true wire
+    footprint of the all_to_all.  A remap that concentrates one (src, dst)
+    edge raises e_max (and the real traffic) without changing the unpadded
+    entry counts, so both are gated."""
+    entry = row.get("sharded", {}).get("block_split")
+    if entry is None:
+        return None
+    return entry.get("exchange_padded_recv_cols")
+
+
+def compare_sharded(baseline: dict, new: dict):
+    """Returns (us_ratios {(matrix, label): ...}, geomean, failures [str])."""
+    ratios = {}
+    failures = []
+    for name, row in new.get("matrices", {}).items():
+        # structural bound on the new run: the sparse collective receives
+        # exactly the plan-time remote sets — never more
+        for label, entry in row.get("sharded", {}).items():
+            recv = entry.get("exchange_recv_cols_per_shard")
+            remote = entry.get("remote_cols_per_shard")
+            if recv is not None and remote is not None and recv != remote:
+                failures.append(
+                    f"{name}/{label}: exchange recv cols {recv} != "
+                    f"plan remote cols {remote}")
+        base_row = baseline.get("matrices", {}).get(name)
+        if base_row is None:
+            continue
+        # exchange volume must never grow vs the committed baseline —
+        # neither the real entry counts nor the padded collective width
+        old_x = _exchange_bytes_total(base_row)
+        new_x = _exchange_bytes_total(row)
+        if old_x is not None and new_x is not None and new_x > old_x:
+            failures.append(f"{name}: exchange bytes grew {old_x} -> "
+                            f"{new_x}")
+        old_p = _exchange_padded_cols(base_row)
+        new_p = _exchange_padded_cols(row)
+        if old_p is not None and new_p is not None and new_p > old_p:
+            failures.append(f"{name}: padded collective width grew "
+                            f"{old_p} -> {new_p} recv cols")
+        for label in row.get("sharded", {}):
+            if label == "block_replicated":
+                continue
+            old = _sharded_normalized(base_row, label)
+            cur = _sharded_normalized(row, label)
+            if old and cur:
+                ratios[(name, label)] = cur / old
+    if ratios:
+        geomean = float(np.exp(np.mean(
+            [np.log(r) for r in ratios.values()])))
+    else:
+        geomean = 1.0
+    return ratios, geomean, failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", required=True)
-    ap.add_argument("--new", required=True)
+    ap.add_argument("--baseline")
+    ap.add_argument("--new")
+    ap.add_argument("--sharded-baseline")
+    ap.add_argument("--sharded-new")
     ap.add_argument("--max-geomean-regression", type=float, default=0.10,
                     help="fail when geomean(new/baseline) > 1 + this")
     args = ap.parse_args(argv)
-
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    with open(args.new) as f:
-        new = json.load(f)
-
-    ratios, geomean = compare(baseline, new)
-    if not ratios:
-        print("# no comparable matrices between baseline and new run; "
-              "nothing to gate")
-        return 0
-
-    for name, r in sorted(ratios.items(), key=lambda kv: -kv[1]):
-        flag = " <-- regressed" if r > 1.0 + args.max_geomean_regression \
-            else ""
-        print(f"{name},{r:.3f}{flag}")
+    if bool(args.baseline) != bool(args.new):
+        ap.error("--baseline and --new must be given together")
+    if bool(args.sharded_baseline) != bool(args.sharded_new):
+        ap.error("--sharded-baseline and --sharded-new must be given "
+                 "together")
+    if not args.baseline and not args.sharded_baseline:
+        ap.error("nothing to gate: pass --baseline/--new and/or "
+                 "--sharded-baseline/--sharded-new")
     limit = 1.0 + args.max_geomean_regression
-    print(f"# geomean of normalized tuned-us ratios = {geomean:.3f} "
-          f"(limit {limit:.3f}, {len(ratios)} matrices)")
-    if geomean > limit:
-        print(f"# FAIL: tuned SpMV (normalized to the in-run cps=1 "
-              f"schedule) regressed {100 * (geomean - 1):.1f}% > "
-              f"{100 * args.max_geomean_regression:.0f}%", file=sys.stderr)
-        return 1
-    print("# PASS")
-    return 0
+    rc = 0
+
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        with open(args.new) as f:
+            new = json.load(f)
+        ratios, geomean = compare(baseline, new)
+        if not ratios:
+            print("# no comparable matrices between baseline and new run; "
+                  "nothing to gate")
+        else:
+            for name, r in sorted(ratios.items(), key=lambda kv: -kv[1]):
+                flag = " <-- regressed" if r > limit else ""
+                print(f"{name},{r:.3f}{flag}")
+            print(f"# geomean of normalized tuned-us ratios = {geomean:.3f} "
+                  f"(limit {limit:.3f}, {len(ratios)} matrices)")
+            if geomean > limit:
+                print(f"# FAIL: tuned SpMV (normalized to the in-run cps=1 "
+                      f"schedule) regressed {100 * (geomean - 1):.1f}% > "
+                      f"{100 * args.max_geomean_regression:.0f}%",
+                      file=sys.stderr)
+                rc = 1
+
+    if args.sharded_baseline:
+        with open(args.sharded_baseline) as f:
+            sh_base = json.load(f)
+        with open(args.sharded_new) as f:
+            sh_new = json.load(f)
+        ratios, geomean, failures = compare_sharded(sh_base, sh_new)
+        for (name, label), r in sorted(ratios.items(), key=lambda kv: -kv[1]):
+            flag = " <-- regressed" if r > limit else ""
+            print(f"sharded:{name}/{label},{r:.3f}{flag}")
+        print(f"# sharded geomean of normalized us ratios = {geomean:.3f} "
+              f"(limit {limit:.3f}, {len(ratios)} matrix/variant pairs)")
+        for msg in failures:
+            print(f"# FAIL(sharded exchange): {msg}", file=sys.stderr)
+        if failures:
+            rc = 1
+        if ratios and geomean > limit:
+            print(f"# FAIL: sharded SpMV (normalized to the in-run "
+                  f"block_replicated schedule) regressed "
+                  f"{100 * (geomean - 1):.1f}% > "
+                  f"{100 * args.max_geomean_regression:.0f}%",
+                  file=sys.stderr)
+            rc = 1
+
+    if rc == 0:
+        print("# PASS")
+    else:
+        print("# FAIL", file=sys.stderr)
+    return rc
 
 
 if __name__ == "__main__":

@@ -686,15 +686,28 @@ class ShardedRgCSR:
 
     name: ClassVar[str] = "sharded_rgcsr"
 
+    @staticmethod
+    def shard_layout(n_rows: int, n_cols: int,
+                     n_shards: int) -> Tuple[int, int]:
+        """``(rows_per_shard, cols_per_shard)`` ceil-div layout.
+
+        The single source of the shard geometry — plan construction
+        (``ops.make_sharded_plan``) and per-shard tuning
+        (``autotune.shard_row_blocks``) derive their blocks from this, so
+        a layout change here cannot silently desynchronize them.
+        """
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        return (max(1, -(-n_rows // n_shards)),
+                max(1, -(-n_cols // n_shards)))
+
     @classmethod
     def from_dense(cls, dense: np.ndarray, n_shards: int,
                    group_size: int = TPU_LANES,
                    slot_pad: int = TPU_SUBLANES) -> "ShardedRgCSR":
         dense = _as_2d(dense)
         n_rows, n_cols = dense.shape
-        if n_shards < 1:
-            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
-        rps = max(1, -(-n_rows // n_shards))
+        rps, _ = cls.shard_layout(n_rows, n_cols, n_shards)
         shards = []
         for d in range(n_shards):
             lo, hi = d * rps, min((d + 1) * rps, n_rows)

@@ -203,7 +203,8 @@ def _use_kernel(a, impl: str) -> bool:
 
 
 def _sharded_dispatch(a: ShardedRgCSR, mesh, mesh_axis,
-                      chunks_per_step, ordering, spill_threshold, x_mode):
+                      chunks_per_step, ordering, spill_threshold, x_mode,
+                      shard_configs=None):
     """Resolve the sharded plan + mesh axis for a ShardedRgCSR call."""
     from repro.kernels import ops as kops
     if mesh is None:
@@ -217,14 +218,14 @@ def _sharded_dispatch(a: ShardedRgCSR, mesh, mesh_axis,
     plan = kops.get_sharded_plan(a, chunks_per_step=chunks_per_step,
                                  ordering=ordering,
                                  spill_threshold=spill_threshold,
-                                 x_mode=x_mode)
+                                 x_mode=x_mode, shard_configs=shard_configs)
     return plan, mesh_axis
 
 
 def spmv(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1,
          ordering: str = "block", spill_threshold: int = 0,
          mesh=None, mesh_axis: str | None = None,
-         x_mode: str = "replicated"):
+         x_mode: str = "replicated", shard_configs=None):
     """``y = A @ x`` for any of the paper's formats.
 
     RgCSR matrices can dispatch to the Pallas kernel through the process-wide
@@ -238,14 +239,18 @@ def spmv(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1,
     restores the original row order.  Oracle paths ignore both knobs.
 
     :class:`ShardedRgCSR` matrices run the multi-device shard_map path
-    (DESIGN.md §10): ``mesh`` is required, ``mesh_axis`` defaults to the
-    partitioner's ``sparse_rows`` rule, and ``x_mode`` picks replicated-x
-    vs the local/remote column split.
+    (DESIGN.md §10/§11): ``mesh`` is required, ``mesh_axis`` defaults to
+    the partitioner's ``sparse_rows`` rule, ``x_mode`` picks replicated-x
+    vs the local/remote split with its plan-driven sparse exchange, and
+    ``shard_configs`` (one ``(chunks_per_step, ordering, spill_threshold)``
+    per shard — e.g. the per-shard autotune winners) overrides the global
+    schedule knobs shard-by-shard.
     """
     if isinstance(a, ShardedRgCSR):
         from repro.kernels import ops as kops
         plan, axis = _sharded_dispatch(a, mesh, mesh_axis, chunks_per_step,
-                                       ordering, spill_threshold, x_mode)
+                                       ordering, spill_threshold, x_mode,
+                                       shard_configs)
         return kops.sharded_rgcsr_spmv(plan, x, mesh=mesh, axis=axis)
     if _use_kernel(a, impl):
         from repro.kernels import ops as kops
@@ -259,16 +264,17 @@ def spmv(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1,
 def spmm(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1,
          ordering: str = "block", spill_threshold: int = 0,
          mesh=None, mesh_axis: str | None = None,
-         x_mode: str = "replicated"):
+         x_mode: str = "replicated", shard_configs=None):
     """``Y = A @ X`` (X dense ``(n, d)``) for any of the paper's formats.
 
     Same PlanCache-backed kernel dispatch (and adaptive-plan / sharded
-    knobs) as :func:`spmv`.
+    knobs, including per-shard ``shard_configs``) as :func:`spmv`.
     """
     if isinstance(a, ShardedRgCSR):
         from repro.kernels import ops as kops
         plan, axis = _sharded_dispatch(a, mesh, mesh_axis, chunks_per_step,
-                                       ordering, spill_threshold, x_mode)
+                                       ordering, spill_threshold, x_mode,
+                                       shard_configs)
         return kops.sharded_rgcsr_spmm(plan, x, mesh=mesh, axis=axis)
     if _use_kernel(a, impl):
         from repro.kernels import ops as kops

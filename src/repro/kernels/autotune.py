@@ -37,11 +37,14 @@ import numpy as np
 from repro.core.formats import RgCSR
 from repro.core.timing import time_us
 from repro.kernels import ops
-from repro.kernels.rgcsr_spmv import CHUNKS_PER_STEP_CHOICES, LANES
+from repro.kernels.rgcsr_spmv import (CHUNKS_PER_STEP_CHOICES, LANES,
+                                      SUBLANES)
 
 __all__ = ["TuneConfig", "TuneResult", "matrix_signature", "candidate_configs",
            "spill_threshold_candidates", "autotune_spmv", "autotune_spmm",
            "tuned_plan", "clear_memo",
+           "shard_row_blocks", "autotune_spmv_per_shard",
+           "harmonize_shard_winners",
            "DEFAULT_GROUP_SIZES", "DEFAULT_D_TILES", "DEFAULT_ORDERINGS"]
 
 DEFAULT_GROUP_SIZES = (128, 256)
@@ -67,12 +70,19 @@ class TuneConfig:
 
 @dataclasses.dataclass(frozen=True)
 class TuneResult:
-    """Winner of one search, with the full timing table for inspection."""
+    """Winner of one search, with the full timing table for inspection.
+
+    ``plan_stats`` parallels ``timings``: per measured candidate, the
+    plan's ``(stored_slots, stored_elements, n_spilled_elements)`` — the
+    deterministic structural figures :func:`harmonize_shard_winners` needs
+    to reason about stacked grids without re-measuring.
+    """
     config: TuneConfig
     us_per_call: float
     timings: Tuple[Tuple[TuneConfig, float], ...]
     signature: tuple
     from_memo: bool = False
+    plan_stats: Tuple[Tuple[int, int, int], ...] = ()
 
     @property
     def baseline_us(self) -> float:
@@ -215,6 +225,7 @@ def _search(dense: np.ndarray, run, kind: str, *,
     block_bytes: Dict[Tuple[int, int], Tuple[int, int]] = {}
     baseline_slots = None
     timings = []
+    stats = []
     for cfg in candidates:
         if cfg.group_size not in mats:
             mats[cfg.group_size] = RgCSR.from_dense(
@@ -252,10 +263,13 @@ def _search(dense: np.ndarray, run, kind: str, *,
             continue
         us = time_us(run, plan, cfg, repeats=repeats, warmup=1)
         timings.append((cfg, us))
+        stats.append((plan.stored_slots, plan.stored_elements,
+                      plan.n_spilled_elements))
 
     best_cfg, best_us = min(timings, key=lambda t: t[1])
     result = TuneResult(config=best_cfg, us_per_call=best_us,
-                        timings=tuple(timings), signature=sig)
+                        timings=tuple(timings), signature=sig,
+                        plan_stats=tuple(stats))
     _MEMO[memo_key] = result
     return result
 
@@ -297,6 +311,127 @@ def autotune_spmm(dense: np.ndarray, d: int, *,
     return _search(dense, run, "spmm", candidates=candidates,
                    repeats=repeats, storage_cap=storage_cap,
                    memo_key_extra=(_log_bucket(d),))
+
+
+def shard_row_blocks(dense: np.ndarray, n_shards: int,
+                     x_mode: str = "replicated") -> list:
+    """The per-device blocks a :class:`ShardedRgCSR` over ``n_shards``
+    would *group* — each padded to ``rows_per_shard`` rows, matching the
+    shard layout exactly so per-shard tuning measures the real profile.
+
+    ``x_mode='split'`` additionally restricts each block to the shard's
+    **local** column slice (padded to ``cols_per_shard``): split-mode
+    grouped storage holds only local-column entries (DESIGN.md §11.1 —
+    remote entries ride the config-independent exchange tail), so that is
+    the matrix the schedule knobs actually shape.
+    """
+    from repro.core.formats import ShardedRgCSR
+    dense = np.asarray(dense)
+    n, m = dense.shape
+    rps, cstride = ShardedRgCSR.shard_layout(n, m, n_shards)
+    blocks = []
+    for d in range(n_shards):
+        lo, hi = d * rps, min((d + 1) * rps, n)
+        if x_mode == "split":
+            clo, chi = d * cstride, min((d + 1) * cstride, m)
+            blk = np.zeros((rps, cstride), dense.dtype)
+            if hi > lo and chi > clo:
+                blk[: hi - lo, : chi - clo] = dense[lo:hi, clo:chi]
+        else:
+            blk = np.zeros((rps, m), dense.dtype)
+            if hi > lo:
+                blk[: hi - lo] = dense[lo:hi]
+        blocks.append(blk)
+    return blocks
+
+
+def autotune_spmv_per_shard(dense: np.ndarray, n_shards: int, *,
+                            group_size: int = 128, repeats: int = 3,
+                            storage_cap: float = 4.0,
+                            x_mode: str = "replicated",
+                            interpret: bool | None = None
+                            ) -> Tuple[TuneResult, ...]:
+    """Tune each row shard independently (DESIGN.md §11).
+
+    One global winner wastes the skewed case: the shard holding the heavy
+    rows wants spill/adaptive while light shards want plain block cps>1
+    (arXiv:1203.5737's per-profile grouping, applied per shard).  Each
+    shard's block — its local-column slice in split mode, since that is
+    what the grouped plan stores — runs its own :func:`autotune_spmv`
+    search over ``(chunks_per_step, ordering, spill_threshold)`` at the
+    fixed ``group_size`` (the stacked plan needs one G across shards);
+    spill candidates derive from the *shard's own* row-length profile.
+    Winners are memoized per shard signature via the ordinary ``_MEMO``,
+    so the structurally identical light shards of a skewed matrix search
+    once and share the result.  The returned configs feed
+    ``make_sharded_plan(shard_configs=...)`` directly.
+    """
+    results = []
+    for blk in shard_row_blocks(dense, n_shards, x_mode=x_mode):
+        row_lens = (blk != 0).sum(axis=1)
+        cands = candidate_configs(
+            group_sizes=(group_size,), orderings=DEFAULT_ORDERINGS,
+            spill_thresholds=spill_threshold_candidates(row_lens))
+        results.append(autotune_spmv(blk, candidates=cands, repeats=repeats,
+                                     storage_cap=storage_cap,
+                                     interpret=interpret))
+    return tuple(results)
+
+
+def harmonize_shard_winners(results: Sequence[TuneResult]) -> list:
+    """Per-shard configs that *stack* well (DESIGN.md §11.2).
+
+    Taking each shard's independent winner ignores the SPMD coupling: the
+    kernel cps is the gcd of the per-shard cps values, every shard's step
+    table expands by ``cps_d / gcd``, and the stacked grid runs the *max*
+    step count over shards — so at kernel cps ``k`` every shard pays its
+    cps-``k`` grid-step count and only the bottleneck shard's figure
+    matters.  Per-shard *measured* µs cannot see that coupling, and on
+    small shards the candidates sit within host jitter of each other, so
+    ranking on µs alone makes the stacked pick flip run to run.  The
+    stacked cost is therefore scored **structurally first** from the
+    deterministic ``plan_stats`` the search recorded (the same byte/step
+    models §3.3 already prunes with): for each candidate kernel cps ``k``,
+    each shard contributes its best config at ``chunks_per_step == k``
+    (falling back to configs above ``k`` — runnable at ``k`` via
+    step-table expansion) ranked by grid steps at ``k``, then stored
+    bytes, then measured µs; ``k`` itself is scored by the stacked
+    ``(max steps, total stored, bottleneck µs)``, ties to larger ``k``.
+    Ordering/spill still specialize freely per shard — the skewed-matrix
+    win: the heavy shard keeps spill/adaptive (fewer steps, a plan
+    property), light shards keep plain block (no epilogue), and the
+    result is reproducible across runs.
+    """
+    if not results:
+        raise ValueError("harmonize_shard_winners needs >= 1 shard result")
+    best = None
+    for k in sorted(CHUNKS_PER_STEP_CHOICES):
+        rows_per_step = SUBLANES * k
+        picks = []
+        for r in results:
+            stats = r.plan_stats or ((0, 0, 0),) * len(r.timings)
+            cands = [(slots // rows_per_step, elems, us, cfg)
+                     for (cfg, us), (slots, elems, _) in zip(r.timings,
+                                                             stats)
+                     if cfg.chunks_per_step == k]
+            if not cands:
+                cands = [(slots // rows_per_step, elems, us, cfg)
+                         for (cfg, us), (slots, elems, _) in zip(r.timings,
+                                                                 stats)
+                         if cfg.chunks_per_step > k]
+            if not cands:
+                picks = None
+                break
+            picks.append(min(cands))
+        if picks is None:
+            continue
+        key = (max(p[0] for p in picks), sum(p[1] for p in picks),
+               max(p[2] for p in picks), -k)
+        if best is None or key < best[0]:
+            best = (key, [p[3] for p in picks])
+    if best is None:
+        raise ValueError("no measured candidates to harmonize")
+    return best[1]
 
 
 def tuned_plan(dense: np.ndarray, *, repeats: int = 3,

@@ -501,13 +501,19 @@ class ShardedRgCSRPlan:
     """Stacked, device-major execution plan for a :class:`ShardedRgCSR`.
 
     Each shard's :class:`RgCSRPlan` (built by the unchanged ``make_plan`` —
-    block or adaptive grouping applies *per shard*) is padded to the
-    across-shard maxima and stacked on a leading device axis, which is what
-    ``shard_map`` needs: one SPMD program, per-device slices of uniform
-    shape.  Padding rows are exact zeros; padding *steps* point at the
-    shard's own last real group with ``step_first = 0``, so they accumulate
-    zeros into an already-initialized output block (the Pallas revisit rule
-    stays satisfied: padded steps extend the last group's consecutive run).
+    block or adaptive grouping applies *per shard*, at that shard's own
+    tuned ``(chunks_per_step, ordering, spill_threshold)`` from
+    ``shard_configs``) is padded to the across-shard maxima and stacked on
+    a leading device axis, which is what ``shard_map`` needs: one SPMD
+    program, per-device slices of uniform shape.  Padding rows are exact
+    zeros; padding *steps* point at the shard's own last real group with
+    ``step_first = 0``, so they accumulate zeros into an already-initialized
+    output block (the Pallas revisit rule stays satisfied: padded steps
+    extend the last group's consecutive run).  Because the SPMD kernel has
+    one static ``chunks_per_step``, per-shard winners are reconciled at the
+    table level: each shard's layout is padded at its *own* winner
+    granularity and its step table is expanded to the common kernel
+    ``chunks_per_step`` (the gcd of the winners — DESIGN.md §11).
 
     ``x_mode`` fixes how the dense vector is reconciled (arXiv:1112.5588's
     local/remote split):
@@ -515,16 +521,21 @@ class ShardedRgCSRPlan:
     * ``'replicated'`` — x is replicated; columns keep global indices.
       Zero communication, D× x memory: the fast path while x fits.
     * ``'split'`` — x is row-sharded over the same axis
-      (``cols_per_shard`` entries per device).  At plan time each shard's
-      referenced columns are split into *local* (owned by this device) and
-      *remote* (``remote_cols``, usually tiny); stored column indices are
-      remapped into the compact ``[local ‖ remote]`` space, and at run time
-      the remote entries are gathered before the kernel.  The kernel's x
-      working set drops from ``n_cols`` to ``cols_per_shard + R_max``.
+      (``cols_per_shard`` entries per device) and the exchange is a
+      plan-driven **sparse collective** (DESIGN.md §11): grouped storage
+      holds only the shard's *local*-column entries (columns remapped into
+      ``[0, cols_per_shard)``), each shard's *remote* entries live in a COO
+      remote tail (``rem_*``) indexed into the exchange receive buffer, and
+      ``send_idx``/``edge_counts`` form the per-(src, dst) send schedule —
+      padded to the static per-edge max ``e_max`` for jittability — that
+      the run path executes as one ``all_to_all`` of only the remote x
+      entries.  The kernel reads only the local slice, so the exchange
+      overlaps the local-partial launch, and per-device exchange volume is
+      exactly that shard's plan-time remote column count.
     """
 
     values3d: Any        # (D, S_pad, G)
-    columns3d: Any       # (D, S_pad, G) int32 (global or compact, per x_mode)
+    columns3d: Any       # (D, S_pad, G) int32 (global; local-only in split)
     step_group2d: Any    # (D, T_max) int32
     step_first2d: Any    # (D, T_max) int32
     n_rows: int
@@ -534,21 +545,33 @@ class ShardedRgCSRPlan:
     cols_per_shard: int          # x entries owned per device (split mode)
     n_groups: int                # max over shards (uniform kernel out shape)
     group_size: int
-    chunks_per_step: int = 1
-    ordering: str = "block"
-    spill_threshold: int = 0
+    chunks_per_step: int = 1     # kernel cps (gcd of per-shard winners)
+    ordering: str = "block"      # 'adaptive' when ANY shard is adaptive
+    spill_threshold: int = 0     # the broadcast arg only — per-shard truth
+    #                              (incl. tuned thresholds) is shard_configs
     x_mode: str = "replicated"
     nnz: int = -1
-    remote_cols: Any = None      # (D, R_max) int32 (split mode only)
+    # per-shard (chunks_per_step, ordering, spill_threshold) actually built
+    shard_configs: Tuple[Tuple[int, str, int], ...] = ()
+    remote_cols: Any = None      # (D, R_max) int32 (split: plan-time sets)
+    # --- sparse-exchange schedule (split mode with a non-empty exchange) ---
+    send_idx: Any = None         # (D_src, D_dst, e_max) int32 local col idx
+    edge_counts: Any = None      # (D_src, D_dst) int64 true edge sizes (host)
+    e_max: int = 0               # static per-edge pad (0 = no exchange)
+    rem_values: Any = None       # (D, E_t) remote-entry COO tail values
+    rem_rows: Any = None         # (D, E_t) int32 local row ids
+    rem_xidx: Any = None         # (D, E_t) int32 index into recv buffer
     gather_idx: Any = None       # (D, rows_per_shard) int32 (adaptive)
     grouped_mask: Any = None     # (D, rows_per_shard) bool (adaptive)
     spill_values: Any = None     # (D, E_max) (adaptive + spill)
     spill_rows: Any = None       # (D, E_max) int32 local row ids
-    spill_columns: Any = None    # (D, E_max) int32 (global/compact per mode)
+    spill_columns: Any = None    # (D, E_max) int32 (local in split mode)
     # true per-shard figures, pre-stacking (the ~1/D acceptance numbers)
     shard_stored_slots: Tuple[int, ...] = ()
     shard_num_steps: Tuple[int, ...] = ()
     shard_remote_cols: Tuple[int, ...] = ()
+    shard_remote_entries: Tuple[int, ...] = ()   # rem-tail nnz per shard
+    shard_spill_counts: Tuple[int, ...] = ()     # spill-tail nnz per shard
 
     @property
     def num_steps_max(self) -> int:
@@ -566,16 +589,22 @@ class ShardedRgCSRPlan:
 
     @property
     def stored_elements(self) -> int:
-        """True (unstacked) grouped slots × lanes + COO tails, all shards."""
+        """True (unstacked) grouped slots × lanes + COO tails, all shards —
+        including split mode's remote exchange tails, which store one entry
+        per remote nonzero (they are part of the format's footprint, and
+        without them a mostly-remote matrix would show stored < nnz)."""
         spilled = sum(self.shard_spilled_elements)
-        return sum(self.shard_stored_slots) * self.group_size + spilled
+        return (sum(self.shard_stored_slots) * self.group_size + spilled
+                + sum(self.shard_remote_entries))
 
     @property
     def shard_spilled_elements(self) -> Tuple[int, ...]:
+        """True spill-tail entries per shard — positional (recorded at
+        build), never inferred from values: a stored spill value may
+        legitimately be 0.0 (same rule as ``RgCSR.to_csr_arrays``)."""
         if self.spill_values is None:
             return (0,) * self.n_shards
-        sv = np.asarray(self.spill_values)
-        return tuple(int((sv[d] != 0).sum()) for d in range(self.n_shards))
+        return self.shard_spill_counts or (0,) * self.n_shards
 
     @property
     def padded_slot_fraction(self) -> float:
@@ -583,17 +612,140 @@ class ShardedRgCSRPlan:
             return 0.0
         return (self.stored_elements - self.nnz) / self.stored_elements
 
+    # ------------------------------------------------- exchange accounting
+    @property
+    def has_exchange(self) -> bool:
+        """Whether the run path executes the sparse collective at all."""
+        return self.x_mode == "split" and self.e_max > 0
+
+    @property
+    def shard_exchange_recv_cols(self) -> Tuple[int, ...]:
+        """x entries device d *receives* per the plan schedule — equals
+        ``shard_remote_cols[d]`` by construction (the tentpole bound)."""
+        if self.edge_counts is None:
+            return (0,) * self.n_shards
+        ec = np.asarray(self.edge_counts)
+        return tuple(int(ec[:, d].sum()) for d in range(self.n_shards))
+
+    @property
+    def shard_exchange_send_cols(self) -> Tuple[int, ...]:
+        """x entries device d *sends* per the plan schedule."""
+        if self.edge_counts is None:
+            return (0,) * self.n_shards
+        ec = np.asarray(self.edge_counts)
+        return tuple(int(ec[d, :].sum()) for d in range(self.n_shards))
+
+    @property
+    def shard_exchange_bytes(self) -> Tuple[int, ...]:
+        """Exchange volume per device in bytes (received x entries ×
+        itemsize) — the number the all_gather path paid ``n_cols ×
+        itemsize`` for regardless of the remote set size.  Itemsize is the
+        stored-values dtype; a run-time x of a different width scales the
+        wire bytes accordingly (the recv *counts* are the exact figures)."""
+        itemsize = jnp.dtype(self.values3d.dtype).itemsize
+        return tuple(c * itemsize for c in self.shard_exchange_recv_cols)
+
+    @property
+    def exchange_padded_recv_cols(self) -> int:
+        """Static recv-buffer width (D·e_max) — the jittability pad; the
+        collective moves this many slots, only ``recv_cols`` are real."""
+        return self.n_shards * self.e_max
+
+
+def _normalize_shard_configs(shard_configs, n_shards: int,
+                             chunks_per_step: int, ordering: str,
+                             spill_threshold: int,
+                             group_size: Optional[int] = None
+                             ) -> Tuple[Tuple[int, str, int], ...]:
+    """Per-shard (cps, ordering, spill) tuples; the global args broadcast
+    when ``shard_configs`` is None.  Accepts TuneConfig-likes, dicts, or
+    bare 3-tuples so tuner winners thread through without conversion.
+    A config that *carries* a group size (TuneConfig/dict) must match the
+    matrix's — winners measured at a different G would silently mis-tune
+    the plan otherwise."""
+    if shard_configs is None:
+        return ((int(chunks_per_step), str(ordering),
+                 int(spill_threshold)),) * n_shards
+    norm = []
+    for c in shard_configs:
+        cfg_g = None
+        if hasattr(c, "chunks_per_step"):          # autotune.TuneConfig
+            cps, o, t = c.chunks_per_step, c.ordering, c.spill_threshold
+            cfg_g = getattr(c, "group_size", None)
+        elif isinstance(c, dict):
+            # missing keys inherit the caller's broadcast globals, never
+            # silently reset to the defaults
+            cps = c.get("chunks_per_step", chunks_per_step)
+            o = c.get("ordering", ordering)
+            t = c.get("spill_threshold", spill_threshold)
+            cfg_g = c.get("group_size")
+        else:
+            cps, o, t = c
+        if group_size is not None and cfg_g is not None \
+                and int(cfg_g) != int(group_size):
+            raise ValueError(
+                f"shard config tuned at group_size={cfg_g} cannot build a "
+                f"plan for a group_size={group_size} matrix — re-tune at "
+                f"the matrix's group size")
+        norm.append((int(cps), str(o), int(t)))
+    if len(norm) != n_shards:
+        raise ValueError(f"shard_configs has {len(norm)} entries for "
+                         f"{n_shards} shards")
+    return tuple(norm)
+
+
+def _exchange_schedule(remotes, cstride: int, d_sh: int):
+    """Per-(src, dst) send schedule from the per-dst remote column sets.
+
+    Edge (s → d) holds dst d's remote columns owned by src s, in sorted
+    order; every edge is padded to the static across-edge max ``e_max`` so
+    the run-time ``all_to_all`` buffer shape is jittable.  Returns
+    ``(send_idx (D, D, e_max) local col offsets at the src,
+    edge_counts (D, D) true sizes, e_max, xidx_lut)`` where ``xidx_lut[d]``
+    maps a global remote column to its slot ``src·e_max + pos`` in dst d's
+    flattened receive buffer.
+    """
+    edge_cols = [[None] * d_sh for _ in range(d_sh)]
+    counts = np.zeros((d_sh, d_sh), np.int64)
+    for dst, remote in enumerate(remotes):
+        owner = remote // cstride
+        for s in range(d_sh):
+            ec = remote[owner == s]
+            edge_cols[s][dst] = ec
+            counts[s, dst] = len(ec)
+    e_max = int(counts.max()) if counts.size else 0
+    send_idx = np.zeros((d_sh, d_sh, e_max), np.int32)
+    xidx_lut = []
+    for dst in range(d_sh):
+        lut = np.zeros(max(cstride * d_sh, 1), np.int32)
+        for s in range(d_sh):
+            ec = edge_cols[s][dst]
+            send_idx[s, dst, : len(ec)] = ec - s * cstride
+            lut[ec] = s * e_max + np.arange(len(ec), dtype=np.int32)
+        xidx_lut.append(lut)
+    return send_idx, counts, e_max, xidx_lut
+
 
 def make_sharded_plan(sm: ShardedRgCSR, *, chunks_per_step: int = 1,
                       ordering: str = "block", spill_threshold: int = 0,
-                      x_mode: str = "replicated") -> ShardedRgCSRPlan:
+                      x_mode: str = "replicated",
+                      shard_configs=None) -> ShardedRgCSRPlan:
     """Build per-shard plans via :func:`make_plan`, then pad + stack them.
 
     Reuses the whole single-device plan machinery per shard — the adaptive
     length-aware permutation, per-group slot sizing, and COO spill are each
-    computed inside a shard's own row block, so the autotuner's
-    ``(chunks_per_step, ordering, spill_threshold)`` axes apply
-    independently of the sharding.
+    computed inside a shard's own row block.  ``shard_configs`` (one
+    ``(chunks_per_step, ordering, spill_threshold)`` per shard, e.g. the
+    per-shard autotune winners) lets each shard keep its own schedule: the
+    grouped layout is padded at the shard's own winner granularity and its
+    step table is expanded to the common kernel ``chunks_per_step`` (the
+    gcd of the winners) so one SPMD program still runs everywhere.
+
+    In ``x_mode='split'`` the grouped storage keeps only each shard's
+    **local**-column entries (columns remapped into ``[0, cols_per_shard)``
+    — exactly the shard's own slice of x, so the kernel never waits on the
+    exchange); remote entries move to the ``rem_*`` COO tail indexed into
+    the receive buffer of the plan-time ``send_idx`` exchange schedule.
     """
     if x_mode not in ("replicated", "split"):
         raise ValueError(
@@ -601,32 +753,72 @@ def make_sharded_plan(sm: ShardedRgCSR, *, chunks_per_step: int = 1,
     d_sh = sm.n_shards
     n_rows, n_cols = sm.shape
     g = sm.group_size
-    rows_per_step = chunks_per_step * SUBLANES
-    plans = [make_plan(s, chunks_per_step=chunks_per_step, ordering=ordering,
-                       spill_threshold=spill_threshold) for s in sm.shards]
-    adaptive = ordering == "adaptive"
-    n_groups = max(p.n_groups for p in plans)
-    t_max = max(p.num_steps for p in plans)
-    s_pad = t_max * rows_per_step
-    cstride = max(1, -(-n_cols // d_sh))
+    cfgs = _normalize_shard_configs(shard_configs, d_sh, chunks_per_step,
+                                    ordering, spill_threshold,
+                                    group_size=g)
+    for cps_d, o_d, _ in cfgs:
+        if cps_d not in CHUNKS_PER_STEP_CHOICES:
+            raise ValueError(
+                f"chunks_per_step must be one of {CHUNKS_PER_STEP_CHOICES}, "
+                f"got {cps_d}")
+        if o_d not in ("block", "adaptive"):
+            raise ValueError(f"ordering must be 'block' or 'adaptive', "
+                             f"got {o_d!r}")
+    # the SPMD kernel has one static cps; per-shard winners keep their own
+    # padding granularity and expand their step tables down to the gcd
+    # (powers of two, so gcd == min)
+    kernel_cps = min(c[0] for c in cfgs)
+    rows_per_step = kernel_cps * SUBLANES
+    any_adaptive = any(c[1] == "adaptive" for c in cfgs)
+    _, cstride = ShardedRgCSR.shard_layout(n_rows, n_cols, d_sh)
 
-    # per-shard local/remote column split + compact remap (split mode)
-    remaps, remotes = [], []
+    # split mode: local/remote entry split + per-(src,dst) exchange schedule
+    remotes = []
+    rem_tails = []                      # (values, rows, global cols) per dst
     if x_mode == "split":
+        sources = []
         for d, shard in enumerate(sm.shards):
             lo, hi = d * cstride, min((d + 1) * cstride, n_cols)
-            _, true_cols, _ = shard.to_csr_arrays()
-            ref = np.unique(true_cols.astype(np.int64))
-            remote = ref[(ref < lo) | (ref >= hi)]
-            table = np.zeros(max(n_cols, 1), np.int32)
-            if hi > lo:
-                table[lo:hi] = np.arange(hi - lo, dtype=np.int32)
-            table[remote] = cstride + np.arange(len(remote), dtype=np.int32)
-            remaps.append(table)
-            remotes.append(remote.astype(np.int32))
+            # CSR-based split: only the (rps, cols_per_shard) local block is
+            # ever densified (for RgCSR.from_dense); the remote entries stay
+            # as index triplets — no full-width densification
+            csr_v, csr_c, row_ptr = shard.to_csr_arrays()
+            csr_r = np.repeat(np.arange(sm.rows_per_shard, dtype=np.int32),
+                              np.diff(row_ptr))
+            is_local = (csr_c >= lo) & (csr_c < hi)
+            local = np.zeros((sm.rows_per_shard, cstride), csr_v.dtype)
+            local[csr_r[is_local], csr_c[is_local] - lo] = csr_v[is_local]
+            sources.append(RgCSR.from_dense(local, group_size=g,
+                                            slot_pad=sm.slot_pad))
+            rc = csr_c[~is_local].astype(np.int64)
+            remotes.append(np.unique(rc))
+            rem_tails.append((csr_v[~is_local], csr_r[~is_local], rc))
+        send_idx, edge_counts, e_max, xidx_lut = _exchange_schedule(
+            remotes, cstride, d_sh)
+        e_tail = max(len(v) for v, _, _ in rem_tails)
         r_max = max(len(r) for r in remotes)
     else:
-        r_max = 0
+        sources = list(sm.shards)
+        send_idx = edge_counts = None
+        e_max = e_tail = r_max = 0
+
+    plans = [make_plan(src, chunks_per_step=c[0], ordering=c[1],
+                       spill_threshold=c[2])
+             for src, c in zip(sources, cfgs)]
+    # expand each shard's step table to the kernel cps: one coarse step of
+    # cps_d chunks becomes cps_d/kernel_cps consecutive fine steps of the
+    # same group (step_first only on the first — the revisit rule holds)
+    tables = []
+    for p, (cps_d, _, _) in zip(plans, cfgs):
+        f = cps_d // kernel_cps
+        sg = np.repeat(np.asarray(p.step_group), f)
+        sf = np.zeros(len(sg), np.int32)
+        if len(sg):
+            sf[::f] = np.asarray(p.step_first)
+        tables.append((sg, sf))
+    n_groups = max(p.n_groups for p in plans)
+    t_max = max(len(sg) for sg, _ in tables)
+    s_pad = t_max * rows_per_step
 
     vals = np.zeros((d_sh, s_pad, g),
                     np.asarray(plans[0].values2d).dtype)
@@ -634,36 +826,49 @@ def make_sharded_plan(sm: ShardedRgCSR, *, chunks_per_step: int = 1,
     sg2 = np.zeros((d_sh, t_max), np.int32)
     sf2 = np.zeros((d_sh, t_max), np.int32)
     remote_cols = np.zeros((d_sh, r_max), np.int32)
-    e_max = max(p.n_spilled_elements for p in plans) if adaptive else 0
+    rm_v = np.zeros((d_sh, e_tail), vals.dtype)
+    rm_r = np.zeros((d_sh, e_tail), np.int32)
+    rm_x = np.zeros((d_sh, e_tail), np.int32)
+    sp_max = max(p.n_spilled_elements for p in plans) if any_adaptive else 0
     gidx = np.zeros((d_sh, sm.rows_per_shard), np.int32)
     gmask = np.zeros((d_sh, sm.rows_per_shard), bool)
-    sp_v = np.zeros((d_sh, e_max), vals.dtype)
-    sp_r = np.zeros((d_sh, e_max), np.int32)
-    sp_c = np.zeros((d_sh, e_max), np.int32)
+    sp_v = np.zeros((d_sh, sp_max), vals.dtype)
+    sp_r = np.zeros((d_sh, sp_max), np.int32)
+    sp_c = np.zeros((d_sh, sp_max), np.int32)
 
     for d, p in enumerate(plans):
-        s_d, t_d = p.stored_slots, p.num_steps
+        s_d = p.stored_slots
+        sg, sf = tables[d]
+        t_d = len(sg)
         vals[d, :s_d] = np.asarray(p.values2d)
-        c2d = np.asarray(p.columns2d)
-        if x_mode == "split":
-            c2d = remaps[d][c2d]
-        cols[d, :s_d] = c2d
-        sg2[d, :t_d] = np.asarray(p.step_group)
+        cols[d, :s_d] = np.asarray(p.columns2d)
+        sg2[d, :t_d] = sg
         # padding steps extend the shard's own last group (step_first = 0,
         # zero values): consecutive revisit of an initialized block
-        sg2[d, t_d:] = int(np.asarray(p.step_group)[-1]) if t_d else 0
-        sf2[d, :t_d] = np.asarray(p.step_first)
+        sg2[d, t_d:] = int(sg[-1]) if t_d else 0
+        sf2[d, :t_d] = sf
         if x_mode == "split":
             remote_cols[d, : len(remotes[d])] = remotes[d]
-        if adaptive:
-            gidx[d] = np.asarray(p.gather_idx)
-            gmask[d] = np.asarray(p.grouped_mask)
-            e_d = p.n_spilled_elements
-            if e_d:
-                sp_v[d, :e_d] = np.asarray(p.spill_values)
-                sp_r[d, :e_d] = np.asarray(p.spill_rows)
-                sc = np.asarray(p.spill_columns)
-                sp_c[d, :e_d] = remaps[d][sc] if x_mode == "split" else sc
+            rv, rr, rc = rem_tails[d]
+            if len(rv):
+                rm_v[d, : len(rv)] = rv
+                rm_r[d, : len(rv)] = rr
+                rm_x[d, : len(rv)] = xidx_lut[d][rc]
+        if any_adaptive:
+            if p.ordering == "adaptive":
+                gidx[d] = np.asarray(p.gather_idx)
+                gmask[d] = np.asarray(p.grouped_mask)
+                e_d = p.n_spilled_elements
+                if e_d:
+                    sp_v[d, :e_d] = np.asarray(p.spill_values)
+                    sp_r[d, :e_d] = np.asarray(p.spill_rows)
+                    sp_c[d, :e_d] = np.asarray(p.spill_columns)
+            else:
+                # block shard inside a mixed stack: identity gather —
+                # kernel output index of row r IS r for consecutive groups
+                gidx[d] = np.arange(sm.rows_per_shard, dtype=np.int32)
+                gmask[d] = True
+    split = x_mode == "split"
     return ShardedRgCSRPlan(
         values3d=jnp.asarray(vals),
         columns3d=jnp.asarray(cols),
@@ -671,25 +876,40 @@ def make_sharded_plan(sm: ShardedRgCSR, *, chunks_per_step: int = 1,
         step_first2d=jnp.asarray(sf2),
         n_rows=n_rows, n_cols=n_cols, n_shards=d_sh,
         rows_per_shard=sm.rows_per_shard, cols_per_shard=cstride,
-        n_groups=n_groups, group_size=g, chunks_per_step=chunks_per_step,
-        ordering=ordering, spill_threshold=int(spill_threshold),
-        x_mode=x_mode, nnz=sm.nnz,
-        remote_cols=jnp.asarray(remote_cols) if x_mode == "split" else None,
-        gather_idx=jnp.asarray(gidx) if adaptive else None,
-        grouped_mask=jnp.asarray(gmask) if adaptive else None,
-        spill_values=jnp.asarray(sp_v) if adaptive else None,
-        spill_rows=jnp.asarray(sp_r) if adaptive else None,
-        spill_columns=jnp.asarray(sp_c) if adaptive else None,
+        n_groups=n_groups, group_size=g, chunks_per_step=kernel_cps,
+        ordering="adaptive" if any_adaptive else "block",
+        spill_threshold=int(spill_threshold),
+        x_mode=x_mode, nnz=sm.nnz, shard_configs=cfgs,
+        # host numpy on purpose: the run path consumes send_idx/rem_* only;
+        # remote_cols feeds host-side stats/tests — no device upload needed
+        remote_cols=remote_cols if split else None,
+        send_idx=jnp.asarray(send_idx) if split and e_max else None,
+        edge_counts=edge_counts,
+        e_max=e_max,
+        rem_values=jnp.asarray(rm_v) if split and e_max else None,
+        rem_rows=jnp.asarray(rm_r) if split and e_max else None,
+        rem_xidx=jnp.asarray(rm_x) if split and e_max else None,
+        gather_idx=jnp.asarray(gidx) if any_adaptive else None,
+        grouped_mask=jnp.asarray(gmask) if any_adaptive else None,
+        spill_values=jnp.asarray(sp_v) if any_adaptive else None,
+        spill_rows=jnp.asarray(sp_r) if any_adaptive else None,
+        spill_columns=jnp.asarray(sp_c) if any_adaptive else None,
         shard_stored_slots=tuple(p.stored_slots for p in plans),
-        shard_num_steps=tuple(p.num_steps for p in plans),
+        shard_num_steps=tuple(len(sg) for sg, _ in tables),
         shard_remote_cols=tuple(len(r) for r in remotes) if remotes
         else (0,) * d_sh,
+        shard_remote_entries=tuple(len(v) for v, _, _ in rem_tails)
+        if rem_tails else (0,) * d_sh,
+        shard_spill_counts=tuple(p.n_spilled_elements for p in plans),
     )
 
 
-# sharded plan memo: (id(matrix), config, x_mode) -> plan, GC-evicted like
-# PLAN_CACHE (plan keys include x_mode because the stored column indices
-# differ between the replicated and compact-split layouts)
+# sharded plan memo: (id(matrix), shard count, x_mode, per-shard configs)
+# -> plan, GC-evicted like PLAN_CACHE.  Keys carry the shard/device count
+# explicitly (not just matrix identity) so re-warming on a resized mesh can
+# never reuse a stale stacked plan, and the full per-shard config tuple so
+# per-shard-tuned plans coexist with uniform ones; x_mode is keyed because
+# split mode stores local-only column indices + the exchange schedule.
 _SHARDED_PLANS: "collections.OrderedDict[tuple, ShardedRgCSRPlan]" = \
     collections.OrderedDict()
 _SHARDED_PLANS_MAX = 64
@@ -700,9 +920,14 @@ _SHARDED_STATS = {"hits": 0, "misses": 0}
 
 def get_sharded_plan(sm: ShardedRgCSR, *, chunks_per_step: int = 1,
                      ordering: str = "block", spill_threshold: int = 0,
-                     x_mode: str = "replicated") -> ShardedRgCSRPlan:
+                     x_mode: str = "replicated",
+                     shard_configs=None) -> ShardedRgCSRPlan:
     """Fetch (or build and memoize) the stacked sharded plan for ``sm``."""
-    key = (id(sm), chunks_per_step, ordering, int(spill_threshold), x_mode)
+    cfgs = _normalize_shard_configs(shard_configs, sm.n_shards,
+                                    chunks_per_step, ordering,
+                                    spill_threshold,
+                                    group_size=sm.group_size)
+    key = (id(sm), sm.n_shards, x_mode, cfgs)
     with _SHARDED_LOCK:
         plan = _SHARDED_PLANS.get(key)
         if plan is not None:
@@ -711,7 +936,8 @@ def get_sharded_plan(sm: ShardedRgCSR, *, chunks_per_step: int = 1,
             return plan
     plan = make_sharded_plan(sm, chunks_per_step=chunks_per_step,
                              ordering=ordering,
-                             spill_threshold=spill_threshold, x_mode=x_mode)
+                             spill_threshold=spill_threshold, x_mode=x_mode,
+                             shard_configs=cfgs)
     with _SHARDED_LOCK:
         if key not in _SHARDED_PLANS:
             _SHARDED_STATS["misses"] += 1
@@ -753,9 +979,12 @@ def _sharded_args(plan: ShardedRgCSRPlan):
     args = [plan.values3d, plan.columns3d, plan.step_group2d,
             plan.step_first2d]
     ndims = [3, 3, 2, 2]
-    if plan.x_mode == "split":
-        args.append(plan.remote_cols)
-        ndims.append(2)
+    if plan.has_exchange:
+        # send schedule is sharded on its *source* axis (each device gets
+        # its own (D_dst, e_max) row); the remote tail on its dst axis
+        args += [plan.send_idx, plan.rem_values, plan.rem_rows,
+                 plan.rem_xidx]
+        ndims += [3, 2, 2, 2]
     if plan.ordering == "adaptive":
         args += [plan.gather_idx, plan.grouped_mask]
         ndims += [2, 2]
@@ -771,9 +1000,17 @@ def _build_sharded_exec(plan: ShardedRgCSRPlan, kind: str, mesh, axis: str,
     from jax.sharding import PartitionSpec as P
 
     split = plan.x_mode == "split"
+    exchange = plan.has_exchange
     adaptive = plan.ordering == "adaptive"
     has_spill = adaptive and plan.n_spilled_max > 0
+    # hoist every plan attribute the body needs into scalars: the closure
+    # must NOT reference `plan` itself, or the cached jitted fn would pin
+    # the stacked device arrays and the plan-death exec eviction
+    # (weakref.finalize below) could never fire before LRU turnover
     rps = plan.rows_per_shard
+    recv_width = plan.n_shards * plan.e_max
+    n_groups, group_size = plan.n_groups, plan.group_size
+    kernel_cps = plan.chunks_per_step
     empty_v = jnp.zeros((0,), plan.values3d.dtype)
     empty_i = jnp.zeros((0,), jnp.int32)
 
@@ -781,28 +1018,31 @@ def _build_sharded_exec(plan: ShardedRgCSRPlan, kind: str, mesh, axis: str,
         it = iter(a)
         vals, cols = next(it)[0], next(it)[0]            # (S_pad, G)
         sg, sf = next(it)[0], next(it)[0]                # (T_max,)
-        remote = next(it)[0] if split else None
+        sidx = next(it)[0] if exchange else None         # (D, e_max)
+        rm_v = next(it)[0] if exchange else empty_v      # (E_t,)
+        rm_r = next(it)[0] if exchange else empty_i
+        rm_x = next(it)[0] if exchange else empty_i
         gi = next(it)[0] if adaptive else None
         gm = next(it)[0] if adaptive else None
         sv = next(it)[0] if has_spill else empty_v
         sr = next(it)[0] if has_spill else empty_i
         sc = next(it)[0] if has_spill else empty_i
         x_in = next(it)
-        if split:
-            # local/remote reconciliation: own slice stays put; the (plan-
-            # time-computed, usually tiny) remote entries are gathered from
-            # the all-gathered vector.  On real hardware the all_gather
-            # becomes a sparse collective; the kernel working set is
-            # already bounded to cols_per_shard + R_max either way.
-            x_full = jax.lax.all_gather(x_in, axis, tiled=True)
-            if kind == "spmv":
-                x_use = jnp.concatenate(
-                    [x_in, jnp.take(x_full, remote, axis=0)])
-            else:
-                x_use = jnp.concatenate(
-                    [x_in, jnp.take(x_full, remote, axis=0)], axis=0)
-        else:
-            x_use = x_in
+        recv_flat = None
+        if exchange:
+            # plan-driven sparse collective (DESIGN.md §11): move ONLY the
+            # remote x entries — each device sends its (D, e_max) schedule
+            # rows, one all_to_all delivers recv[s] = what src s sent us.
+            # Issued before the kernel, which reads only x_in: the two are
+            # dataflow-independent, so the scheduler can overlap the
+            # exchange with the local-partial launch.
+            send = jnp.take(x_in, sidx, axis=0)    # (D, e_max[, d])
+            recv = jax.lax.all_to_all(send, axis, split_axis=0,
+                                      concat_axis=0, tiled=True)
+            recv_flat = recv.reshape((recv_width,) + x_in.shape[1:])
+        # split mode: grouped storage is local-column-only, so the kernel's
+        # x working set is exactly this device's slice (cols_per_shard)
+        x_use = x_in
         if kind == "spmv":
             n_eff = x_use.shape[0]
             # same VMEM-bounded column tiling as the single-device wrapper:
@@ -811,29 +1051,42 @@ def _build_sharded_exec(plan: ShardedRgCSRPlan, kind: str, mesh, axis: str,
             x_pad = jnp.zeros((1, n_pad), x_use.dtype).at[0, :n_eff].set(
                 x_use)
             y = rgcsr_spmv_pallas(
-                sg, sf, vals, cols, x_pad, n_groups=plan.n_groups,
-                group_size=plan.group_size,
-                chunks_per_step=plan.chunks_per_step, x_tile=xt,
+                sg, sf, vals, cols, x_pad, n_groups=n_groups,
+                group_size=group_size,
+                chunks_per_step=kernel_cps, x_tile=xt,
                 interpret=interpret)
             y_flat = y.reshape(-1)
-            if not adaptive:
-                return y_flat[:rps]
-            return _adaptive_finish_spmv(
-                y_flat, x_use, gi, gm, sv, sr, sc, n_rows=rps,
-                has_spill=has_spill)
+            if adaptive:
+                y_loc = _adaptive_finish_spmv(
+                    y_flat, x_use, gi, gm, sv, sr, sc, n_rows=rps,
+                    has_spill=has_spill)
+            else:
+                y_loc = y_flat[:rps]
+            if recv_flat is None:
+                return y_loc
+            # remote contributions: COO tail over the received entries
+            prods = rm_v * jnp.take(recv_flat, rm_x, axis=0)
+            return y_loc + jax.ops.segment_sum(prods, rm_r,
+                                               num_segments=rps)
         n_eff, d = x_use.shape
         n_pad = _pad_to(max(n_eff, 1), SUBLANES)
         d_pad = _pad_to(max(d, 1), d_tile)
         x_pad = jnp.zeros((n_pad, d_pad), x_use.dtype).at[
             :n_eff, :d].set(x_use)
         y = rgcsr_spmm_pallas(
-            sg, sf, vals, cols, x_pad, n_groups=plan.n_groups,
-            group_size=plan.group_size, d_tile=d_tile,
-            chunks_per_step=plan.chunks_per_step, interpret=interpret)
-        if not adaptive:
-            return y[:rps, :d]
-        return _adaptive_finish_spmm(
-            y, x_use, gi, gm, sv, sr, sc, n_rows=rps, has_spill=has_spill)
+            sg, sf, vals, cols, x_pad, n_groups=n_groups,
+            group_size=group_size, d_tile=d_tile,
+            chunks_per_step=kernel_cps, interpret=interpret)
+        if adaptive:
+            y_loc = _adaptive_finish_spmm(
+                y, x_use, gi, gm, sv, sr, sc, n_rows=rps,
+                has_spill=has_spill)
+        else:
+            y_loc = y[:rps, :d]
+        if recv_flat is None:
+            return y_loc
+        prods = jnp.take(recv_flat, rm_x, axis=0) * rm_v[:, None]
+        return y_loc + jax.ops.segment_sum(prods, rm_r, num_segments=rps)
 
     _, ndims = _sharded_args(plan)
     in_specs = [P(*((axis,) + (None,) * (nd - 1))) for nd in ndims]
@@ -848,6 +1101,27 @@ def _build_sharded_exec(plan: ShardedRgCSRPlan, kind: str, mesh, axis: str,
                              check_rep=False))
 
 
+# mesh-signature memo: a Mesh's topology is immutable, so the O(n_devices)
+# signature walk runs once per mesh object instead of on every sharded
+# dispatch (the weak keying preserves the resized-mesh aliasing guarantee:
+# a dead mesh's entry vanishes with it, a rebuilt mesh recomputes)
+_MESH_SIGS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _mesh_signature(mesh) -> tuple:
+    """Value identity of a mesh (axis names/sizes + device ids) for cache
+    keys — ``id(mesh)`` alone can alias a resized/rebuilt mesh after GC."""
+    from repro.sharding.partitioner import mesh_signature
+    try:
+        sig = _MESH_SIGS.get(mesh)
+        if sig is None:
+            sig = mesh_signature(mesh)
+            _MESH_SIGS[mesh] = sig
+        return sig
+    except TypeError:          # mesh not weakref-able/hashable: just compute
+        return mesh_signature(mesh)
+
+
 def _sharded_exec(plan: ShardedRgCSRPlan, kind: str, mesh, axis: str,
                   interpret: bool, d_tile: int = LANES):
     if axis not in mesh.axis_names:
@@ -856,7 +1130,7 @@ def _sharded_exec(plan: ShardedRgCSRPlan, kind: str, mesh, axis: str,
         raise ValueError(
             f"plan built for {plan.n_shards} shards but mesh axis "
             f"{axis!r} has {mesh.shape[axis]} devices")
-    key = (id(plan), kind, id(mesh), axis, interpret, d_tile)
+    key = (id(plan), kind, _mesh_signature(mesh), axis, interpret, d_tile)
     with _SHARDED_LOCK:
         fn = _SHARDED_EXEC.get(key)
         if fn is not None:

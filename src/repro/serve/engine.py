@@ -15,6 +15,7 @@ Production structure on the latency path:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Dict, List, Optional
 
@@ -79,8 +80,18 @@ class Engine:
         self.plans_warmed = 0
         self.spmv_plans_warmed = 0
         self.sharded_spmv_plans_warmed = 0
+        # append-only observability log: one small host dict per warmed
+        # (matrix, mesh) — deliberately never pruned, unlike _warm_sharded
+        # below, which holds device arrays and must release superseded plans
         self.sharded_spmv_shard_stats: List[Dict] = []
-        self._warm_sharded: List = []    # strong refs: keep cache entries
+        # strong refs keep the sharded-plan cache entries alive; keyed on
+        # (mesh signature, x_mode, exact matrix content) so re-warming the
+        # same matrix on the same mesh REPLACES its entry — the superseded
+        # plan's device arrays are released to the weakref-evicted caches
+        # instead of accumulating for the engine's lifetime.  The key must
+        # be the exact content (not the tuner's log2-bucketed signature):
+        # two distinct matrices sharing a bucket must both stay warmed.
+        self._warm_sharded: Dict[tuple, tuple] = {}
         if model_cfg.sparsity.enabled and model_cfg.sparsity.impl_is_kernel():
             from repro.kernels import ops as kops
             # warm at the model's compute dtype — the dtype the eager apply
@@ -91,7 +102,8 @@ class Engine:
 
     def warm_spmv_plans(self, matrices, *, repeats: int = 1, mesh=None,
                         mesh_axis: Optional[str] = None,
-                        x_mode: str = "replicated"):
+                        x_mode: str = "replicated",
+                        per_shard_tune: bool = True):
         """Pre-tune and stage SpMV plans for auxiliary sparse matrices.
 
         Serving deployments that also answer SpMV traffic (iterative
@@ -113,12 +125,19 @@ class Engine:
 
         With ``mesh`` set, each matrix is additionally row-sharded over the
         resolved mesh axis (``mesh_axis`` or the partitioner's
-        ``sparse_rows`` rule) and its stacked shard_map plan is built at the
-        tuned config and staged in the sharded plan cache (DESIGN.md §10) —
-        the per-shard plans reuse the winner's ``(chunks_per_step,
-        ordering, spill_threshold)`` axes, which apply independently per
-        shard.  The sharded matrices are retained on the engine so the
-        cache entries survive warmup.
+        ``sparse_rows`` rule) and, with ``per_shard_tune`` (the default),
+        **each shard is tuned independently** (DESIGN.md §11,
+        ``autotune.autotune_spmv_per_shard``): the heavy shard of a skewed
+        matrix gets spill/adaptive while light shards keep plain block
+        cps>1, all at the global winner's ``group_size`` so the stacked
+        plan stays uniform.  The stacked shard_map plan is built at those
+        per-shard winners and staged in the sharded plan cache — keyed on
+        the shard/device count, so re-warming on a resized mesh builds a
+        fresh plan instead of reusing a stale stacked one.  Per-matrix
+        shard stats (slots, steps, remote columns, exchange volume per the
+        §11 sparse-collective schedule, per-shard winner configs) land in
+        ``sharded_spmv_shard_stats``.  The sharded matrices are retained
+        on the engine so the cache entries survive warmup.
         """
         from repro.kernels import autotune
         winners = []
@@ -132,21 +151,43 @@ class Engine:
             if mesh is not None:
                 from repro.core.formats import ShardedRgCSR
                 from repro.kernels import ops as kops
+                from repro.sharding import mesh_signature
                 cfg = result.config
+                n_shards = int(mesh.shape[mesh_axis])
+                shard_cfgs = None
+                if per_shard_tune:
+                    shard_results = autotune.autotune_spmv_per_shard(
+                        dense, n_shards, group_size=cfg.group_size,
+                        repeats=repeats, x_mode=x_mode)
+                    shard_cfgs = autotune.harmonize_shard_winners(
+                        shard_results)
                 sm = ShardedRgCSR.from_dense(
-                    dense, n_shards=int(mesh.shape[mesh_axis]),
-                    group_size=cfg.group_size)
+                    dense, n_shards=n_shards, group_size=cfg.group_size)
                 splan = kops.get_sharded_plan(
                     sm, chunks_per_step=cfg.chunks_per_step,
                     ordering=cfg.ordering,
-                    spill_threshold=cfg.spill_threshold, x_mode=x_mode)
-                self._warm_sharded.append((sm, splan))
+                    spill_threshold=cfg.spill_threshold, x_mode=x_mode,
+                    shard_configs=shard_cfgs)
+                content = hashlib.sha1(
+                    np.ascontiguousarray(dense).tobytes()).hexdigest()
+                self._warm_sharded[(mesh_signature(mesh), x_mode,
+                                    dense.shape, str(dense.dtype),
+                                    content)] = (sm, splan)
                 self.sharded_spmv_plans_warmed += 1
                 self.sharded_spmv_shard_stats.append({
                     "n_shards": splan.n_shards,
+                    "mesh": mesh_signature(mesh),
+                    "x_mode": splan.x_mode,
                     "stored_slots": list(splan.shard_stored_slots),
                     "num_steps": list(splan.shard_num_steps),
                     "remote_cols": list(splan.shard_remote_cols),
+                    "exchange_recv_cols": list(
+                        splan.shard_exchange_recv_cols),
+                    "exchange_send_cols": list(
+                        splan.shard_exchange_send_cols),
+                    "exchange_bytes": list(splan.shard_exchange_bytes),
+                    "kernel_chunks_per_step": splan.chunks_per_step,
+                    "shard_winners": [list(c) for c in splan.shard_configs],
                 })
         self.spmv_plans_warmed += len(winners)
         return winners

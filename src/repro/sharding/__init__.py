@@ -4,5 +4,6 @@ from repro.sharding.partitioner import (  # noqa: F401
     ShardingRules,
     SERVE_RULES,
     TRAIN_RULES,
+    mesh_signature,
     resolve_spmv_shard_axis,
 )

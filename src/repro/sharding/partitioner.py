@@ -30,7 +30,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.models.spec import P
 
 __all__ = ["Partitioner", "ShardingRules", "TRAIN_RULES", "SERVE_RULES",
-           "resolve_spmv_shard_axis"]
+           "resolve_spmv_shard_axis", "mesh_signature"]
 
 _is_p = lambda x: isinstance(x, P)
 
@@ -106,6 +106,19 @@ def _filter_axis(mesh: Mesh, axis):
         kept = tuple(a for a in axis if a in mesh.axis_names)
         return kept if kept else None
     return axis if axis in mesh.axis_names else None
+
+
+def mesh_signature(mesh: Mesh) -> tuple:
+    """Value identity of a mesh: axis names, per-axis sizes, device ids.
+
+    Mesh-dependent caches (the sharded SpMV executable memo, warm-plan
+    bookkeeping) key on this instead of ``id(mesh)`` alone so a resized or
+    rebuilt mesh — same Python id after GC, different topology — can never
+    alias a stale entry (DESIGN.md §11).
+    """
+    return (tuple(mesh.axis_names),
+            tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+            tuple(int(d.id) for d in np.asarray(mesh.devices).flat))
 
 
 def resolve_spmv_shard_axis(mesh: Mesh, shape_kind: str = "decode") -> str:
