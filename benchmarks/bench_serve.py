@@ -1,0 +1,160 @@
+"""Serving benchmark: mixed-length prompt mixes through the paged engine.
+
+    PYTHONPATH=src:. python benchmarks/bench_serve.py --out BENCH_serve.json
+
+Per request mix it serves the queue through the **paged** engine and the
+**dense** engine (same smoke model, greedy so token streams are identical)
+and records per-request latency/queue/prefill timings plus the paging
+counters from ``Engine.paging_stats``: page high-water mark, fragmentation
+at peak, admission deferrals, and the derived
+
+* ``paged_peak_tokens``  — high-water pages × page_size, the residency a
+  right-sized pool needs (the acceptance metric: ≤ dense everywhere,
+  strictly lower on mixed-length mixes), and
+* ``pages_per_token``    — paged_peak_tokens / peak live tokens ≥ 1.0, the
+  internal-fragmentation overhead of page granularity.
+
+The page metrics are **deterministic plan properties** of the request mix
+(greedy sampling, ``eos_id=-1`` so generation lengths are fixed): the CI
+gate (``check_bench_regression.py --serve-baseline/--serve-new``) bounds
+them exactly — pages-per-token and the high-water mark may never grow —
+while wall-clock timings are informational only, so the gate cannot flake
+on a loaded runner (the PR 3 determinism lesson).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+from typing import Dict
+
+import numpy as np
+
+# request mixes: (name, prompt lengths cycled over `requests`, max_new)
+MIXES = (
+    ("uniform_short", (16,), 8),
+    ("uniform_long", (48,), 8),
+    ("mixed_length", (8, 48, 16, 64, 24, 8), 8),
+    ("mixed_budget", (12, 12, 12), 16),
+)
+MAX_SEQ = 96
+N_SLOTS = 4
+PAGE_SIZE = 8
+N_REQUESTS = 12
+
+
+def _requests(cfg, lengths, max_new, n):
+    from repro.serve import Request
+    rng = np.random.default_rng(0)
+    return [Request(tokens=rng.integers(0, cfg.vocab,
+                                        (lengths[i % len(lengths)],)
+                                        ).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def bench_mix(eng, cfg, name, lengths, max_new) -> Dict:
+    reqs = _requests(cfg, lengths, max_new, N_REQUESTS)
+    t0 = time.time()
+    eng.serve(reqs)
+    wall_s = time.time() - t0
+    assert all(r.done for r in reqs), f"{name}: unfinished requests"
+    lat = np.array([r.latency_s for r in reqs])
+    st = dict(eng.paging_stats)
+    total_tokens = int(sum(len(r.out) for r in reqs))
+    row = {
+        "lengths": list(lengths),
+        "max_new_tokens": max_new,
+        "n_requests": N_REQUESTS,
+        "total_tokens": total_tokens,
+        # informational (machine-speed dependent; NOT gated)
+        "wall_s": round(wall_s, 4),
+        "tok_per_s": round(total_tokens / wall_s, 2),
+        "latency_s_mean": round(float(lat.mean()), 4),
+        "latency_s_max": round(float(lat.max()), 4),
+        "queue_s_max": round(max(r.queue_s for r in reqs), 4),
+        "decode_steps": st["decode_steps"],
+    }
+    if st["kv_layout"] == "paged":
+        peak_live = max(st["peak_live_tokens"], 1)
+        row.update({
+            # deterministic plan properties (gated exactly in CI)
+            "page_size": st["page_size"],
+            "page_high_water": st["page_high_water"],
+            "paged_peak_tokens": st["paged_peak_tokens"],
+            "dense_equiv_tokens": st["dense_equiv_tokens"],
+            "peak_live_tokens": st["peak_live_tokens"],
+            "pages_per_token": round(st["paged_peak_tokens"] / peak_live, 4),
+            "frag_at_high_water": round(st["frag_at_high_water"], 4),
+            "admission_deferrals": st["admission_deferrals"],
+        })
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--arch", default="granite-3-2b")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_smoke
+    from repro.serve import Engine, ServeConfig
+
+    cfg = get_smoke(args.arch)
+    common = dict(max_seq=MAX_SEQ, n_slots=N_SLOTS, temperature=0.0,
+                  eos_id=-1)                     # deterministic lengths
+    eng_paged = Engine(cfg, ServeConfig(kv_layout="paged",
+                                        page_size=PAGE_SIZE, **common))
+    eng_dense = Engine(cfg, ServeConfig(kv_layout="dense", **common))
+    eng_dense.params = eng_paged.params          # identical token streams
+
+    mixes: Dict[str, Dict] = {}
+    for name, lengths, max_new in MIXES:
+        paged = bench_mix(eng_paged, cfg, name, lengths, max_new)
+        dense = bench_mix(eng_dense, cfg, name, lengths, max_new)
+        assert paged["total_tokens"] == dense["total_tokens"]
+        mixes[name] = {"paged": paged, "dense": dense}
+        print(f"{name}: paged peak {paged['paged_peak_tokens']} tokens "
+              f"(dense pins {paged['dense_equiv_tokens']}), "
+              f"pages/token {paged['pages_per_token']:.3f}, "
+              f"{paged['admission_deferrals']} deferrals")
+
+    peaks = [m["paged"]["paged_peak_tokens"] for m in mixes.values()]
+    dense_equiv = N_SLOTS * MAX_SEQ
+    out = {
+        "meta": {
+            "arch": args.arch + "-smoke",
+            "max_seq": MAX_SEQ, "n_slots": N_SLOTS,
+            "page_size": PAGE_SIZE, "n_requests": N_REQUESTS,
+            "python": platform.python_version(),
+        },
+        "mixes": mixes,
+        "summary": {
+            "dense_equiv_tokens": dense_equiv,
+            "paged_peak_tokens_max": max(peaks),
+            "paged_vs_dense_residency": round(max(peaks) / dense_equiv, 4),
+            "mixed_length_paged_peak": mixes["mixed_length"]["paged"][
+                "paged_peak_tokens"],
+            "pages_per_token_worst": max(
+                m["paged"]["pages_per_token"] for m in mixes.values()),
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"# wrote {args.out}")
+    # acceptance: paged residency <= dense on every mix, strictly lower on
+    # the mixed-length mix
+    if max(peaks) > dense_equiv:
+        print("# FAIL: paged residency exceeds dense", file=sys.stderr)
+        return 1
+    if mixes["mixed_length"]["paged"]["paged_peak_tokens"] >= dense_equiv:
+        print("# FAIL: mixed-length mix shows no paging win",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,6 +32,14 @@ remote_cols`` per shard, and (b) never move more exchange bytes per matrix
 than the baseline did (falling back to the baseline's remote-column counts
 × 4 B when it predates the exchange metric).  Exchange figures are
 deterministic plan properties, so they gate exactly, machine-independent.
+
+The **serve** gate (``--serve-baseline/--serve-new``, BENCH_serve.json)
+bounds the paged KV-cache metrics, which are deterministic allocation
+properties of the fixed request mixes (greedy, no EOS): per mix, the page
+high-water mark and ``pages_per_token`` may **never grow**, and paged peak
+residency must stay ≤ the dense ``(n_slots, S_max)`` equivalent (strictly
+below it on the mixed-length mix).  Serve wall-clock timings are recorded
+but never gated — they are the only machine-speed-dependent fields.
 """
 from __future__ import annotations
 
@@ -148,12 +156,43 @@ def compare_sharded(baseline: dict, new: dict):
     return ratios, geomean, failures
 
 
+def compare_serve(baseline: dict, new: dict):
+    """Exact never-grow bounds on the deterministic paging metrics.
+
+    Returns a list of failure strings (empty = pass).  Mixes present on
+    only one side are skipped (adding a mix cannot flip the gate)."""
+    failures = []
+    for name, row in new.get("mixes", {}).items():
+        paged = row.get("paged", {})
+        # structural bound within the new run: residency never above dense
+        peak = paged.get("paged_peak_tokens")
+        dense_eq = paged.get("dense_equiv_tokens")
+        if peak is not None and dense_eq is not None and peak > dense_eq:
+            failures.append(f"{name}: paged peak {peak} tokens exceeds "
+                            f"dense equivalent {dense_eq}")
+        if name == "mixed_length" and peak is not None \
+                and dense_eq is not None and peak >= dense_eq:
+            failures.append(f"{name}: no residency win over dense "
+                            f"({peak} >= {dense_eq})")
+        base = baseline.get("mixes", {}).get(name, {}).get("paged")
+        if base is None:
+            continue
+        for key in ("page_high_water", "pages_per_token"):
+            old_v, new_v = base.get(key), paged.get(key)
+            if old_v is not None and new_v is not None and new_v > old_v:
+                failures.append(
+                    f"{name}: {key} grew {old_v} -> {new_v}")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline")
     ap.add_argument("--new")
     ap.add_argument("--sharded-baseline")
     ap.add_argument("--sharded-new")
+    ap.add_argument("--serve-baseline")
+    ap.add_argument("--serve-new")
     ap.add_argument("--max-geomean-regression", type=float, default=0.10,
                     help="fail when geomean(new/baseline) > 1 + this")
     args = ap.parse_args(argv)
@@ -162,9 +201,13 @@ def main(argv=None) -> int:
     if bool(args.sharded_baseline) != bool(args.sharded_new):
         ap.error("--sharded-baseline and --sharded-new must be given "
                  "together")
-    if not args.baseline and not args.sharded_baseline:
-        ap.error("nothing to gate: pass --baseline/--new and/or "
-                 "--sharded-baseline/--sharded-new")
+    if bool(args.serve_baseline) != bool(args.serve_new):
+        ap.error("--serve-baseline and --serve-new must be given together")
+    if not args.baseline and not args.sharded_baseline \
+            and not args.serve_baseline:
+        ap.error("nothing to gate: pass --baseline/--new, "
+                 "--sharded-baseline/--sharded-new and/or "
+                 "--serve-baseline/--serve-new")
     limit = 1.0 + args.max_geomean_regression
     rc = 0
 
@@ -211,6 +254,21 @@ def main(argv=None) -> int:
                   f"{100 * (geomean - 1):.1f}% > "
                   f"{100 * args.max_geomean_regression:.0f}%",
                   file=sys.stderr)
+            rc = 1
+
+    if args.serve_baseline:
+        with open(args.serve_baseline) as f:
+            sv_base = json.load(f)
+        with open(args.serve_new) as f:
+            sv_new = json.load(f)
+        failures = compare_serve(sv_base, sv_new)
+        for name, row in sorted(sv_new.get("mixes", {}).items()):
+            paged = row.get("paged", {})
+            print(f"serve:{name},hwm={paged.get('page_high_water')},"
+                  f"pages_per_token={paged.get('pages_per_token')}")
+        for msg in failures:
+            print(f"# FAIL(serve paging): {msg}", file=sys.stderr)
+        if failures:
             rc = 1
 
     if rc == 0:

@@ -1,4 +1,4 @@
-"""Serving example: batched request queue through the slot-based engine.
+"""Serving example: mixed-length request queue through the paged engine.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -23,7 +23,7 @@ def main():
     print(f"generated {out.size} tokens in {dt:.2f}s "
           f"({out.size / dt:.1f} tok/s on CPU)")
 
-    print("\n=== continuous batching over a queue of 10 requests ===")
+    print("\n=== continuous mixed-length batching over 10 requests ===")
     reqs = [Request(tokens=rng.integers(0, cfg.vocab,
                                         (8 + 2 * i,)).astype(np.int32),
                     max_new_tokens=6 + i % 5) for i in range(10)]
@@ -35,6 +35,11 @@ def main():
           f"all done: {all(r.done for r in done)}")
     for i, r in enumerate(done[:3]):
         print(f"  req{i}: prompt_len={len(r.tokens)} -> {r.out}")
+    ps = eng.paging_stats
+    print(f"paging: peak {ps['page_high_water']} pages in use "
+          f"({ps['paged_peak_tokens']} tokens vs "
+          f"{ps['dense_equiv_tokens']} dense), fragmentation at peak "
+          f"{ps['frag_at_high_water']:.3f}")
 
 
 if __name__ == "__main__":

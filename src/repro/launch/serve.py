@@ -1,7 +1,8 @@
-"""Serving launcher: bring up the slot-based engine for an architecture.
+"""Serving launcher: bring up the paged continuous-batching engine.
 
 Usage:
-  python -m repro.launch.serve --arch granite-3-2b --smoke --requests 8
+  python -m repro.launch.serve --arch granite-3-2b --smoke --requests 8 \
+      --kv-layout paged --page-size 16 --mixed-lengths
 """
 import argparse
 import time
@@ -17,23 +18,44 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--kv-layout", choices=("paged", "dense"),
+                    default="paged")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="page-pool size; 0 = dense capacity + null page")
+    ap.add_argument("--mixed-lengths", action="store_true",
+                    help="cycle prompt lengths instead of a uniform 16")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, get_smoke
     from repro.serve import Engine, Request, ServeConfig
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    eng = Engine(cfg, ServeConfig(max_seq=args.max_seq, n_slots=args.slots))
+    eng = Engine(cfg, ServeConfig(
+        max_seq=args.max_seq, n_slots=args.slots, kv_layout=args.kv_layout,
+        page_size=args.page_size, n_pages=args.n_pages))
     rng = np.random.default_rng(0)
-    reqs = [Request(tokens=rng.integers(0, cfg.vocab, (16,)).astype(np.int32),
+    lengths = [16] * args.requests
+    if args.mixed_lengths:
+        mix = (8, 24, 16, 48)
+        lengths = [min(mix[i % len(mix)], args.max_seq - args.max_new)
+                   for i in range(args.requests)]
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, (ln,)).astype(np.int32),
                     max_new_tokens=args.max_new)
-            for _ in range(args.requests)]
+            for ln in lengths]
     t0 = time.time()
     done = eng.serve(reqs)
     dt = time.time() - t0
     total = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests / {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s); all done: {all(r.done for r in done)}")
+    ps = eng.paging_stats
+    if ps and ps.get("kv_layout") == "paged":
+        print(f"paging: high-water {ps['page_high_water']} pages "
+              f"({ps['paged_peak_tokens']} tokens; dense layout pins "
+              f"{ps['dense_equiv_tokens']}), fragmentation at peak "
+              f"{ps['frag_at_high_water']:.3f}, "
+              f"{ps['admission_deferrals']} admission deferrals")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,30 @@
 """Attention variants: GQA/MHA/MQA, MLA (DeepSeek/MiniCPM), local windows.
 
-All variants share the cache protocol::
+All variants share the cache protocol.  **Dense** layout::
 
-    cache = {"k": (B, S_max, H_kv, Dh), "v": ..., "index": i32[]}         # gqa
-    cache = {"ckv": (B, S_max, r_kv), "krope": (B, S_max, Dr), "index": …} # mla
+    cache = {"k": (B, S_max, H_kv, Dh), "v": ..., "index": i32[B]}          # gqa
+    cache = {"ckv": (B, S_max, r_kv), "krope": (B, S_max, Dr), "index": …}  # mla
 
-``index`` is the number of tokens already written.  Windowed layers use a
-ring buffer of size ``window`` (position ``index % window``) so decode-state
-is O(window) — this is what makes the `long_500k` fallback and the
-RecurrentGemma local-attention layers bounded.
+**Paged** layout (DESIGN.md §6) — K/V live in a shared page pool and each
+batch slot addresses its pages through a block table::
+
+    cache = {"k": (n_pages, page_size, H_kv, Dh), "v": ...,
+             "block_table": i32[B, pages_per_slot], "index": i32[B]}        # gqa
+    cache = {"ckv": (n_pages, page_size, r_kv), "krope": (..., Dr),
+             "block_table": ..., "index": ...}                              # mla
+
+``index`` is a **per-slot vector**: entry ``b`` is the number of tokens
+already written for slot ``b``, so slots at different positions decode in
+one batch (the serve loop's continuous mixed-length batching).  Token ``t``
+of slot ``b`` lives at page ``block_table[b, t // page_size]``, offset
+``t % page_size``; page 0 is a reserved null page — free slots point at it
+so their (ignored) decode writes never touch live pages.
+
+Windowed layers use a ring buffer of size ``window`` (position
+``index % window``) so decode-state is O(window) — this is what makes the
+`long_500k` fallback and the RecurrentGemma local-attention layers bounded.
+Rings are already sized to residency, so they keep the dense per-slot
+layout under paging (a block table over a bounded ring buys nothing).
 
 KV-cache quantization (``int8``) stores per-token/head absmax scales — a
 beyond-paper memory optimization evaluated in EXPERIMENTS.md §Perf.
@@ -24,7 +40,28 @@ import jax.numpy as jnp
 from repro.models.layers import P, dense, dense_spec, rope
 
 __all__ = ["gqa_spec", "gqa_apply", "mla_spec", "mla_apply",
-           "init_gqa_cache", "init_mla_cache", "attend"]
+           "init_gqa_cache", "init_mla_cache", "init_gqa_paged_cache",
+           "init_mla_paged_cache", "PageGeometry", "attend"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PageGeometry:
+    """Static shape of a paged KV cache (shared by every attention layer).
+
+    ``n_pages`` counts the *total* pool including the reserved null page 0;
+    ``pages_per_slot`` is the block-table width — the most pages one slot
+    can ever address (``ceil(s_max / page_size)``).
+    """
+    n_pages: int
+    page_size: int
+    pages_per_slot: int
+
+    @property
+    def usable_pages(self) -> int:
+        return self.n_pages - 1          # page 0 is the null page
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-int(n_tokens) // self.page_size)
 
 
 # ---------------------------------------------------------------------------
@@ -45,24 +82,40 @@ _K_CHUNK = 1024
 class MaskInfo:
     """Lazy attention-mask description — masks are *computed per block*
     inside the chunked path instead of materializing an (S, T) bool array
-    (1 GB at 32k); the direct path builds the same mask from indices."""
+    (1 GB at 32k); the direct path builds the same mask from indices.
+
+    ``q_offset`` and ``valid_len`` accept either a traced scalar (all slots
+    at the same position — generate()'s batch-synchronous path) or a
+    ``(B,)`` vector (per-slot positions — the serve loop's mixed-length
+    continuous batching).  With a vector, masks gain a leading batch dim.
+    """
     causal: bool = True
     window: Optional[int] = None    # static
-    q_offset: object = 0            # traced scalar ok (tokens already cached)
+    q_offset: object = 0            # traced scalar or (B,) (tokens cached)
     valid_len: object = None        # kv positions >= valid_len are masked
     kv_len: Optional[int] = None    # true kv length (for padding)
 
+    def q_positions(self, base):
+        """Absolute query positions: base (qc,) + q_offset -> (qc,) or
+        (B, qc) when the offset is per-slot."""
+        off = jnp.asarray(self.q_offset)
+        return base + (off[:, None] if off.ndim else off)
+
     def block(self, q_pos, k_pos):
-        """q_pos: (qc,), k_pos: (kc,) -> bool (qc, kc)."""
-        m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
-        qp = q_pos[:, None]
+        """q_pos: (qc,) or (B, qc); k_pos: (kc,) ->
+        bool (qc, kc) or (B, qc, kc)."""
+        qp = q_pos[..., :, None]
         kp = k_pos[None, :]
+        m = jnp.broadcast_to(
+            jnp.ones((), bool),
+            jnp.broadcast_shapes(qp.shape, kp.shape))
         if self.causal:
             m &= kp <= qp
         if self.window is not None:
             m &= kp > qp - self.window
         if self.valid_len is not None:
-            m &= kp < self.valid_len
+            vl = jnp.asarray(self.valid_len)
+            m &= kp < (vl[:, None, None] if vl.ndim else vl)
         if self.kv_len is not None:
             m &= kp < self.kv_len
         return m
@@ -72,10 +125,11 @@ def attend(q, k, v, mask=None, *, mask_info: Optional[MaskInfo] = None,
            scale: Optional[float] = None):
     """q: (B,S,Hq,D)  k/v: (B,T,Hkv,D|Dv).
 
-    Pass either an explicit (S,T) bool ``mask`` (small/decode shapes) or a
-    :class:`MaskInfo` (lazy; required for long sequences).  Grouped heads:
-    Hq = G·Hkv — q is reshaped so each kv head serves G query heads without
-    materializing repeated k/v (the GQA memory win).
+    Pass either an explicit (S,T) / per-slot (B,S,T) bool ``mask``
+    (small/decode shapes) or a :class:`MaskInfo` (lazy; required for long
+    sequences).  Grouped heads: Hq = G·Hkv — q is reshaped so each kv head
+    serves G query heads without materializing repeated k/v (the GQA
+    memory win).
     """
     b, s, hq, d = q.shape
     t, hkv = k.shape[1], k.shape[2]
@@ -89,11 +143,13 @@ def attend(q, k, v, mask=None, *, mask_info: Optional[MaskInfo] = None,
         out = _flash_attend(qg, k, v, mask_info, scale)
         return out.reshape(b, s, hq, v.shape[-1])
     if mask is None:
-        q_pos = jnp.arange(s) + mask_info.q_offset
-        mask = mask_info.block(q_pos, jnp.arange(t))
+        mask = mask_info.block(mask_info.q_positions(jnp.arange(s)),
+                               jnp.arange(t))
+    maskb = mask[None, None, None] if mask.ndim == 2 \
+        else mask[:, None, None]                    # (B?,1,1,S,T)
     logits = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
-    logits = jnp.where(mask[None, None, None, :, :], logits, -1e30)
+    logits = jnp.where(maskb, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v)
     return out.reshape(b, s, hq, v.shape[-1])
@@ -128,18 +184,19 @@ def _flash_attend(qg, k, v, mi: MaskInfo, scale,
 
     def q_body(_, inputs):
         qi, q_blk = inputs                                  # (B,qc,hkv,g,d)
-        q_pos = qi * qc + jnp.arange(qc) + mi.q_offset
+        q_pos = mi.q_positions(qi * qc + jnp.arange(qc))
 
         def kv_body(carry, kv_inputs):
             m, l, acc = carry
             kj, k_blk, v_blk = kv_inputs
             k_pos = kj * kc + jnp.arange(kc)
             mask_blk = mi.block(q_pos, k_pos)
+            mask_b = mask_blk[None, None, None] if mask_blk.ndim == 2 \
+                else mask_blk[:, None, None]
             logits = jnp.einsum("bqhgd,bkhd->bhgqk",
                                 q_blk.astype(jnp.float32),
                                 k_blk.astype(jnp.float32)) * scale
-            logits = jnp.where(mask_blk[None, None, None, :, :], logits,
-                               -jnp.inf)
+            logits = jnp.where(mask_b, logits, -jnp.inf)
             m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
             # guard -inf rows (fully masked so far): exp(-inf - -inf)
             m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
@@ -165,34 +222,19 @@ def _flash_attend(qg, k, v, mi: MaskInfo, scale,
     return out[:, :s].astype(v.dtype)
 
 
-def _mask_for(mode: str, s: int, t: int, index, window: Optional[int]):
-    """Attention mask given query block length s and kv length t.
-
-    ``index``: tokens already in cache before this call (decode/prefill
-    continuation); positions of the new queries are index..index+s-1.
-    """
-    q_pos = jnp.arange(s)[:, None] + index
-    kv_pos = jnp.arange(t)[None, :]
-    if mode == "full":                       # encoder (bidirectional)
-        return jnp.ones((s, t), bool)
-    mask = kv_pos <= q_pos
-    if window is not None:
-        mask &= kv_pos > q_pos - window
-    return mask
-
-
 def _ring_mask(s: int, window: int, index):
     """Decode-time mask over a ring buffer of size ``window``.
 
     Slot j holds absolute position p ≡ j (mod window) with p in
     (index-window, index]; valid iff it has been written (p >= 0) — geometry
-    guarantees p <= index.  Query position = index (s == 1).
+    guarantees p <= index.  Query position = index (s == 1).  ``index`` is
+    the per-slot (B,) vector, so each batch row gets its own ring view.
     """
     assert s == 1
     slots = jnp.arange(window)
-    newest = index  # position being written this step lands at index % window
+    newest = index[:, None]   # (B,1): this step's write lands at index % window
     pos = newest - ((newest - slots) % window)
-    return (pos >= 0)[None, :]
+    return (pos >= 0)[:, None, :]                   # (B, 1, window)
 
 
 # ---------------------------------------------------------------------------
@@ -241,7 +283,7 @@ def init_gqa_cache(cfg, batch: int, s_max: int, window: Optional[int] = None):
     cache = {
         "k": jnp.zeros((batch, size, hkv, dh), store_dtype),
         "v": jnp.zeros((batch, size, hkv, dh), store_dtype),
-        "index": jnp.zeros((), jnp.int32),
+        "index": jnp.zeros((batch,), jnp.int32),
     }
     if kv_dtype == "int8":
         cache["k_scale"] = jnp.zeros((batch, size, hkv, 1), jnp.float32)
@@ -249,18 +291,71 @@ def init_gqa_cache(cfg, batch: int, s_max: int, window: Optional[int] = None):
     return cache
 
 
+def init_gqa_paged_cache(cfg, n_slots: int, geom: PageGeometry):
+    """Paged GQA cache: shared page pool + per-slot block table/index."""
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    kv_dtype = cfg.kv_cache_dtype
+    store_dtype = jnp.int8 if kv_dtype == "int8" else jnp.dtype(kv_dtype)
+    cache = {
+        "k": jnp.zeros((geom.n_pages, geom.page_size, hkv, dh), store_dtype),
+        "v": jnp.zeros((geom.n_pages, geom.page_size, hkv, dh), store_dtype),
+        "block_table": jnp.zeros((n_slots, geom.pages_per_slot), jnp.int32),
+        "index": jnp.zeros((n_slots,), jnp.int32),
+    }
+    if kv_dtype == "int8":
+        cache["k_scale"] = jnp.zeros(
+            (geom.n_pages, geom.page_size, hkv, 1), jnp.float32)
+        cache["v_scale"] = jnp.zeros(
+            (geom.n_pages, geom.page_size, hkv, 1), jnp.float32)
+    return cache
+
+
+def _paged_write(pool, new, page, off):
+    """Scatter this step's per-slot token into its (page, offset) cell.
+
+    pool: (P, ps, ...); new: (B, 1, ...); page/off: (B,).  Free slots point
+    at the null page 0, so their writes land there harmlessly.
+    """
+    return pool.at[page, off].set(new[:, 0])
+
+
+def _paged_view(pool, block_table):
+    """Gather a slot-major dense view (B, pages_per_slot·ps, ...) of the
+    pool through the block table (B, pages_per_slot)."""
+    b, p_max = block_table.shape
+    v = pool[block_table]                    # (B, p_max, ps, ...)
+    return v.reshape((b, p_max * pool.shape[1]) + pool.shape[2:])
+
+
 def _cache_write(cache, k_new, v_new, kv_dtype: str, window: Optional[int]):
-    index = cache["index"]
-    size = cache["k"].shape[1]
-    s = k_new.shape[1]
+    index = cache["index"]                   # (B,)
+    b, s = k_new.shape[:2]
     ks, k_scale = _maybe_store(k_new, kv_dtype)
     vs, v_scale = _maybe_store(v_new, kv_dtype)
+    cache = dict(cache)
+    if "block_table" in cache:
+        # paged decode write (prefill goes through the dense slab + the
+        # serve layer's commit_prefill — see serve/paging.py)
+        assert s == 1, "paged caches are decode-only; prefill is dense"
+        ps = cache["k"].shape[1]
+        page = cache["block_table"][jnp.arange(b), index // ps]
+        off = index % ps
+        cache["k"] = _paged_write(cache["k"], ks, page, off)
+        cache["v"] = _paged_write(cache["v"], vs, page, off)
+        if k_scale is not None:
+            cache["k_scale"] = _paged_write(cache["k_scale"], k_scale,
+                                            page, off)
+            cache["v_scale"] = _paged_write(cache["v_scale"], v_scale,
+                                            page, off)
+        cache["index"] = index + s
+        return cache
+    size = cache["k"].shape[1]
     if window and s >= size:
         # prefill longer than the ring: keep the last `size` tokens, rolled
         # so that absolute position p lands at slot p % size (the invariant
-        # the decode-time ring mask relies on)
+        # the decode-time ring mask relies on).  Prefill rows share one
+        # length, so the roll shift is static.
         shift = (s - size) % size
-        cache = dict(cache)
         cache["k"] = jnp.roll(ks[:, -size:], shift, axis=1)
         cache["v"] = jnp.roll(vs[:, -size:], shift, axis=1)
         if k_scale is not None:
@@ -269,26 +364,24 @@ def _cache_write(cache, k_new, v_new, kv_dtype: str, window: Optional[int]):
         cache["index"] = index + s
         return cache
     if window and s == 1:
-        slot = index % size
-        starts = (0, slot, 0, 0)
-        cache = dict(cache)
-        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], ks, starts)
-        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vs, starts)
+        rows = jnp.arange(b)
+        slot = index % size                  # per-slot ring position
+        cache["k"] = cache["k"].at[rows, slot].set(ks[:, 0])
+        cache["v"] = cache["v"].at[rows, slot].set(vs[:, 0])
         if k_scale is not None:
-            cache["k_scale"] = jax.lax.dynamic_update_slice(
-                cache["k_scale"], k_scale, starts)
-            cache["v_scale"] = jax.lax.dynamic_update_slice(
-                cache["v_scale"], v_scale, starts)
+            cache["k_scale"] = cache["k_scale"].at[rows, slot].set(
+                k_scale[:, 0])
+            cache["v_scale"] = cache["v_scale"].at[rows, slot].set(
+                v_scale[:, 0])
     else:
-        starts = (0, index, 0, 0)
-        cache = dict(cache)
-        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], ks, starts)
-        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vs, starts)
+        # per-slot start positions: row b writes tokens index[b]..index[b]+s-1
+        rows = jnp.arange(b)[:, None]
+        pos = index[:, None] + jnp.arange(s)[None, :]
+        cache["k"] = cache["k"].at[rows, pos].set(ks)
+        cache["v"] = cache["v"].at[rows, pos].set(vs)
         if k_scale is not None:
-            cache["k_scale"] = jax.lax.dynamic_update_slice(
-                cache["k_scale"], k_scale, starts)
-            cache["v_scale"] = jax.lax.dynamic_update_slice(
-                cache["v_scale"], v_scale, starts)
+            cache["k_scale"] = cache["k_scale"].at[rows, pos].set(k_scale)
+            cache["v_scale"] = cache["v_scale"].at[rows, pos].set(v_scale)
     cache["index"] = index + s
     return cache
 
@@ -330,8 +423,22 @@ def gqa_apply(params, cfg, x, positions, *, mode: str = "causal",
             mi = MaskInfo(causal=True, window=window, q_offset=index)
             y = attend(q, k, v, mask_info=mi)
         else:
-            k = _maybe_load(new_cache["k"], new_cache.get("k_scale"), x.dtype)
-            v = _maybe_load(new_cache["v"], new_cache.get("v_scale"), x.dtype)
+            if "block_table" in new_cache:
+                # paged: gather each slot's pages into a slot-major dense
+                # view; view position t IS absolute token position t, so
+                # the same per-slot causal/valid masks apply unchanged
+                bt = new_cache["block_table"]
+                k_sc = _paged_view(new_cache["k_scale"], bt) \
+                    if "k_scale" in new_cache else None
+                v_sc = _paged_view(new_cache["v_scale"], bt) \
+                    if "v_scale" in new_cache else None
+                k = _maybe_load(_paged_view(new_cache["k"], bt), k_sc, x.dtype)
+                v = _maybe_load(_paged_view(new_cache["v"], bt), v_sc, x.dtype)
+            else:
+                k = _maybe_load(new_cache["k"], new_cache.get("k_scale"),
+                                x.dtype)
+                v = _maybe_load(new_cache["v"], new_cache.get("v_scale"),
+                                x.dtype)
             q, k, v = shard_attn_qkv(cfg, q, k, v)
             t = k.shape[1]
             if window and s == 1:
@@ -408,7 +515,20 @@ def init_mla_cache(cfg, batch: int, s_max: int, window: Optional[int] = None):
                          jnp.dtype(cfg.dtype)),
         "krope": jnp.zeros((batch, size, m.qk_rope_head_dim),
                            jnp.dtype(cfg.dtype)),
-        "index": jnp.zeros((), jnp.int32),
+        "index": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def init_mla_paged_cache(cfg, n_slots: int, geom: PageGeometry):
+    """Paged MLA cache: latent/rope-key page pools + block table."""
+    m = cfg.mla
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ckv": jnp.zeros((geom.n_pages, geom.page_size, m.kv_lora_rank), dt),
+        "krope": jnp.zeros(
+            (geom.n_pages, geom.page_size, m.qk_rope_head_dim), dt),
+        "block_table": jnp.zeros((n_slots, geom.pages_per_slot), jnp.int32),
+        "index": jnp.zeros((n_slots,), jnp.int32),
     }
 
 
@@ -438,22 +558,39 @@ def mla_apply(params, cfg, x, positions, *, mode: str = "causal",
     new_cache = None
     index = jnp.zeros((), jnp.int32)
     if cache is not None:
-        index = cache["index"]
+        index = cache["index"]               # (B,)
         new_cache = dict(cache)
-        if window and s == 1:
-            slot = index % cache["ckv"].shape[1]
-            new_cache["ckv"] = jax.lax.dynamic_update_slice(
-                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, slot, 0))
-            new_cache["krope"] = jax.lax.dynamic_update_slice(
-                cache["krope"], k_rope.astype(cache["krope"].dtype), (0, slot, 0))
+        ckv_st = ckv.astype(cache["ckv"].dtype)
+        kr_st = k_rope.astype(cache["krope"].dtype)        # (B,S,Dr)
+        if "block_table" in cache:
+            assert s == 1, "paged caches are decode-only; prefill is dense"
+            ps = cache["ckv"].shape[1]
+            page = cache["block_table"][jnp.arange(b), index // ps]
+            off = index % ps
+            new_cache["ckv"] = _paged_write(cache["ckv"], ckv_st, page, off)
+            new_cache["krope"] = _paged_write(cache["krope"], kr_st,
+                                              page, off)
+            new_cache["index"] = index + s
+            bt = cache["block_table"]
+            ckv = _paged_view(new_cache["ckv"], bt).astype(x.dtype)
+            k_rope = _paged_view(new_cache["krope"], bt).astype(x.dtype)
         else:
-            new_cache["ckv"] = jax.lax.dynamic_update_slice(
-                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, index, 0))
-            new_cache["krope"] = jax.lax.dynamic_update_slice(
-                cache["krope"], k_rope.astype(cache["krope"].dtype), (0, index, 0))
-        new_cache["index"] = index + s
-        ckv = new_cache["ckv"].astype(x.dtype)
-        k_rope = new_cache["krope"].astype(x.dtype)
+            rows = jnp.arange(b)
+            if window and s == 1:
+                slot = index % cache["ckv"].shape[1]
+                new_cache["ckv"] = cache["ckv"].at[rows, slot].set(
+                    ckv_st[:, 0])
+                new_cache["krope"] = cache["krope"].at[rows, slot].set(
+                    kr_st[:, 0])
+            else:
+                pos = index[:, None] + jnp.arange(s)[None, :]
+                new_cache["ckv"] = cache["ckv"].at[rows[:, None], pos].set(
+                    ckv_st)
+                new_cache["krope"] = cache["krope"].at[rows[:, None],
+                                                       pos].set(kr_st)
+            new_cache["index"] = index + s
+            ckv = new_cache["ckv"].astype(x.dtype)
+            k_rope = new_cache["krope"].astype(x.dtype)
 
     t = ckv.shape[1]
     # up-project latent to per-head keys/values (recomputed per step — the

@@ -208,9 +208,13 @@ class LanguageModel:
 
     # -------------------------------------------------------------- serving
     def init_cache(self, batch_size: int, s_max: int, *,
-                   shape_kind: str = "decode", enc_len: int = 0):
+                   shape_kind: str = "decode", enc_len: int = 0,
+                   paging=None):
+        """``paging``: optional :class:`repro.models.attention.PageGeometry`
+        — full-attention layers get paged (page-pool + block-table) caches
+        instead of dense per-slot slabs (DESIGN.md §6)."""
         return tfm.stack_cache_spec(self.cfg, batch_size, s_max, shape_kind,
-                                    enc_len)
+                                    enc_len, paging)
 
     def prefill(self, params, batch, s_max: int, *,
                 shape_kind: str = "prefill"):
@@ -263,8 +267,13 @@ class LanguageModel:
         """One-token serve step. tokens: (B, 1). Returns (logits, caches)."""
         cfg = self.cfg
         x = embed_lookup(params["embed"], tokens).astype(self.compute_dtype)
-        index = _cache_index(caches)
-        pos = jnp.broadcast_to(index[None, None], tokens.shape).astype(jnp.int32)
+        index = _cache_index(caches)         # (B,) per-slot positions
+        if index.ndim:
+            pos = jnp.broadcast_to(index[:, None], tokens.shape
+                                   ).astype(jnp.int32)
+        else:                                # index-free stacks (pure ssm/rec)
+            pos = jnp.broadcast_to(index[None, None], tokens.shape
+                                   ).astype(jnp.int32)
         x, caches, _ = tfm.stack_apply(params["stack"], cfg, x, pos,
                                        mode="decode", shape_kind=shape_kind,
                                        caches=caches)
@@ -273,16 +282,17 @@ class LanguageModel:
 
 
 def _cache_index(caches):
-    """First available `index` leaf (all layers advance in lockstep)."""
+    """First available `index` leaf, shape (B,) — all layers advance in
+    lockstep; body-stacked leaves carry a leading (layers,) dim to strip."""
     for tree in (caches["prefix"], caches["body"]):
         for cache in tree.values():
             if isinstance(cache, dict):
                 if "index" in cache:
                     idx = cache["index"]
-                    return idx[0] if idx.ndim else idx
+                    return idx[0] if idx.ndim > 1 else idx
                 if "self" in cache and "index" in cache["self"]:
                     idx = cache["self"]["index"]
-                    return idx[0] if idx.ndim else idx
+                    return idx[0] if idx.ndim > 1 else idx
     return jnp.zeros((), jnp.int32)
 
 

@@ -154,14 +154,25 @@ def block_apply(params, cfg, kind: str, x, positions, *, mode: str = "train",
 
 
 def init_block_cache(cfg, kind: str, batch: int, s_max: int,
-                     shape_kind: str = "decode", enc_len: int = 0):
+                     shape_kind: str = "decode", enc_len: int = 0,
+                     paging=None):
+    """``paging``: an :class:`attn_mod.PageGeometry` — full-attention KV
+    caches become shared page pools addressed per slot through block
+    tables.  Windowed layers keep their dense rings (already O(window)
+    residency), and recurrent state is position-free, so only the
+    unbounded dense slabs change layout."""
     window = _effective_window(cfg, kind, shape_kind)
     if kind == "ssm":
         return rec_mod.init_mamba2_state(cfg, batch)
     if kind == "rec":
         return rec_mod.init_rglru_state(cfg, batch)
+    paged = paging is not None and not window and kind != "dec_attn"
     if cfg.attn_kind == "mla":
+        if paged:
+            return attn_mod.init_mla_paged_cache(cfg, batch, paging)
         return attn_mod.init_mla_cache(cfg, batch, s_max, window)
+    if paged:
+        return attn_mod.init_gqa_paged_cache(cfg, batch, paging)
     cache = attn_mod.init_gqa_cache(cfg, batch, s_max, window)
     if kind == "dec_attn" and enc_len:
         hkv, dh = cfg.n_kv_heads, cfg.head_dim
@@ -200,15 +211,16 @@ def stack_spec(cfg):
 
 
 def stack_cache_spec(cfg, batch: int, s_max: int, shape_kind: str,
-                     enc_len: int = 0):
+                     enc_len: int = 0, paging=None):
     """Concrete (zeros) caches for the stack, matching stack_apply's layout."""
     r = cfg.pattern_repeats
     prefix = {f"{i}_{kind}": init_block_cache(cfg, kind, batch, s_max,
-                                              shape_kind, enc_len)
+                                              shape_kind, enc_len, paging)
               for i, kind in enumerate(cfg.prefix_pattern)}
 
     def stacked(kind):
-        one = init_block_cache(cfg, kind, batch, s_max, shape_kind, enc_len)
+        one = init_block_cache(cfg, kind, batch, s_max, shape_kind, enc_len,
+                               paging)
         return jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a, (r,) + a.shape).copy(), one)
 

@@ -1,2 +1,5 @@
-"""Serving: batched prefill/decode engine with slot-based batching."""
+"""Serving: batched prefill/decode engine with continuous mixed-length
+batching over a paged KV cache (DESIGN.md §6)."""
+from repro.serve import paging  # noqa: F401
 from repro.serve.engine import Engine, Request, ServeConfig  # noqa: F401
+from repro.serve.paging import PageAllocator, PageGeometry  # noqa: F401

@@ -5,11 +5,19 @@ Production structure on the latency path:
 * jit'd ``prefill`` (prompt → logits + caches) and ``decode`` (one token,
   donated cache) — the same functions the decode dry-run cells lower, so
   serving perf analysis and the roofline table talk about identical HLO.
-* **Slot-based continuous batching**: a fixed decode batch of ``n_slots``;
-  finished sequences free their slot and the next queued request is
-  prefilled into it (prefill caches are written per-slot via tree indexing).
-  This is the vLLM-style decoupling of prefill/decode, minus paged KV —
-  cache blocks here are dense per-slot (documented trade-off).
+* **Continuous mixed-length batching**: a fixed decode batch of
+  ``n_slots`` with a **per-slot KV position index**, so requests of any
+  prompt length share one live batch and a finished slot immediately pulls
+  the next queued request — no cache resets, no drain barriers.
+* **Paged KV cache** (``kv_layout="paged"``, the default — DESIGN.md §6,
+  ``serve/paging.py``): K/V live in a shared page pool addressed through
+  per-slot block tables; pages are allocated lazily as slots grow and
+  freed on completion, so resident KV memory tracks *actual* sequence
+  lengths.  Admission defers when the pool can't cover a request's
+  worst-case reservation.  ``kv_layout="dense"`` keeps the per-slot
+  ``(n_slots, S_max)`` slabs (still per-slot-indexed, so mixed lengths
+  work there too) — the layout ``generate()`` and training-eval
+  equivalence use.
 * Sampling: greedy / temperature / top-k, fp32 logits.
 """
 from __future__ import annotations
@@ -17,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
+from collections import deque
 from typing import Dict, List, Optional
 
 import jax
@@ -24,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import LanguageModel
+from repro.serve import paging
 
 __all__ = ["ServeConfig", "Engine", "Request"]
 
@@ -36,6 +46,10 @@ class ServeConfig:
     top_k: int = 0
     eos_id: int = -1                    # -1 → run to max_new_tokens
     seed: int = 0
+    # --- KV-cache layout (DESIGN.md §6) ---
+    kv_layout: str = "paged"            # paged | dense
+    page_size: int = 16                 # tokens per KV page
+    n_pages: int = 0                    # 0 → auto: dense capacity + null page
 
 
 @dataclasses.dataclass
@@ -72,6 +86,8 @@ class Engine:
             lambda p, b: self.model.prefill(p, b, self.cfg.max_seq),
             static_argnums=())
         self._key = jax.random.PRNGKey(serve_cfg.seed)
+        # paging observability from the most recent serve() call
+        self.paging_stats: Optional[Dict] = None
         # Sparse (RgCSR) weights: pre-stage kernel plan containers at model
         # load for eager per-layer paths (DESIGN.md §3.2).  The jit'd
         # prefill/decode below assemble their plans at trace time, so the
@@ -253,91 +269,91 @@ class Engine:
 
     # ------------------------------------------------- continuous batching
     def serve(self, requests: List[Request]) -> List[Request]:
-        """Slot-based continuous batching over a request queue.
+        """Continuous mixed-length batching over a request queue.
 
-        Simplification vs a full server: slots share one jit'd decode over
-        the fixed batch; prefill is per-request (batch 1) and its cache is
-        spliced into the slot dimension.  Finished slots immediately pull
-        the next request — no head-of-line blocking on long generations.
+        Slots share one jit'd decode over the fixed batch; prefill is
+        per-request (batch 1) and its cache is committed into the slot —
+        page-pool scatter for paged layers, slot-axis splice for rings /
+        recurrent state / dense mode (``serve/paging.commit_prefill``).
+        Finished slots immediately pull the next queued request — no
+        head-of-line blocking on long generations, no drain barriers, no
+        cache resets.
 
-        Constraints/semantics:
+        Semantics:
 
-        * the shared KV-cache position index means every request slotted
-          into one live batch must have the **same prompt length** — a
-          mismatch raises ``ValueError`` (the cache is reset whenever the
-          batch fully drains, so consecutive *generations* may differ).
-          The guard covers length mismatches only: a same-length request
-          refilled into a partially-decoded batch still inherits the
-          advanced shared index (zero-KV positions between its prompt and
-          the write head) — the pre-existing trade-off of scalar-index
-          splicing, tracked as the per-slot-index ROADMAP item;
+        * prompt lengths may differ freely within one live batch: the
+          per-slot position index keeps each slot's attention offsets
+          independent, so a request admitted into a half-decoded batch
+          neither inherits the batch's write head (the old stale-offset
+          drift) nor disturbs the other slots;
+        * paged layout: admission reserves the request's worst-case page
+          count (``ceil((len + max_new - 1) / page_size)``) — when the
+          pool can't cover it, admission **defers** (FIFO — later requests
+          wait too) until a completion frees pages.  Decode-boundary page
+          allocations always succeed under that reservation invariant;
         * a request whose first (prefill-sampled) token is EOS, or whose
           ``max_new_tokens <= 1``, completes immediately without spending
-          decode steps or a slot;
+          decode steps, a slot, or pages;
         * per-request timing lands in ``queue_s`` / ``prefill_s`` /
           ``latency_s`` (see :class:`Request`) — ``latency_s`` is measured
-          from the request's own processing start, not the serve() call.
+          from the request's own processing start, not the serve() call;
+        * paging observability lands in ``self.paging_stats`` (pages in
+          use / high-water, fragmentation, deferrals) after every call.
         """
-        n = self.cfg.n_slots
-        queue = list(requests)
+        cfg = self.cfg
+        n = cfg.n_slots
+        paged = cfg.kv_layout == "paged"
+        geom = alloc = None
+        if paged:
+            geom = paging.geometry(cfg.max_seq, cfg.page_size, n,
+                                   cfg.n_pages)
+            alloc = paging.PageAllocator(geom, n)
+        caches = self.model.init_cache(n, cfg.max_seq, paging=geom)
+        queue = deque(requests)
         active: List[Optional[Request]] = [None] * n
         remaining = [0] * n
+        pos = [0] * n                       # tokens resident per slot
         slot_t0 = [0.0] * n                 # processing start per slot
-        caches = None
-        batch_prompt_len: Optional[int] = None
         cur_tok = jnp.zeros((n, 1), jnp.int32)
         t_start = time.time()
-
-        def _batch_axis(path, leaf):
-            """Slot/batch axis: 1 for body (layer-stacked) leaves, 0 else;
-            None for scalars (e.g. cache['index'])."""
-            if leaf.ndim == 0:
-                return None
-            keys = [str(getattr(k, "key", getattr(k, "idx", k)))
-                    for k in path]
-            if "body" in keys:
-                return 1 if leaf.ndim > 1 else None
-            return 0
-
-        def splice(caches, slot_cache, slot):
-            flat_one, treedef = jax.tree_util.tree_flatten_with_path(
-                slot_cache)
-            if caches is None:
-                leaves = []
-                for path, leaf in flat_one:
-                    ax = _batch_axis(path, leaf)
-                    leaves.append(jnp.repeat(leaf, n, axis=ax)
-                                  if ax is not None else leaf)
-                return jax.tree_util.tree_unflatten(treedef, leaves)
-            flat_full = treedef.flatten_up_to(caches)
-            leaves = []
-            for (path, one), full in zip(flat_one, flat_full):
-                ax = _batch_axis(path, one)
-                if ax is None:
-                    leaves.append(full)
-                else:
-                    leaves.append(jax.lax.dynamic_update_slice_in_dim(
-                        full, one.astype(full.dtype), slot, axis=ax))
-            return jax.tree_util.tree_unflatten(treedef, leaves)
+        stats = {"decode_steps": 0, "admission_deferrals": 0,
+                 "peak_live_tokens": 0, "frag_at_high_water": 0.0,
+                 "requests": len(requests)}
 
         while queue or any(a is not None for a in active):
             # fill free slots; a request finishing at prefill (EOS as its
             # first token, or a 1-token budget) completes without ever
             # occupying the slot, so the next queued request slots in
+            deferred = False
             for slot in range(n):
-                while active[slot] is None and queue:
-                    req = queue.pop(0)
-                    if (batch_prompt_len is not None
-                            and len(req.tokens) != batch_prompt_len):
+                while active[slot] is None and queue and not deferred:
+                    req = queue[0]
+                    length = len(req.tokens)
+                    # max resident tokens: the last decode step has written
+                    # length + max_new - 1 of them (the final sampled token
+                    # never enters the cache)
+                    max_resident = length + max(req.max_new_tokens, 1) - 1
+                    if max_resident > cfg.max_seq:
                         raise ValueError(
-                            f"mixed-length prompts in one continuous batch "
-                            f"are unsupported: the KV-cache position index "
-                            f"is shared across slots, so splicing a "
-                            f"{len(req.tokens)}-token prompt into a batch "
-                            f"established with {batch_prompt_len}-token "
-                            f"prompts would corrupt attention offsets for "
-                            f"every active slot.  Pad prompts to a common "
-                            f"length or serve them in separate batches.")
+                            f"request needs {max_resident} cache positions "
+                            f"(prompt {length} + max_new_tokens "
+                            f"{req.max_new_tokens} - 1) but max_seq is "
+                            f"{cfg.max_seq}")
+                    worst = 0
+                    if paged:
+                        worst = alloc.pages_for(max_resident)
+                        if worst > alloc.usable:
+                            raise ValueError(
+                                f"request needs up to {worst} pages but the "
+                                f"pool has {alloc.usable}: raise n_pages or "
+                                f"lower max_new_tokens")
+                        if not alloc.can_admit(worst):
+                            # FIFO: don't let shorter later requests starve
+                            # the head — stop admitting until pages free
+                            stats["admission_deferrals"] += 1
+                            deferred = True
+                            break
+                    queue.popleft()
                     t0 = time.time()
                     req.queue_s = t0 - t_start
                     logits, slot_cache = self._prefill(
@@ -347,19 +363,44 @@ class Engine:
                     first = int(self._sample(logits)[0])
                     req.out = [first]
                     req.prefill_s = time.time() - t0
-                    if first == self.cfg.eos_id or req.max_new_tokens <= 1:
+                    if first == cfg.eos_id or req.max_new_tokens <= 1:
                         req.done = True
                         req.latency_s = time.time() - t0
                         continue
-                    caches = splice(caches, slot_cache, slot)
-                    batch_prompt_len = len(req.tokens)
+                    if paged:
+                        alloc.admit(slot, length, worst)
+                        caches = paging.commit_prefill(
+                            caches, slot_cache, slot, length, alloc.table,
+                            geom.page_size)
+                    else:
+                        caches = paging.commit_prefill(
+                            caches, slot_cache, slot, length)
                     slot_t0[slot] = t0
                     active[slot] = req
                     remaining[slot] = req.max_new_tokens - 1
+                    pos[slot] = length
                     cur_tok = cur_tok.at[slot, 0].set(first)
             if all(a is None for a in active):
                 break        # queue is empty too (the fill loop drained it)
+            if paged:
+                # this decode step writes each active slot's token at
+                # position pos[slot] — allocate boundary pages up front
+                # (always succeeds: reservations bound physical use)
+                changed = False
+                for slot in range(n):
+                    if active[slot] is not None:
+                        changed |= alloc.ensure(slot, pos[slot] + 1)
+                if changed:
+                    caches = paging.sync_block_tables(caches, alloc.table)
+                live = sum(pos[s] + 1 for s in range(n)
+                           if active[s] is not None)
+                stats["peak_live_tokens"] = max(stats["peak_live_tokens"],
+                                                live)
+                if alloc.pages_in_use >= alloc.high_water:
+                    stats["frag_at_high_water"] = 1.0 - live / max(
+                        alloc.pages_in_use * geom.page_size, 1)
             logits, caches = self._decode(self.params, caches, cur_tok)
+            stats["decode_steps"] += 1
             nxt = self._sample(logits)
             cur_tok = nxt[:, None]
             for slot in range(n):
@@ -368,14 +409,22 @@ class Engine:
                     continue
                 tok = int(nxt[slot])
                 req.out.append(tok)
+                pos[slot] += 1
                 remaining[slot] -= 1
-                if remaining[slot] <= 0 or tok == self.cfg.eos_id:
+                if remaining[slot] <= 0 or tok == cfg.eos_id:
                     req.done = True
                     req.latency_s = time.time() - slot_t0[slot]
                     active[slot] = None
-            if all(a is None for a in active) and queue:
-                # batch fully drained with work left: drop the stale caches
-                # so the next generation re-establishes its prompt length
-                caches = None
-                batch_prompt_len = None
+                    if paged:
+                        alloc.release(slot)
+        if paged:
+            stats.update(alloc.stats())
+            stats["kv_layout"] = "paged"
+            # dense-equivalent residency: what (n_slots, S_max) slabs pin
+            stats["dense_equiv_tokens"] = n * cfg.max_seq
+            stats["paged_peak_tokens"] = stats["page_high_water"] \
+                * geom.page_size
+        else:
+            stats["kv_layout"] = "dense"
+        self.paging_stats = stats
         return requests

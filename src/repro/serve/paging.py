@@ -1,0 +1,233 @@
+"""Paged KV-cache subsystem: page pool allocator + cache commit/sync ops.
+
+The serving-side analogue of the paper's row-grouping (DESIGN.md §6):
+fixed-size pages trade bounded per-slot padding (at most ``page_size - 1``
+dead token slots per request, inside its last page) for perfectly regular
+addressing, exactly as RgCSR's uniform groups trade per-group padding for
+regular strides — and, following the adaptive-format follow-up
+(arXiv:1203.5737), residency is sized to *actual* sequence lengths instead
+of the worst case: a slot holding a 37-token request owns
+``ceil(37 / page_size)`` pages, not ``S_max`` rows.
+
+Split of responsibilities:
+
+* **Device side** (``models/attention.py``): each attention layer's cache is
+  a shared page pool ``(n_pages, page_size, ...)`` plus per-slot
+  ``block_table`` / ``index`` vectors; ``attend()`` gathers K/V through the
+  block table and masks per slot, so slots at different positions decode in
+  one batch.
+* **Host side** (this module): :class:`PageAllocator` owns the free list
+  and the authoritative block table.  Pages are allocated lazily — prompt
+  pages at prefill-commit, one page at a time as decode crosses page
+  boundaries — while **admission control** reserves each request's
+  worst-case page count up front, so mid-decode allocation can never fail
+  and no preemption machinery is needed.  Page 0 is reserved as the null
+  page: free slots' table rows point at it, so their (ignored) decode
+  writes land there instead of corrupting reallocated pages.
+
+``commit_prefill`` bridges the two: prefill runs on an ordinary dense
+batch-1 cache (the prompt-length-specialized jit the engine already has),
+then its K/V slab is scattered into the slot's pages — ring buffers,
+recurrent state, and dense-mode caches are spliced at the slot axis by the
+same call, so the engine is layout-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import PageGeometry
+
+__all__ = ["PageGeometry", "PageAllocator", "geometry", "commit_prefill",
+           "sync_block_tables"]
+
+# cache keys that live in page pools (everything else is per-slot dense)
+_POOL_KEYS = ("k", "v", "k_scale", "v_scale", "ckv", "krope")
+
+
+def geometry(max_seq: int, page_size: int, n_slots: int,
+             n_pages: int = 0) -> PageGeometry:
+    """Resolve a :class:`PageGeometry`.  ``n_pages=0`` auto-sizes the pool
+    to dense capacity (every slot can reach ``max_seq``) plus the null
+    page — admission then never defers; smaller pools trade deferrals for
+    memory."""
+    pages_per_slot = -(-max_seq // page_size)
+    if n_pages <= 0:
+        n_pages = 1 + n_slots * pages_per_slot
+    return PageGeometry(n_pages=n_pages, page_size=page_size,
+                        pages_per_slot=pages_per_slot)
+
+
+class PageAllocator:
+    """Host-side page bookkeeping for one serve() run.
+
+    Invariant: ``sum(reserved) <= usable_pages`` (admission control) and
+    every slot's physical pages never exceed its reservation — so
+    :meth:`ensure` can always pop a free page and decode never stalls.
+    """
+
+    def __init__(self, geom: PageGeometry, n_slots: int):
+        self.geom = geom
+        self.n_slots = n_slots
+        # LIFO free list over pages 1..n_pages-1 (page 0 = null page);
+        # popping the lowest id first keeps allocation deterministic
+        self.free: List[int] = list(range(geom.n_pages - 1, 0, -1))
+        self.table = np.zeros((n_slots, geom.pages_per_slot), np.int32)
+        self.slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+        self.reserved = [0] * n_slots
+        self.high_water = 0
+
+    # ------------------------------------------------------------- queries
+    @property
+    def usable(self) -> int:
+        return self.geom.usable_pages
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(p) for p in self.slot_pages)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return self.geom.pages_for(n_tokens)
+
+    def can_admit(self, worst_pages: int) -> bool:
+        return sum(self.reserved) + worst_pages <= self.usable
+
+    # ------------------------------------------------------------- updates
+    def admit(self, slot: int, n_tokens: int, worst_pages: int) -> bool:
+        """Reserve ``worst_pages`` for the slot and allocate the prompt's
+        pages.  Returns False (nothing changed) when the pool can't cover
+        the reservation — the caller defers the request."""
+        if not self.can_admit(worst_pages):
+            return False
+        self.reserved[slot] = worst_pages
+        self.ensure(slot, n_tokens)
+        return True
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow the slot's pages to cover ``n_tokens``; True if the block
+        table changed (the engine then re-syncs device tables)."""
+        need = self.pages_for(n_tokens)
+        assert need <= self.reserved[slot], \
+            f"slot {slot} grew past its admission reservation"
+        changed = False
+        pages = self.slot_pages[slot]
+        while len(pages) < need:
+            page = self.free.pop()
+            self.table[slot, len(pages)] = page
+            pages.append(page)
+            changed = True
+        if self.pages_in_use > self.high_water:
+            self.high_water = self.pages_in_use
+        return changed
+
+    def release(self, slot: int) -> None:
+        """Free the slot on completion/eviction: pages return to the pool,
+        the table row points back at the null page, the reservation lifts.
+        The *cache contents* are untouched — slot reuse needs no reset."""
+        self.free.extend(reversed(self.slot_pages[slot]))
+        self.slot_pages[slot] = []
+        self.table[slot] = 0
+        self.reserved[slot] = 0
+
+    def stats(self) -> dict:
+        return {
+            "n_pages": self.geom.n_pages,
+            "page_size": self.geom.page_size,
+            "usable_pages": self.usable,
+            "pages_in_use": self.pages_in_use,
+            "page_high_water": self.high_water,
+            "reserved_pages": sum(self.reserved),
+        }
+
+
+# ---------------------------------------------------------------------------
+# cache tree ops (host-driven, eager — run once per admission / table change)
+# ---------------------------------------------------------------------------
+
+
+def _splice(full, one, slot: int, stacked: bool):
+    """Write the batch-1 leaf into the full cache at the slot axis
+    (axis 1 under the body stack's leading (layers,) dim)."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        full, one.astype(full.dtype), slot, axis=1 if stacked else 0)
+
+
+def _commit_entry(full, one, slot: int, length: int, table_dev,
+                  page_ids, offs, stacked: bool):
+    if isinstance(full, dict) and "self" in full:   # dec_attn: nested self
+        out = dict(full)
+        out["self"] = _commit_entry(full["self"], one["self"], slot, length,
+                                    table_dev, page_ids, offs, stacked)
+        for key in ("ck", "cv"):
+            if key in full:
+                out[key] = _splice(full[key], one[key], slot, stacked)
+        return out
+    if isinstance(full, dict) and "block_table" in full:
+        # paged entry: scatter the dense prefill slab (1, S_max, ...) into
+        # the slot's pages — token t -> (table[slot, t // ps], t % ps)
+        out = dict(full)
+        for key in _POOL_KEYS:
+            if key not in full:
+                continue
+            pool, slab = full[key], one[key]
+            if stacked:
+                tok = slab[:, 0, :length].astype(pool.dtype)
+                out[key] = pool.at[:, page_ids, offs].set(tok)
+            else:
+                tok = slab[0, :length].astype(pool.dtype)
+                out[key] = pool.at[page_ids, offs].set(tok)
+        if stacked:
+            out["index"] = full["index"].at[:, slot].set(length)
+            out["block_table"] = jnp.broadcast_to(
+                table_dev, full["block_table"].shape)
+        else:
+            out["index"] = full["index"].at[slot].set(length)
+            out["block_table"] = table_dev
+        return out
+    # dense slab / ring / recurrent state: per-slot splice of every leaf
+    # (the prefill cache's index leaf carries the prompt length)
+    return jax.tree_util.tree_map(
+        lambda f, o: _splice(f, o, slot, stacked), full, one)
+
+
+def commit_prefill(caches, slot_cache, slot: int, length: int,
+                   table: Optional[np.ndarray] = None,
+                   page_size: Optional[int] = None):
+    """Install a batch-1 prefill cache into slot ``slot`` of the live
+    decode caches.  Paged entries scatter into pages via ``table`` (the
+    allocator's authoritative block table); everything else splices at the
+    slot axis.  In dense mode pass ``table=None`` — no paged entries exist
+    and the arguments are unused."""
+    if table is not None:
+        pos = np.arange(length)
+        row = np.asarray(table)[slot]
+        page_ids = jnp.asarray(row[pos // page_size], jnp.int32)
+        offs = jnp.asarray(pos % page_size, jnp.int32)
+        table_dev = jnp.asarray(table, jnp.int32)
+    else:
+        page_ids = offs = table_dev = None
+    new = {}
+    for part, stacked in (("prefix", False), ("body", True)):
+        new[part] = {
+            name: _commit_entry(full, slot_cache[part][name], slot, length,
+                                table_dev, page_ids, offs, stacked)
+            for name, full in caches[part].items()}
+    return new
+
+
+def sync_block_tables(caches, table: np.ndarray):
+    """Push the allocator's host block table into every layer's
+    ``block_table`` leaf (decode-boundary page allocations, slot frees)."""
+    t = jnp.asarray(table, jnp.int32)
+
+    def fix(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        if keys and keys[-1] == "block_table":
+            return jnp.broadcast_to(t, leaf.shape)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, caches)

@@ -266,7 +266,7 @@ class Partitioner:
     def _cache_leaf_spec(self, name, leaf, stacked: bool) -> PartitionSpec:
         nd = leaf.ndim - (1 if stacked else 0)
         prefix = [None] if stacked else []
-        if name == "index" or nd == 0:
+        if name in ("index", "block_table") or nd == 0:
             return PartitionSpec(*([None] * leaf.ndim))
         used: set = set()
 

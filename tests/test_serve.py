@@ -110,18 +110,23 @@ def test_serve_single_token_budget(engine):
     assert req.done and len(req.out) == 1
 
 
-def test_serve_rejects_mixed_length_prompts(engine):
+def test_serve_accepts_mixed_length_prompts(engine):
+    """Mixed-length prompts share one live batch (PR 5: the per-slot KV
+    position index replaced the scalar that used to force a ValueError)."""
     rng = np.random.default_rng(9)
     reqs = [Request(tokens=rng.integers(0, engine.model.cfg.vocab,
                                         (ln,)).astype(np.int32),
                     max_new_tokens=4) for ln in (10, 12)]
-    with pytest.raises(ValueError, match="mixed-length"):
-        engine.serve(reqs)                         # n_slots=2: concurrent
+    done = engine.serve(reqs)                      # n_slots=2: concurrent
+    assert all(r.done and len(r.out) == 4 for r in done)
+    for r in done:
+        g = engine.generate(r.tokens[None, :], max_new_tokens=4)[0]
+        assert list(g) == r.out                    # token-for-token oracle
 
 
-def test_serve_mixed_lengths_ok_across_drained_batches(engine):
-    """With one slot the batch drains between requests, so different
-    prompt lengths are fine (the cache is re-established per request)."""
+def test_serve_mixed_lengths_single_slot(engine):
+    """Sequential slot reuse across different prompt lengths — no cache
+    reset between generations (per-slot index, paged pages recycled)."""
     eng = Engine(engine.model.cfg, ServeConfig(max_seq=96, n_slots=1))
     eng.params = engine.params
     rng = np.random.default_rng(10)
