@@ -20,6 +20,14 @@ gate (``check_bench_regression.py --serve-baseline/--serve-new``) bounds
 them exactly — pages-per-token and the high-water mark may never grow —
 while wall-clock timings are informational only, so the gate cannot flake
 on a loaded runner (the PR 3 determinism lesson).
+
+The **overload** mix (DESIGN.md §6.4) drives a pool sized below the
+queue's aggregate worst case through the default prompt-pages admission
+policy, with one oversized request mixed in: every healthy request must
+complete via recompute preemption (token streams still deterministic) and
+the oversized one must be rejected per-request.  Its ``preemptions``,
+``recompute_tokens``, and ``rejected`` counts are deterministic allocator
+properties and CI-gated never-grow, like the page metrics.
 """
 from __future__ import annotations
 
@@ -77,6 +85,9 @@ def bench_mix(eng, cfg, name, lengths, max_new) -> Dict:
         "queue_s_max": round(max(r.queue_s for r in reqs), 4),
         "decode_steps": st["decode_steps"],
     }
+    # layout-agnostic since the overload PR: the dense layout used to
+    # report 0 here, breaking the paged-vs-dense residency comparison
+    row["peak_live_tokens"] = st["peak_live_tokens"]
     if st["kv_layout"] == "paged":
         peak_live = max(st["peak_live_tokens"], 1)
         row.update({
@@ -85,12 +96,74 @@ def bench_mix(eng, cfg, name, lengths, max_new) -> Dict:
             "page_high_water": st["page_high_water"],
             "paged_peak_tokens": st["paged_peak_tokens"],
             "dense_equiv_tokens": st["dense_equiv_tokens"],
-            "peak_live_tokens": st["peak_live_tokens"],
             "pages_per_token": round(st["paged_peak_tokens"] / peak_live, 4),
             "frag_at_high_water": round(st["frag_at_high_water"], 4),
             "admission_deferrals": st["admission_deferrals"],
         })
     return row
+
+
+# overload mix geometry (DESIGN.md §6.4): 3 slots but only 4 usable pages
+# of 8 tokens — each healthy request (8-token prompt, 5 new tokens) worst-
+# cases to 2 pages, so three concurrent requests exceed the pool and the
+# prompt-pages policy must preempt; the oversized request worst-cases to
+# 5 pages > the whole pool and must be rejected per-request.
+OVERLOAD = dict(n_slots=3, page_size=8, n_pages=5, n_requests=10,
+                prompt_len=8, max_new=5, oversized_len=16, oversized_new=20)
+
+
+def bench_overload(cfg) -> Dict:
+    from repro.serve import Engine, Request, ServeConfig
+    ov = OVERLOAD
+    eng = Engine(cfg, ServeConfig(
+        max_seq=MAX_SEQ, n_slots=ov["n_slots"], page_size=ov["page_size"],
+        n_pages=ov["n_pages"], temperature=0.0, eos_id=-1,
+        admission_policy="prompt"))
+    rng = np.random.default_rng(1)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, (ov["prompt_len"],)
+                                        ).astype(np.int32),
+                    max_new_tokens=ov["max_new"])
+            for _ in range(ov["n_requests"])]
+    # oversized request right behind the head: rejected at admission while
+    # everyone else keeps serving
+    reqs.insert(1, Request(tokens=rng.integers(
+        0, cfg.vocab, (ov["oversized_len"],)).astype(np.int32),
+        max_new_tokens=ov["oversized_new"]))
+    t0 = time.time()
+    eng.serve(reqs)
+    wall_s = time.time() - t0
+    assert all(r.done for r in reqs), "overload: unfinished requests"
+    healthy = [r for r in reqs if r.status != "rejected"]
+    assert len(healthy) == ov["n_requests"]
+    assert all(r.ok_like and len(r.out) == ov["max_new"] for r in healthy), \
+        "overload: healthy request did not complete"
+    st = dict(eng.paging_stats)
+    assert st["preemptions"] > 0, "overload mix exercised no preemption"
+    assert st["rejected"] == 1
+    peak_live = max(st["peak_live_tokens"], 1)
+    return {
+        **{k: ov[k] for k in ("n_slots", "page_size", "n_pages",
+                              "prompt_len", "max_new")},
+        "n_requests": len(reqs),
+        "total_tokens": int(sum(len(r.out) for r in reqs)),
+        "wall_s": round(wall_s, 4),                     # informational
+        "decode_steps": st["decode_steps"],
+        # deterministic overload counters (gated never-grow in CI)
+        "preemptions": st["preemptions"],
+        "recompute_tokens": st["recompute_tokens"],
+        "rejected": st["rejected"],
+        "failed": st["failed"],
+        "timed_out": st["timed_out"],
+        "completed": st["completed"],
+        "pages_evicted": st["pages_evicted"],
+        "admission_deferrals": st["admission_deferrals"],
+        # page metrics, same shape as the standard mixes
+        "page_high_water": st["page_high_water"],
+        "paged_peak_tokens": st["paged_peak_tokens"],
+        "dense_equiv_tokens": st["dense_equiv_tokens"],
+        "peak_live_tokens": st["peak_live_tokens"],
+        "pages_per_token": round(st["paged_peak_tokens"] / peak_live, 4),
+    }
 
 
 def main(argv=None) -> int:
@@ -115,11 +188,22 @@ def main(argv=None) -> int:
         paged = bench_mix(eng_paged, cfg, name, lengths, max_new)
         dense = bench_mix(eng_dense, cfg, name, lengths, max_new)
         assert paged["total_tokens"] == dense["total_tokens"]
+        # apples-to-apples residency: both layouts must see the same live-
+        # token peak (dense used to report 0 — satellite fix)
+        assert paged["peak_live_tokens"] == dense["peak_live_tokens"] > 0
         mixes[name] = {"paged": paged, "dense": dense}
         print(f"{name}: paged peak {paged['paged_peak_tokens']} tokens "
               f"(dense pins {paged['dense_equiv_tokens']}), "
               f"pages/token {paged['pages_per_token']:.3f}, "
               f"{paged['admission_deferrals']} deferrals")
+
+    overload = bench_overload(cfg)
+    mixes["overload"] = {"paged": overload}
+    print(f"overload: {overload['preemptions']} preemptions "
+          f"({overload['recompute_tokens']} recompute tokens), "
+          f"{overload['rejected']} rejected, "
+          f"{overload['completed']} completed on "
+          f"{overload['n_pages']} pages")
 
     peaks = [m["paged"]["paged_peak_tokens"] for m in mixes.values()]
     dense_equiv = N_SLOTS * MAX_SEQ

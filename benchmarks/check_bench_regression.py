@@ -38,8 +38,13 @@ bounds the paged KV-cache metrics, which are deterministic allocation
 properties of the fixed request mixes (greedy, no EOS): per mix, the page
 high-water mark and ``pages_per_token`` may **never grow**, and paged peak
 residency must stay ≤ the dense ``(n_slots, S_max)`` equivalent (strictly
-below it on the mixed-length mix).  Serve wall-clock timings are recorded
-but never gated — they are the only machine-speed-dependent fields.
+below it on the mixed-length mix).  The overload mix's preemption counters
+(``preemptions``, ``recompute_tokens``, ``rejected``) are likewise
+deterministic allocator properties and may never grow — a regression in
+the §6.4 recompute-preemption path (more evictions, more recomputed
+tokens, spurious rejections) fails exactly.  Serve wall-clock timings are
+recorded but never gated — they are the only machine-speed-dependent
+fields.
 """
 from __future__ import annotations
 
@@ -177,7 +182,11 @@ def compare_serve(baseline: dict, new: dict):
         base = baseline.get("mixes", {}).get(name, {}).get("paged")
         if base is None:
             continue
-        for key in ("page_high_water", "pages_per_token"):
+        # page metrics everywhere; overload adds the §6.4 preemption
+        # counters (both sides must carry a key for it to gate, so older
+        # baselines without the overload mix cannot flip this)
+        for key in ("page_high_water", "pages_per_token",
+                    "preemptions", "recompute_tokens", "rejected"):
             old_v, new_v = base.get(key), paged.get(key)
             if old_v is not None and new_v is not None and new_v > old_v:
                 failures.append(

@@ -3,9 +3,17 @@
 Usage:
   python -m repro.launch.serve --arch granite-3-2b --smoke --requests 8 \
       --kv-layout paged --page-size 16 --mixed-lengths
+
+Overload drills (DESIGN.md §6.4): shrink the pool below aggregate worst
+case with --n-pages and the default prompt-pages admission policy serves
+the queue via recompute preemption; --admission-policy worst_case restores
+FIFO deferral; --deadline-s puts a completion deadline on every request;
+--strict restores fail-stop serving (oversized requests raise).  The
+overload report prints per-status counts and the preemption counters.
 """
 import argparse
 import time
+from collections import Counter
 
 import numpy as np
 
@@ -22,18 +30,38 @@ def main(argv=None):
                     default="paged")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=0,
-                    help="page-pool size; 0 = dense capacity + null page")
+                    help="page-pool size; 0 = dense capacity + null page "
+                         "(size below worst case to exercise preemption)")
     ap.add_argument("--mixed-lengths", action="store_true",
                     help="cycle prompt lengths instead of a uniform 16")
+    ap.add_argument("--admission-policy", choices=("prompt", "worst_case"),
+                    default="prompt",
+                    help="prompt: admit on resident pages, preempt on "
+                         "exhaustion; worst_case: reserve the worst case "
+                         "and defer admissions (PR 5 behavior)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request completion deadline in seconds from "
+                         "serve() entry; 0 = none")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail-stop: oversized requests / mid-request "
+                         "faults raise out of serve() instead of failing "
+                         "only that request")
+    ap.add_argument("--straggler-factor", type=float, default=2.0,
+                    help="watchdog: flag decode steps slower than this "
+                         "factor times the EWMA step time")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, get_smoke
     from repro.serve import Engine, Request, ServeConfig
+    from repro.train.fault import FaultConfig
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     eng = Engine(cfg, ServeConfig(
         max_seq=args.max_seq, n_slots=args.slots, kv_layout=args.kv_layout,
-        page_size=args.page_size, n_pages=args.n_pages))
+        page_size=args.page_size, n_pages=args.n_pages,
+        admission_policy=args.admission_policy, strict=args.strict,
+        deadline_s=args.deadline_s),
+        fault_cfg=FaultConfig(straggler_factor=args.straggler_factor))
     rng = np.random.default_rng(0)
     lengths = [16] * args.requests
     if args.mixed_lengths:
@@ -49,6 +77,8 @@ def main(argv=None):
     total = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests / {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s); all done: {all(r.done for r in done)}")
+    by_status = Counter(r.status for r in done)
+    print("request status:", dict(sorted(by_status.items())))
     ps = eng.paging_stats
     if ps and ps.get("kv_layout") == "paged":
         print(f"paging: high-water {ps['page_high_water']} pages "
@@ -56,6 +86,13 @@ def main(argv=None):
               f"{ps['dense_equiv_tokens']}), fragmentation at peak "
               f"{ps['frag_at_high_water']:.3f}, "
               f"{ps['admission_deferrals']} admission deferrals")
+        print(f"overload: policy {ps['admission_policy']}, "
+              f"{ps['preemptions']} preemptions "
+              f"({ps['recompute_tokens']} recompute tokens, "
+              f"{ps['pages_evicted']} pages evicted), "
+              f"{ps['rejected']} rejected, {ps['failed']} failed, "
+              f"{ps['timed_out']} timed out, "
+              f"{ps['straggler_decode_steps']} straggler decode steps")
 
 
 if __name__ == "__main__":

@@ -2,4 +2,5 @@
 batching over a paged KV cache (DESIGN.md §6)."""
 from repro.serve import paging  # noqa: F401
 from repro.serve.engine import Engine, Request, ServeConfig  # noqa: F401
-from repro.serve.paging import PageAllocator, PageGeometry  # noqa: F401
+from repro.serve.paging import (  # noqa: F401
+    PageAllocator, PageGeometry, PoolExhausted)

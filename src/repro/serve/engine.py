@@ -13,11 +13,18 @@ Production structure on the latency path:
   ``serve/paging.py``): K/V live in a shared page pool addressed through
   per-slot block tables; pages are allocated lazily as slots grow and
   freed on completion, so resident KV memory tracks *actual* sequence
-  lengths.  Admission defers when the pool can't cover a request's
-  worst-case reservation.  ``kv_layout="dense"`` keeps the per-slot
-  ``(n_slots, S_max)`` slabs (still per-slot-indexed, so mixed lengths
-  work there too) — the layout ``generate()`` and training-eval
-  equivalence use.
+  lengths.  ``kv_layout="dense"`` keeps the per-slot ``(n_slots, S_max)``
+  slabs (still per-slot-indexed, so mixed lengths work there too) — the
+  layout ``generate()`` and training-eval equivalence use.
+* **Graceful overload** (DESIGN.md §6.4): admission reserves prompt pages
+  only (``admission_policy="prompt"``) and decode-boundary pool
+  exhaustion **recompute-preempts** the latest-admitted slot instead of
+  blocking; oversized requests are rejected per-request, mid-request
+  faults fail only the affected request, and per-request deadlines shed
+  expired work — each terminal outcome lands in ``Request.status``
+  (``worst_case`` admission + ``strict=True`` restore the PR 5
+  defer/fail-stop behavior).  A ``train/fault.py`` Watchdog flags
+  straggler decode steps into ``paging_stats``.
 * Sampling: greedy / temperature / top-k, fp32 logits.
 """
 from __future__ import annotations
@@ -50,32 +57,86 @@ class ServeConfig:
     kv_layout: str = "paged"            # paged | dense
     page_size: int = 16                 # tokens per KV page
     n_pages: int = 0                    # 0 → auto: dense capacity + null page
+    # --- overload behavior (DESIGN.md §6.4) ---
+    # prompt     → admit on the resident tokens' pages only and
+    #              recompute-preempt a victim at decode-boundary exhaustion
+    # worst_case → reserve each request's worst case at admission and
+    #              defer admissions when the pool can't cover it (PR 5)
+    admission_policy: str = "prompt"
+    # strict=True restores fail-stop serving: oversized requests and
+    # mid-request exceptions raise out of serve() (the pre-overload-layer
+    # behavior) instead of failing only the affected request.
+    strict: bool = False
+    # default completion deadline (seconds from serve() entry) applied to
+    # requests that don't carry their own ``deadline_s``; 0 → no deadline.
+    deadline_s: float = 0.0
 
 
 @dataclasses.dataclass
 class Request:
-    """One serving request.  Timing fields (all seconds, set by ``serve``):
+    """One serving request.
+
+    Terminal state (set by ``serve``): ``done`` flips True exactly once,
+    and ``status`` says how the request ended —
+
+    * ``"ok"``            — completed normally;
+    * ``"preempted_<n>"`` — completed normally after ``n`` recompute
+      preemptions (still a success — ``ok_like`` covers both);
+    * ``"rejected"``      — refused at admission (budget overflows
+      ``max_seq``, or its worst-case page count exceeds the whole pool);
+    * ``"failed"``        — a mid-request exception (prefill/decode fault)
+      killed this request; the rest of the batch kept serving;
+    * ``"timed_out"``     — its ``deadline_s`` passed (queued or
+      mid-decode); partial output is kept in ``out``.
+
+    ``error`` carries the reason for the three failure statuses.
+    ``deadline_s`` is a completion deadline in seconds measured from the
+    ``serve()`` call's entry (it bounds queue wait + processing; ``None``
+    falls back to ``ServeConfig.deadline_s``).
+
+    Timing fields (all seconds, set by ``serve``):
 
     * ``queue_s``   — time from ``serve()`` entry until this request was
-      slotted (head-of-line wait).
-    * ``prefill_s`` — its own prefill forward duration.
+      first slotted (head-of-line wait).
+    * ``prefill_s`` — its own (first) prefill forward duration.
     * ``latency_s`` — end-to-end latency measured from *this request's own
-      processing start* (slotting) to its completion — NOT from the start
-      of the whole serve call, which would bill earlier requests' work to
-      late-slotted ones.
+      processing start* (first slotting) to its completion — NOT from the
+      start of the whole serve call, which would bill earlier requests'
+      work to late-slotted ones.
     """
     tokens: np.ndarray                  # (prompt_len,) int32
     max_new_tokens: int = 32
     out: Optional[List[int]] = None
     done: bool = False
+    deadline_s: Optional[float] = None
+    status: str = "ok"
+    error: Optional[str] = None
+    preemptions: int = 0
     latency_s: float = 0.0
     queue_s: float = 0.0
     prefill_s: float = 0.0
 
+    @property
+    def ok_like(self) -> bool:
+        """Completed with full output (possibly after preemptions)."""
+        return self.done and (self.status == "ok"
+                              or self.status.startswith("preempted"))
+
 
 class Engine:
-    def __init__(self, model_cfg, serve_cfg: ServeConfig, params=None):
+    def __init__(self, model_cfg, serve_cfg: ServeConfig, params=None,
+                 fault_cfg=None, fault_injector=None):
+        from repro.train.fault import FaultConfig
         self.cfg = serve_cfg
+        # fault/overload knobs (DESIGN.md §6.4): the watchdog config drives
+        # straggler flagging of decode steps; an engine-level injector (or
+        # one passed to serve()) exercises per-request fault isolation.
+        self.fault_cfg = fault_cfg if fault_cfg is not None else FaultConfig()
+        self.fault_injector = fault_injector
+        # injectable clock: every serve() timestamp (deadlines, latency,
+        # watchdog) flows through this, so tests drive deadlines with a
+        # fake timer instead of wall-clock sleeps.
+        self.clock = time.time
         self.model = LanguageModel(model_cfg)
         self.params = params if params is not None else \
             self.model.init(jax.random.PRNGKey(serve_cfg.seed))
@@ -268,7 +329,8 @@ class Engine:
         return np.asarray(jnp.concatenate(outs, axis=1))
 
     # ------------------------------------------------- continuous batching
-    def serve(self, requests: List[Request]) -> List[Request]:
+    def serve(self, requests: List[Request],
+              fault_injector=None) -> List[Request]:
         """Continuous mixed-length batching over a request queue.
 
         Slots share one jit'd decode over the fixed batch; prefill is
@@ -286,86 +348,212 @@ class Engine:
           independent, so a request admitted into a half-decoded batch
           neither inherits the batch's write head (the old stale-offset
           drift) nor disturbs the other slots;
-        * paged layout: admission reserves the request's worst-case page
-          count (``ceil((len + max_new - 1) / page_size)``) — when the
-          pool can't cover it, admission **defers** (FIFO — later requests
-          wait too) until a completion frees pages.  Decode-boundary page
-          allocations always succeed under that reservation invariant;
+        * paged layout, ``admission_policy="prompt"`` (default): admission
+          reserves only the pages the request's *resident* tokens need;
+          when a decode boundary then finds the pool dry, the
+          latest-admitted slot is **recompute-preempted** — its pages are
+          freed and the request re-enqueued at the queue head with its
+          generated prefix prepended, to be re-prefilled when pages free
+          (DESIGN.md §6.4).  Earlier-admitted requests always keep their
+          pages (FIFO: the earliest active slot can never be starved), so
+          pools sized below aggregate worst case make progress instead of
+          blocking.  ``admission_policy="worst_case"`` restores the PR 5
+          behavior: worst-case reservations, admission **defers** on
+          exhaustion, decode-boundary allocation never fails;
+        * per-request fault isolation (unless ``strict=True``): an
+          oversized request (budget beyond ``max_seq``, or a worst-case
+          page count larger than the whole pool) is **rejected**
+          (``status="rejected"``) instead of raising; an exception during
+          a request's prefill, or an injected per-request decode fault,
+          **fails** that request (``status="failed"``) and frees its
+          slot/pages while the rest of the batch keeps serving.  A
+          :class:`~repro.train.fault.FaultInjector` (argument, or the
+          engine's ``fault_injector``) is consulted at the per-request
+          prefill and token-commit sites;
+        * deadlines: a request whose ``deadline_s`` (or the config
+          default) elapses — measured from serve() entry, so queue wait
+          counts — is timed out at the next decode boundary (or while
+          still queued), keeping its partial ``out``;
         * a request whose first (prefill-sampled) token is EOS, or whose
           ``max_new_tokens <= 1``, completes immediately without spending
           decode steps, a slot, or pages;
         * per-request timing lands in ``queue_s`` / ``prefill_s`` /
           ``latency_s`` (see :class:`Request`) — ``latency_s`` is measured
           from the request's own processing start, not the serve() call;
-        * paging observability lands in ``self.paging_stats`` (pages in
-          use / high-water, fragmentation, deferrals) after every call.
+        * observability lands in ``self.paging_stats`` after every call:
+          pages in use / high-water, fragmentation, deferrals, preemption
+          counters (``preemptions``, ``recompute_tokens``, ``evictions``,
+          ``pages_evicted``), per-status counts (``completed`` /
+          ``rejected`` / ``failed`` / ``timed_out``), and straggler decode
+          steps flagged by a :class:`~repro.train.fault.Watchdog` over
+          ``self.fault_cfg``.
         """
+        from repro.train.fault import Watchdog
         cfg = self.cfg
         n = cfg.n_slots
         paged = cfg.kv_layout == "paged"
+        strict = cfg.strict
+        clock = self.clock
+        injector = fault_injector if fault_injector is not None \
+            else self.fault_injector
         geom = alloc = None
         if paged:
             geom = paging.geometry(cfg.max_seq, cfg.page_size, n,
                                    cfg.n_pages)
-            alloc = paging.PageAllocator(geom, n)
+            alloc = paging.PageAllocator(geom, n,
+                                         policy=cfg.admission_policy)
         caches = self.model.init_cache(n, cfg.max_seq, paging=geom)
         queue = deque(requests)
         active: List[Optional[Request]] = [None] * n
         remaining = [0] * n
         pos = [0] * n                       # tokens resident per slot
-        slot_t0 = [0.0] * n                 # processing start per slot
+        admit_seq = [-1] * n                # admission order per slot
+        seq_counter = 0
+        started: Dict[int, float] = {}      # id(req) → first slotting time
         cur_tok = jnp.zeros((n, 1), jnp.int32)
-        t_start = time.time()
+        t_start = clock()
+        watchdog = Watchdog(self.fault_cfg)
+        prefill_count = 0                   # prefill site index (injector)
         stats = {"decode_steps": 0, "admission_deferrals": 0,
                  "peak_live_tokens": 0, "frag_at_high_water": 0.0,
-                 "requests": len(requests)}
+                 "requests": len(requests), "completed": 0,
+                 "preemptions": 0, "recompute_tokens": 0,
+                 "rejected": 0, "failed": 0, "timed_out": 0}
+
+        def deadline_expired(req: Request, now: float) -> bool:
+            d = req.deadline_s if req.deadline_s is not None else \
+                (cfg.deadline_s if cfg.deadline_s > 0 else None)
+            return d is not None and (now - t_start) > d
+
+        def finish_ok(req: Request) -> None:
+            req.done = True
+            req.status = "ok" if req.preemptions == 0 \
+                else f"preempted_{req.preemptions}"
+            req.latency_s = clock() - started[id(req)]
+            stats["completed"] += 1
+
+        def finish_bad(req: Request, status: str, error: str,
+                       slot: Optional[int] = None) -> None:
+            """Terminal failure for ONE request: record status/error, free
+            its slot and pages, leave everyone else serving."""
+            req.done = True
+            req.status = status
+            req.error = error
+            if req.out is None:
+                req.out = []
+            if id(req) in started:
+                req.latency_s = clock() - started[id(req)]
+            stats[status] += 1
+            if slot is not None:
+                active[slot] = None
+                if paged:
+                    alloc.release(slot)
+
+        def preempt_victim() -> int:
+            """Recompute-preempt the latest-admitted (fewest tokens
+            generated) active slot: free its pages, re-enqueue the request
+            at the queue HEAD with its generated prefix kept in ``out`` —
+            re-admission prefills prompt+prefix and resumes sampling where
+            it left off.  Returns the victim slot."""
+            victim = max((s for s in range(n) if active[s] is not None),
+                         key=lambda s: (admit_seq[s], -len(active[s].out)))
+            req = active[victim]
+            req.preemptions += 1
+            req.status = f"preempted_{req.preemptions}"
+            stats["preemptions"] += 1
+            stats["recompute_tokens"] += pos[victim]
+            active[victim] = None
+            alloc.release(victim, evicted=True)
+            # FIFO: the victim was admitted before anything still queued
+            # (later evictions are earlier admissions — appendleft keeps
+            # them ordered ahead of this one)
+            queue.appendleft(req)
+            return victim
 
         while queue or any(a is not None for a in active):
             # fill free slots; a request finishing at prefill (EOS as its
-            # first token, or a 1-token budget) completes without ever
+            # first token, or an exhausted budget) completes without ever
             # occupying the slot, so the next queued request slots in
             deferred = False
             for slot in range(n):
                 while active[slot] is None and queue and not deferred:
                     req = queue[0]
-                    length = len(req.tokens)
+                    now = clock()
+                    if deadline_expired(req, now):
+                        queue.popleft()
+                        started.setdefault(id(req), now)
+                        req.queue_s = now - t_start
+                        finish_bad(req, "timed_out",
+                                   "deadline exceeded after "
+                                   f"{now - t_start:.3f}s in queue")
+                        continue
+                    prefix = req.out or []      # preempted: generated so far
+                    length = len(req.tokens) + len(prefix)
+                    budget = max(req.max_new_tokens, 1) - len(prefix)
                     # max resident tokens: the last decode step has written
                     # length + max_new - 1 of them (the final sampled token
-                    # never enters the cache)
-                    max_resident = length + max(req.max_new_tokens, 1) - 1
+                    # never enters the cache) — preemption never raises it
+                    max_resident = len(req.tokens) \
+                        + max(req.max_new_tokens, 1) - 1
                     if max_resident > cfg.max_seq:
-                        raise ValueError(
-                            f"request needs {max_resident} cache positions "
-                            f"(prompt {length} + max_new_tokens "
-                            f"{req.max_new_tokens} - 1) but max_seq is "
-                            f"{cfg.max_seq}")
+                        msg = (f"request needs {max_resident} cache "
+                               f"positions (prompt {len(req.tokens)} + "
+                               f"max_new_tokens {req.max_new_tokens} - 1) "
+                               f"but max_seq is {cfg.max_seq}")
+                        if strict:
+                            raise ValueError(msg)
+                        queue.popleft()
+                        finish_bad(req, "rejected", msg)
+                        continue
                     worst = 0
                     if paged:
                         worst = alloc.pages_for(max_resident)
                         if worst > alloc.usable:
-                            raise ValueError(
-                                f"request needs up to {worst} pages but the "
-                                f"pool has {alloc.usable}: raise n_pages or "
-                                f"lower max_new_tokens")
-                        if not alloc.can_admit(worst):
+                            msg = (f"request needs up to {worst} pages but "
+                                   f"the pool has {alloc.usable}: raise "
+                                   f"n_pages or lower max_new_tokens")
+                            if strict:
+                                raise ValueError(msg)
+                            queue.popleft()
+                            finish_bad(req, "rejected", msg)
+                            continue
+                        if not alloc.can_admit(
+                                alloc.admission_pages(length, worst)):
                             # FIFO: don't let shorter later requests starve
                             # the head — stop admitting until pages free
                             stats["admission_deferrals"] += 1
                             deferred = True
                             break
                     queue.popleft()
-                    t0 = time.time()
-                    req.queue_s = t0 - t_start
-                    logits, slot_cache = self._prefill(
-                        self.params,
-                        {"tokens": jnp.asarray(req.tokens[None, :],
-                                               jnp.int32)})
-                    first = int(self._sample(logits)[0])
-                    req.out = [first]
-                    req.prefill_s = time.time() - t0
-                    if first == cfg.eos_id or req.max_new_tokens <= 1:
-                        req.done = True
-                        req.latency_s = time.time() - t0
+                    t0 = clock()
+                    if id(req) not in started:
+                        started[id(req)] = t0
+                        req.queue_s = t0 - t_start
+                    tokens = req.tokens if not prefix else np.concatenate(
+                        [np.asarray(req.tokens, np.int32),
+                         np.asarray(prefix, np.int32)])
+                    site = prefill_count
+                    prefill_count += 1
+                    try:
+                        if injector is not None:
+                            injector.check(site, site="prefill")
+                        logits, slot_cache = self._prefill(
+                            self.params,
+                            {"tokens": jnp.asarray(tokens[None, :],
+                                                   jnp.int32)})
+                        first = int(self._sample(logits)[0])
+                    except Exception as e:  # noqa: BLE001 — isolate request
+                        if strict:
+                            raise
+                        finish_bad(req, "failed", repr(e))
+                        continue
+                    if req.out is None:
+                        req.out = []
+                    req.out.append(first)
+                    if not prefix:
+                        req.prefill_s = clock() - t0
+                    if first == cfg.eos_id or budget <= 1:
+                        finish_ok(req)
                         continue
                     if paged:
                         alloc.admit(slot, length, worst)
@@ -375,31 +563,66 @@ class Engine:
                     else:
                         caches = paging.commit_prefill(
                             caches, slot_cache, slot, length)
-                    slot_t0[slot] = t0
                     active[slot] = req
-                    remaining[slot] = req.max_new_tokens - 1
+                    admit_seq[slot] = seq_counter
+                    seq_counter += 1
+                    remaining[slot] = budget - 1
                     pos[slot] = length
                     cur_tok = cur_tok.at[slot, 0].set(first)
             if all(a is None for a in active):
-                break        # queue is empty too (the fill loop drained it)
+                if queue:
+                    continue     # heads were rejected/timed out — refill
+                break            # the fill loop drained the queue
+            # deadline sweep at the decode boundary: expired slots free
+            # their pages before anyone is preempted for space
+            now = clock()
+            for slot in range(n):
+                req = active[slot]
+                if req is not None and deadline_expired(req, now):
+                    finish_bad(req, "timed_out",
+                               "deadline exceeded after "
+                               f"{now - t_start:.3f}s with "
+                               f"{len(req.out)} tokens", slot=slot)
             if paged:
                 # this decode step writes each active slot's token at
-                # position pos[slot] — allocate boundary pages up front
-                # (always succeeds: reservations bound physical use)
+                # position pos[slot] — allocate boundary pages up front,
+                # earliest-admitted first.  worst_case policy: always
+                # succeeds under the reservation invariant.  prompt
+                # policy: pool exhaustion preempts the latest-admitted
+                # slot (possibly the requester itself) and retries — the
+                # earliest active slot can always make progress, since
+                # alone it fits by the worst-case-vs-pool admission check.
                 changed = False
-                for slot in range(n):
-                    if active[slot] is not None:
-                        changed |= alloc.ensure(slot, pos[slot] + 1)
+                order = sorted((s for s in range(n)
+                                if active[s] is not None),
+                               key=lambda s: admit_seq[s])
+                for slot in order:
+                    if active[slot] is None:
+                        continue             # evicted as a victim below
+                    while True:
+                        try:
+                            changed |= alloc.ensure(slot, pos[slot] + 1)
+                            break
+                        except paging.PoolExhausted:
+                            victim = preempt_victim()
+                            changed = True   # victim's table row went null
+                            if victim == slot:
+                                break        # requester evicted itself
                 if changed:
                     caches = paging.sync_block_tables(caches, alloc.table)
-                live = sum(pos[s] + 1 for s in range(n)
-                           if active[s] is not None)
-                stats["peak_live_tokens"] = max(stats["peak_live_tokens"],
-                                                live)
-                if alloc.pages_in_use >= alloc.high_water:
-                    stats["frag_at_high_water"] = 1.0 - live / max(
-                        alloc.pages_in_use * geom.page_size, 1)
+            # live-token peak is layout-agnostic (the dense layout used to
+            # report 0, skewing the paged-vs-dense residency comparison)
+            live = sum(pos[s] + 1 for s in range(n)
+                       if active[s] is not None)
+            stats["peak_live_tokens"] = max(stats["peak_live_tokens"], live)
+            if paged and alloc.pages_in_use >= alloc.high_water:
+                stats["frag_at_high_water"] = 1.0 - live / max(
+                    alloc.pages_in_use * geom.page_size, 1)
+            if all(a is None for a in active):
+                continue         # deadline sweep / self-eviction emptied
+            step_t0 = clock()
             logits, caches = self._decode(self.params, caches, cur_tok)
+            watchdog.observe(stats["decode_steps"], clock() - step_t0)
             stats["decode_steps"] += 1
             nxt = self._sample(logits)
             cur_tok = nxt[:, None]
@@ -407,16 +630,26 @@ class Engine:
                 req = active[slot]
                 if req is None:
                     continue
+                if injector is not None:
+                    try:
+                        # per-request decode site: "this request committing
+                        # its len(out)-th generated token"
+                        injector.check(len(req.out), site="decode")
+                    except Exception as e:  # noqa: BLE001 — isolate request
+                        if strict:
+                            raise
+                        finish_bad(req, "failed", repr(e), slot=slot)
+                        continue
                 tok = int(nxt[slot])
                 req.out.append(tok)
                 pos[slot] += 1
                 remaining[slot] -= 1
                 if remaining[slot] <= 0 or tok == cfg.eos_id:
-                    req.done = True
-                    req.latency_s = time.time() - slot_t0[slot]
+                    finish_ok(req)
                     active[slot] = None
                     if paged:
                         alloc.release(slot)
+        stats["straggler_decode_steps"] = len(watchdog.events)
         if paged:
             stats.update(alloc.stats())
             stats["kv_layout"] = "paged"

@@ -19,11 +19,21 @@ Split of responsibilities:
 * **Host side** (this module): :class:`PageAllocator` owns the free list
   and the authoritative block table.  Pages are allocated lazily — prompt
   pages at prefill-commit, one page at a time as decode crosses page
-  boundaries — while **admission control** reserves each request's
-  worst-case page count up front, so mid-decode allocation can never fail
-  and no preemption machinery is needed.  Page 0 is reserved as the null
-  page: free slots' table rows point at it, so their (ignored) decode
-  writes land there instead of corrupting reallocated pages.
+  boundaries — under one of two **admission policies** (DESIGN.md §6.4):
+
+  - ``policy="worst_case"`` reserves each request's worst-case page count
+    up front, so mid-decode allocation can never fail — pools sized below
+    aggregate worst-case *defer* admissions (FIFO) until pages free;
+  - ``policy="prompt"`` (the engine's default) reserves only the pages
+    the resident tokens actually need, admitting more concurrent
+    requests; when decode then crosses a page boundary with the pool dry,
+    :meth:`ensure` raises :class:`PoolExhausted` and the engine
+    recompute-preempts a victim slot (``release(evicted=True)``) —
+    graceful overload instead of head-of-line blocking.
+
+  Page 0 is reserved as the null page: free slots' table rows point at
+  it, so their (ignored) decode writes land there instead of corrupting
+  reallocated pages.
 
 ``commit_prefill`` bridges the two: prefill runs on an ordinary dense
 batch-1 cache (the prompt-length-specialized jit the engine already has),
@@ -42,8 +52,8 @@ import numpy as np
 
 from repro.models.attention import PageGeometry
 
-__all__ = ["PageGeometry", "PageAllocator", "geometry", "commit_prefill",
-           "sync_block_tables"]
+__all__ = ["PageGeometry", "PageAllocator", "PoolExhausted", "geometry",
+           "commit_prefill", "sync_block_tables"]
 
 # cache keys that live in page pools (everything else is per-slot dense)
 _POOL_KEYS = ("k", "v", "k_scale", "v_scale", "ckv", "krope")
@@ -62,24 +72,53 @@ def geometry(max_seq: int, page_size: int, n_slots: int,
                         pages_per_slot=pages_per_slot)
 
 
+class PoolExhausted(RuntimeError):
+    """Raised by :meth:`PageAllocator.ensure` under ``policy="prompt"``
+    when a slot must grow but the free list is empty — the engine's
+    signal to recompute-preempt a victim slot and retry."""
+
+
 class PageAllocator:
     """Host-side page bookkeeping for one serve() run.
 
-    Invariant: ``sum(reserved) <= usable_pages`` (admission control) and
-    every slot's physical pages never exceed its reservation — so
-    :meth:`ensure` can always pop a free page and decode never stalls.
+    Invariants (asserted on every mutation, see :meth:`_check`):
+
+    * ``sum(reserved) <= usable_pages`` — admission control;
+    * ``len(free) + pages_in_use == usable_pages`` — pages are never lost
+      or double-owned (a double :meth:`release` would otherwise hand the
+      same page to two slots);
+    * each slot's physical pages never exceed its own worst-case cap.
+
+    ``policy="worst_case"`` reserves the request's whole worst case at
+    admission, so :meth:`ensure` can always pop a free page and decode
+    never stalls.  ``policy="prompt"`` reserves only what the resident
+    tokens need (the reservation tracks the allocation); :meth:`ensure`
+    then raises :class:`PoolExhausted` when the pool runs dry and the
+    caller must evict a victim (``release(evicted=True)``) before
+    retrying.
     """
 
-    def __init__(self, geom: PageGeometry, n_slots: int):
+    POLICIES = ("worst_case", "prompt")
+
+    def __init__(self, geom: PageGeometry, n_slots: int,
+                 policy: str = "worst_case"):
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r}: "
+                             f"expected one of {self.POLICIES}")
         self.geom = geom
         self.n_slots = n_slots
+        self.policy = policy
         # LIFO free list over pages 1..n_pages-1 (page 0 = null page);
         # popping the lowest id first keeps allocation deterministic
         self.free: List[int] = list(range(geom.n_pages - 1, 0, -1))
         self.table = np.zeros((n_slots, geom.pages_per_slot), np.int32)
         self.slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
         self.reserved = [0] * n_slots
+        self.worst_cap = [geom.pages_per_slot] * n_slots
         self.high_water = 0
+        # eviction accounting (preemption observability, DESIGN.md §6.4)
+        self.evictions = 0
+        self.pages_evicted = 0
 
     # ------------------------------------------------------------- queries
     @property
@@ -93,45 +132,96 @@ class PageAllocator:
     def pages_for(self, n_tokens: int) -> int:
         return self.geom.pages_for(n_tokens)
 
-    def can_admit(self, worst_pages: int) -> bool:
-        return sum(self.reserved) + worst_pages <= self.usable
+    def admission_pages(self, n_tokens: int, worst_pages: int) -> int:
+        """Pages admission will reserve for a request under this policy:
+        the full worst case, or just the resident prompt's pages."""
+        if self.policy == "prompt":
+            return self.pages_for(n_tokens)
+        return worst_pages
+
+    def can_admit(self, pages: int) -> bool:
+        return sum(self.reserved) + pages <= self.usable
+
+    def _check(self) -> None:
+        assert sum(self.reserved) <= self.usable, \
+            "admission invariant violated: reservations exceed the pool"
+        assert len(self.free) + self.pages_in_use == self.usable, \
+            "page accounting violated: free list + in-use != usable " \
+            "(double release or leaked page)"
+        for s, pages in enumerate(self.slot_pages):
+            assert len(pages) <= self.worst_cap[s], \
+                f"slot {s} holds more pages than its worst case"
 
     # ------------------------------------------------------------- updates
     def admit(self, slot: int, n_tokens: int, worst_pages: int) -> bool:
-        """Reserve ``worst_pages`` for the slot and allocate the prompt's
-        pages.  Returns False (nothing changed) when the pool can't cover
-        the reservation — the caller defers the request."""
-        if not self.can_admit(worst_pages):
+        """Reserve pages for the slot per the admission policy and
+        allocate the prompt's pages.  Returns False (nothing changed) when
+        the pool can't cover the reservation — the caller defers the
+        request."""
+        need = self.admission_pages(n_tokens, worst_pages)
+        if not self.can_admit(need):
             return False
-        self.reserved[slot] = worst_pages
+        self.worst_cap[slot] = worst_pages
+        self.reserved[slot] = need
         self.ensure(slot, n_tokens)
         return True
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow the slot's pages to cover ``n_tokens``; True if the block
-        table changed (the engine then re-syncs device tables)."""
+        table changed (the engine then re-syncs device tables).  Under
+        ``policy="prompt"`` the reservation grows with the allocation, and
+        :class:`PoolExhausted` is raised if the free list runs dry — the
+        partial growth is kept (the slot owns what it got) so the caller
+        can evict a victim and retry the same call."""
         need = self.pages_for(n_tokens)
-        assert need <= self.reserved[slot], \
-            f"slot {slot} grew past its admission reservation"
+        if self.policy == "prompt":
+            assert need <= self.worst_cap[slot], \
+                f"slot {slot} grew past its worst-case cap"
+        else:
+            assert need <= self.reserved[slot], \
+                f"slot {slot} grew past its admission reservation"
         changed = False
         pages = self.slot_pages[slot]
-        while len(pages) < need:
-            page = self.free.pop()
-            self.table[slot, len(pages)] = page
-            pages.append(page)
-            changed = True
-        if self.pages_in_use > self.high_water:
-            self.high_water = self.pages_in_use
+        try:
+            while len(pages) < need:
+                if self.policy == "prompt" and not self.free:
+                    raise PoolExhausted(
+                        f"slot {slot} needs page {len(pages) + 1}/{need} "
+                        f"but the pool is dry")
+                page = self.free.pop()
+                self.table[slot, len(pages)] = page
+                pages.append(page)
+                if self.policy == "prompt":
+                    self.reserved[slot] = len(pages)
+                changed = True
+        finally:
+            if self.pages_in_use > self.high_water:
+                self.high_water = self.pages_in_use
+            self._check()
         return changed
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int, evicted: bool = False) -> int:
         """Free the slot on completion/eviction: pages return to the pool,
         the table row points back at the null page, the reservation lifts.
-        The *cache contents* are untouched — slot reuse needs no reset."""
+        The *cache contents* are untouched — slot reuse needs no reset.
+
+        Idempotent: releasing an already-free slot is a no-op (it must
+        not re-extend the free list — that would hand the same page to
+        two slots).  Returns the number of pages freed; ``evicted=True``
+        additionally counts the free toward the preemption accounting."""
+        freed = len(self.slot_pages[slot])
+        if freed == 0 and self.reserved[slot] == 0:
+            return 0
         self.free.extend(reversed(self.slot_pages[slot]))
         self.slot_pages[slot] = []
         self.table[slot] = 0
         self.reserved[slot] = 0
+        self.worst_cap[slot] = self.geom.pages_per_slot
+        if evicted:
+            self.evictions += 1
+            self.pages_evicted += freed
+        self._check()
+        return freed
 
     def stats(self) -> dict:
         return {
@@ -141,6 +231,9 @@ class PageAllocator:
             "pages_in_use": self.pages_in_use,
             "page_high_water": self.high_water,
             "reserved_pages": sum(self.reserved),
+            "admission_policy": self.policy,
+            "evictions": self.evictions,
+            "pages_evicted": self.pages_evicted,
         }
 
 

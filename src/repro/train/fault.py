@@ -6,7 +6,11 @@ What runs here vs. what is documented-only on CPU:
 * **Implemented + tested** — the restart loop (exception → restore latest
   checkpoint → seek the data stream → resume), the step-time watchdog
   (EWMA straggler detector), bounded retry with backoff, and fault
-  injection hooks used by tests/test_fault.py.
+  injection hooks used by tests/test_fault.py.  The watchdog and injector
+  are shared with the serving engine (DESIGN.md §6.4): ``Engine.serve``
+  runs a :class:`Watchdog` over decode-step times (stragglers land in
+  ``paging_stats``) and threads a :class:`FaultInjector` through its
+  per-request prefill/decode paths for fault-isolation tests.
 * **Documented policy (needs a real cluster)** — hot-spare pod promotion
   and ICI-link-failure remapping: on a 1000+-node deployment the watchdog's
   `on_straggler` callback is wired to the cluster scheduler to drain/replace
@@ -66,17 +70,36 @@ class Watchdog:
 
 
 class FaultInjector:
-    """Test hook: raise at a chosen step (simulates node failure)."""
+    """Test hook: raise at chosen steps (simulates node/request failure).
+
+    ``fail_at_steps`` entries are either bare ints (site-agnostic — the
+    train loop's ``check(step)`` matches them) or ``(site, step)`` tuples
+    for site-qualified injection: the serving engine threads
+    ``check(k, site="prefill")`` / ``check(k, site="decode")`` through its
+    per-request paths, so a fault can target "the 3rd prefill this serve
+    call" or "a request committing its 2nd generated token" without
+    touching the engine.  Each entry fires exactly once (then it is
+    discarded), so injection is deterministic regardless of how many
+    requests reach the same step count; fired entries are recorded in
+    ``self.fired`` for assertions.
+    """
 
     def __init__(self, fail_at_steps=(), exc=RuntimeError):
         self.fail_at = set(fail_at_steps)
         self.exc = exc
         self.armed = True
+        self.fired = []
 
-    def check(self, step: int):
-        if self.armed and step in self.fail_at:
-            self.fail_at.discard(step)
-            raise self.exc(f"injected fault at step {step}")
+    def check(self, step: int, site: Optional[str] = None):
+        if not self.armed:
+            return
+        keys = (step,) if site is None else ((site, step), step)
+        for key in keys:
+            if key in self.fail_at:
+                self.fail_at.discard(key)
+                self.fired.append((site, step))
+                raise self.exc(
+                    f"injected fault at {site or 'step'} {step}")
 
 
 class RestartableLoop:

@@ -1,0 +1,124 @@
+"""Fault-tolerance primitives (train/fault.py): Watchdog EWMA straggler
+detection, RestartableLoop bounded retry + checkpoint replay, and the
+site-qualified FaultInjector the serving engine threads through its
+per-request paths (DESIGN.md §6.4).
+
+Determinism note (the PR 3 lesson): nothing here asserts on wall-clock —
+watchdog step times are synthetic floats and the retry backoff sleeps are
+monkeypatched into a recording list, so the suite cannot flake under load.
+"""
+import pytest
+
+from repro.train.fault import (FaultConfig, FaultInjector, RestartableLoop,
+                               Watchdog)
+
+# ------------------------------------------------------------- watchdog
+
+
+def _cfg(**kw):
+    base = dict(straggler_ewma_alpha=0.5, straggler_factor=2.0,
+                min_samples=3)
+    base.update(kw)
+    return FaultConfig(**base)
+
+
+def test_watchdog_warmup_never_flags():
+    """No straggler verdicts before min_samples observations — the first
+    steps (compile, cold caches) are legitimately slow."""
+    wd = Watchdog(_cfg())
+    assert not wd.observe(0, 100.0)       # ewma not yet seeded
+    assert not wd.observe(1, 100.0)       # n < min_samples
+    assert not wd.observe(2, 100.0)
+    assert wd.events == []
+
+
+def test_watchdog_flags_straggler_and_ewma_adapts():
+    wd = Watchdog(_cfg())
+    for step in range(3):
+        assert not wd.observe(step, 1.0)
+    assert wd.ewma == pytest.approx(1.0)
+    # 2.5 > factor(2.0) * ewma(1.0) -> flagged, with the pre-update ewma
+    assert wd.observe(3, 2.5)
+    assert wd.events == [(3, 2.5, pytest.approx(1.0))]
+    # the straggler itself feeds the EWMA: 0.5*1.0 + 0.5*2.5 = 1.75, so a
+    # later 3.0s step is within 2*1.75 = 3.5 — a permanently-slower host
+    # is the new normal, not an endless alert stream
+    assert wd.ewma == pytest.approx(1.75)
+    assert not wd.observe(4, 3.0)
+    assert len(wd.events) == 1
+
+
+def test_watchdog_on_straggler_callback():
+    calls = []
+    wd = Watchdog(_cfg(), on_straggler=lambda *a: calls.append(a))
+    for step in range(4):
+        wd.observe(step, 1.0)
+    wd.observe(4, 9.0)
+    assert calls == [(4, 9.0, pytest.approx(1.0))]
+
+
+# ------------------------------------------------------- restartable loop
+
+
+def test_restartable_loop_retry_backoff_and_exact_replay(monkeypatch):
+    """Two injected failures: each restart sleeps backoff_s * restarts
+    (recorded, not slept), restores the latest checkpoint, and replays to
+    the same final state as a fault-free run (deterministic data)."""
+    sleeps = []
+    monkeypatch.setattr("repro.train.fault.time.sleep", sleeps.append)
+    loop = RestartableLoop(FaultConfig(max_restarts=3, backoff_s=0.1))
+    inj = FaultInjector(fail_at_steps=(2, 4))
+    ckpt = {"state": 0, "step": 0}
+
+    def step_fn(state, step):
+        inj.check(step)
+        state = state + step
+        if step % 2 == 0:                 # checkpoint every other step
+            ckpt.update(state=state, step=step + 1)
+        return state
+
+    state, step = loop.run(0, 0, 6, step_fn, lambda: (ckpt["state"],
+                                                      ckpt["step"]))
+    assert (state, step) == (sum(range(6)), 6)    # replay is exact
+    assert loop.restarts == 2
+    assert sleeps == [pytest.approx(0.1), pytest.approx(0.2)]
+    assert inj.fired == [(None, 2), (None, 4)]
+
+
+def test_restartable_loop_budget_exhausted_reraises():
+    loop = RestartableLoop(FaultConfig(max_restarts=2, backoff_s=0.0))
+
+    def step_fn(state, step):
+        raise RuntimeError("persistent failure")
+
+    with pytest.raises(RuntimeError, match="persistent failure"):
+        loop.run(0, 0, 4, step_fn, lambda: (0, 0))
+    assert loop.restarts == loop.cfg.max_restarts + 1
+
+
+# ---------------------------------------------------------- fault injector
+
+
+def test_fault_injector_site_qualified_and_bare_steps():
+    inj = FaultInjector(fail_at_steps=(("prefill", 1), 3), exc=ValueError)
+    inj.check(1)                          # bare step: tuple key untouched
+    inj.check(0, site="prefill")          # wrong step
+    inj.check(1, site="decode")           # wrong site
+    with pytest.raises(ValueError, match="injected fault at prefill 1"):
+        inj.check(1, site="prefill")
+    inj.check(1, site="prefill")          # fires exactly once
+    with pytest.raises(ValueError, match="injected fault at decode 3"):
+        inj.check(3, site="decode")       # bare int matches any site
+    inj.check(3)
+    assert inj.fired == [("prefill", 1), ("decode", 3)]
+    assert inj.fail_at == set()
+
+
+def test_fault_injector_disarm():
+    inj = FaultInjector(fail_at_steps=(0,))
+    inj.armed = False
+    inj.check(0)                          # disarmed: nothing fires
+    assert inj.fired == []
+    inj.armed = True
+    with pytest.raises(RuntimeError):
+        inj.check(0)

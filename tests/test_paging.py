@@ -1,14 +1,18 @@
 """Paged KV-cache subsystem (DESIGN.md §6, serve/paging.py).
 
-Covers the allocator invariants, paged-vs-dense logits equivalence across
-every cache variant (gqa / mla / windowed / int8) and page-boundary prompt
-lengths, pool-exhaustion admission deferral, and the stale-offset drift
-regression (a request slotted into a half-decoded batch).
+Covers the allocator invariants (both admission policies), paged-vs-dense
+logits equivalence across every cache variant (gqa / mla / windowed /
+int8) and page-boundary prompt lengths, pool-exhaustion admission deferral
+(worst_case policy) and recompute preemption (prompt policy, §6.4),
+per-request rejection with the strict escape hatch, deadlines, and the
+stale-offset drift regression (a request slotted into a half-decoded
+batch).
 
 Determinism note (the PR 3 lesson): nothing here asserts on wall-clock —
 token streams, logits, and page counts are all deterministic functions of
-seeds and request mixes, so these tests cannot flake under parallel tier-1
-load.
+seeds and request mixes, and the deadline/fairness tests drive
+``Engine.clock`` with a fake timer, so these tests cannot flake under
+parallel tier-1 load.
 """
 import dataclasses
 
@@ -23,6 +27,35 @@ from repro.serve import Engine, PageAllocator, Request, ServeConfig, paging
 
 S_MAX = 64
 PS = 4           # page size: small so short tests cross page boundaries
+
+
+class FakeClock:
+    """Deterministic engine clock: time advances only when told to (the
+    tests attach the advance to decode steps), so deadline and ordering
+    asserts cannot flake under load."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _tick_decode(eng, clock, dt=1.0, slow_at=()):
+    """Wrap the engine's decode so each step advances the fake clock by
+    ``dt`` (``slow_at``: step indices that take 10× — straggler fodder)."""
+    orig = eng._decode
+    count = [0]
+
+    def wrapped(*a):
+        clock.advance(dt * (10.0 if count[0] in slow_at else 1.0))
+        count[0] += 1
+        return orig(*a)
+
+    eng._decode = wrapped
 
 
 # ------------------------------------------------------------- allocator
@@ -63,6 +96,70 @@ def test_allocator_reservation_invariant():
     alloc.admit(0, 4, worst_pages=2)
     with pytest.raises(AssertionError, match="reservation"):
         alloc.ensure(0, 12)                                 # needs 3 > 2
+
+
+def test_allocator_release_idempotent():
+    """Double release must be a no-op — re-extending the free list would
+    hand the same page to two slots (satellite hardening)."""
+    geom = paging.geometry(max_seq=32, page_size=4, n_slots=2, n_pages=5)
+    alloc = PageAllocator(geom, n_slots=2)
+    alloc.admit(0, 8, worst_pages=2)
+    assert alloc.release(0) == 2
+    n_free = len(alloc.free)
+    assert alloc.release(0) == 0                            # idempotent
+    assert len(alloc.free) == n_free                        # not re-extended
+    # every page still singly owned after churn
+    alloc.admit(0, 8, worst_pages=2)
+    alloc.admit(1, 8, worst_pages=2)
+    used = [p for pages in alloc.slot_pages for p in pages]
+    assert len(used) == len(set(used)) == 4
+
+
+def test_allocator_invariant_asserted_on_every_mutation():
+    """sum(reserved) <= usable and free+in_use == usable are checked on
+    admit/ensure/release — a corrupted free list trips immediately."""
+    geom = paging.geometry(max_seq=32, page_size=4, n_slots=2, n_pages=9)
+    alloc = PageAllocator(geom, n_slots=2)
+    alloc.admit(0, 8, worst_pages=4)
+    alloc.free.append(alloc.slot_pages[0][0])     # simulate double ownership
+    with pytest.raises(AssertionError, match="accounting"):
+        alloc.admit(1, 4, worst_pages=2)
+
+
+def test_allocator_prompt_policy_exhaustion_and_eviction():
+    """policy='prompt': admission reserves resident pages only; ensure()
+    raises PoolExhausted on a dry pool, and an eviction frees exactly the
+    victim's pages (counted), after which the same ensure() succeeds."""
+    geom = paging.geometry(max_seq=64, page_size=4, n_slots=2, n_pages=5)
+    alloc = PageAllocator(geom, n_slots=2, policy="prompt")   # 4 usable
+    assert alloc.admission_pages(8, worst_pages=4) == 2       # prompt only
+    assert alloc.admit(0, 8, worst_pages=4)
+    assert alloc.admit(1, 8, worst_pages=4)                   # pool now full
+    assert alloc.pages_in_use == 4 and sum(alloc.reserved) == 4
+    with pytest.raises(paging.PoolExhausted):
+        alloc.ensure(0, 9)                                    # needs a 3rd
+    victim_pages = set(alloc.slot_pages[1])
+    assert alloc.release(1, evicted=True) == 2
+    assert alloc.evictions == 1 and alloc.pages_evicted == 2
+    assert victim_pages <= set(alloc.free)        # exactly those freed
+    assert alloc.ensure(0, 9)                     # retry succeeds
+    assert alloc.pages_in_use == 3 and alloc.reserved[0] == 3
+
+
+def test_allocator_prompt_policy_worst_case_cap():
+    """Even under prompt-pages admission a slot can never outgrow its own
+    worst case (the engine's max_seq rejection guarantees the cap)."""
+    geom = paging.geometry(max_seq=64, page_size=4, n_slots=1, n_pages=0)
+    alloc = PageAllocator(geom, n_slots=1, policy="prompt")
+    alloc.admit(0, 4, worst_pages=2)
+    with pytest.raises(AssertionError, match="worst-case cap"):
+        alloc.ensure(0, 12)                                   # needs 3 > 2
+
+
+def test_allocator_rejects_unknown_policy():
+    geom = paging.geometry(max_seq=32, page_size=4, n_slots=1, n_pages=0)
+    with pytest.raises(ValueError, match="admission policy"):
+        PageAllocator(geom, n_slots=1, policy="optimism")
 
 
 # -------------------------------------------- paged vs dense equivalence
@@ -189,11 +286,13 @@ def test_midstream_slotting_no_stale_offset_drift(layout):
 
 
 def test_serve_pool_exhaustion_defers_admission():
-    """3 slots but pages for only 2 concurrent requests: the third must
-    wait for a completion (deferral counted), then finish correctly."""
+    """worst_case policy (PR 5 behavior, kept behind the knob): 3 slots
+    but pages for only 2 concurrent requests — the third must wait for a
+    completion (deferral counted, never a preemption), then finish."""
     cfg = get_smoke("granite-3-2b")
     eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=3, page_size=8,
-                                  n_pages=5))                 # 4 usable
+                                  n_pages=5,                  # 4 usable
+                                  admission_policy="worst_case"))
     rng = np.random.default_rng(7)
     reqs = [Request(tokens=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
                     max_new_tokens=5) for _ in range(3)]
@@ -203,37 +302,193 @@ def test_serve_pool_exhaustion_defers_admission():
         assert r.out == _oracle(eng, r)
     st = eng.paging_stats
     assert st["admission_deferrals"] > 0
+    assert st["preemptions"] == 0 and st["evictions"] == 0
     assert st["page_high_water"] <= 4                       # pool bound held
     assert st["pages_in_use"] == 0                          # all freed
 
 
+# ------------------------------------------------ preemption & overload
+
+
 @pytest.mark.parametrize("layout", ["paged", "dense"])
-def test_serve_budget_overflowing_max_seq_raises(layout):
-    """prompt + max_new - 1 beyond max_seq must be rejected at admission
-    (paged: the reservation would outgrow the block table and crash
-    mid-decode; dense: writes would silently drop).  The exact-fit budget
-    is fine and fills the last page completely."""
+def test_serve_overload_preempts_and_matches_oracle(layout):
+    """The tentpole acceptance scenario: the PR 5 deferral geometry (pool
+    sized below aggregate worst case) under the default prompt-pages
+    policy completes EVERY request via recompute preemption, token-for-
+    token equal to generate() — in both layouts (dense has no pool, so it
+    must simply complete)."""
+    cfg = get_smoke("granite-3-2b")
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=3, page_size=8,
+                                  n_pages=5, kv_layout=layout))
+    rng = np.random.default_rng(7)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+                    max_new_tokens=5) for _ in range(6)]
+    eng.serve(reqs)
+    assert all(r.ok_like and len(r.out) == 5 for r in reqs)
+    for r in reqs:
+        assert r.out == _oracle(eng, r), "preempted request drifted"
+    st = eng.paging_stats
+    assert st["completed"] == 6
+    if layout == "paged":
+        assert st["preemptions"] > 0 and st["recompute_tokens"] > 0
+        assert st["evictions"] == st["preemptions"]
+        assert st["page_high_water"] <= 4                   # pool bound held
+        assert st["pages_in_use"] == 0 and st["reserved_pages"] == 0
+        assert any(r.preemptions > 0
+                   and r.status == f"preempted_{r.preemptions}"
+                   for r in reqs)
+    else:
+        assert st["preemptions"] == 0
+
+
+def test_serve_preemption_fifo_fairness_under_sustained_overload():
+    """Sustained overload (8 equal requests through a pool for ~2): FIFO
+    order is preserved — completion times (fake clock, advanced per decode
+    step) are non-decreasing in submission order, and the earliest-admitted
+    request is never the preemption victim."""
+    cfg = get_smoke("granite-3-2b")
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=3, page_size=8,
+                                  n_pages=5))
+    clock = FakeClock()
+    eng.clock = clock
+    _tick_decode(eng, clock)
+    rng = np.random.default_rng(12)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+                    max_new_tokens=5) for _ in range(8)]
+    eng.serve(reqs)
+    assert all(r.ok_like and len(r.out) == 5 for r in reqs)
+    assert eng.paging_stats["preemptions"] > 0
+    done_at = [r.queue_s + r.latency_s for r in reqs]   # instants from t0
+    assert done_at == sorted(done_at), "overload broke FIFO completion order"
+    for r in reqs:
+        assert r.out == _oracle(eng, r)
+
+
+def test_serve_preemption_frees_exactly_victim_pages():
+    """Each eviction returns exactly the victim's pages to the pool: the
+    allocator's eviction accounting ties out against the engine's
+    preemption count and the pool never exceeds its bound."""
+    cfg = get_smoke("granite-3-2b")
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=3, page_size=8,
+                                  n_pages=5))
+    rng = np.random.default_rng(7)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+                    max_new_tokens=5) for _ in range(3)]
+    eng.serve(reqs)
+    st = eng.paging_stats
+    assert st["preemptions"] == st["evictions"] > 0
+    # every victim held exactly its resident tokens' pages when evicted:
+    # pages_evicted * page_size must cover recompute_tokens at page granularity
+    assert st["pages_evicted"] * st["page_size"] >= st["recompute_tokens"]
+    assert st["pages_evicted"] < st["recompute_tokens"]  # pages, not tokens
+    assert st["pages_in_use"] == 0 and st["reserved_pages"] == 0
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_serve_deadline_expiry_releases_slot_and_pages(layout):
+    """A mid-decode deadline violation times out ONLY that request (partial
+    output kept, slot + pages freed for the queue) while batchmates
+    complete; a queued request whose deadline lapses before slotting never
+    runs prefill."""
+    cfg = get_smoke("granite-3-2b")
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=2, page_size=PS,
+                                  kv_layout=layout))
+    clock = FakeClock()
+    eng.clock = clock
+    _tick_decode(eng, clock)                       # 1s per decode step
+    rng = np.random.default_rng(13)
+    mk = lambda mx, dl: Request(
+        tokens=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+        max_new_tokens=mx, deadline_s=dl)
+    slow = mk(12, 2.5)          # times out after the 3rd decode step
+    ok = mk(4, None)            # no deadline: completes
+    queued = mk(4, 2.5)         # 2 slots busy at t>2.5 -> dies in queue
+    late = mk(3, None)          # slots in after the timeouts free a slot
+    eng.serve([slow, ok, queued, late])
+    assert slow.done and slow.status == "timed_out"
+    assert 1 <= len(slow.out) < 12                 # partial output kept
+    assert "deadline" in slow.error
+    assert ok.ok_like and len(ok.out) == 4
+    assert ok.out == _oracle(eng, ok)
+    assert queued.done and queued.status == "timed_out" and queued.out == []
+    assert late.ok_like and len(late.out) == 3
+    st = eng.paging_stats
+    assert st["timed_out"] == 2 and st["completed"] == 2
+    if layout == "paged":
+        assert st["pages_in_use"] == 0 and st["reserved_pages"] == 0
+
+
+def test_serve_straggler_decode_steps_flagged():
+    """The train/fault.py Watchdog rides along: a decode step 10x slower
+    than the EWMA (fake clock) lands in paging_stats."""
+    cfg = get_smoke("granite-3-2b")
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=2, page_size=PS))
+    clock = FakeClock()
+    eng.clock = clock
+    _tick_decode(eng, clock, slow_at=(8,))
+    rng = np.random.default_rng(14)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, (6,)).astype(np.int32),
+                    max_new_tokens=12) for _ in range(2)]
+    eng.serve(reqs)
+    assert all(r.ok_like for r in reqs)
+    assert eng.paging_stats["straggler_decode_steps"] == 1
+
+
+# ------------------------------------- rejection (strict escape hatch)
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_serve_budget_overflowing_max_seq_rejected(layout):
+    """prompt + max_new - 1 beyond max_seq fails THAT request
+    (status='rejected') while batchmates finish (paged: the reservation
+    would outgrow the block table and crash mid-decode; dense: writes
+    would silently drop).  The exact-fit budget is fine and fills the
+    last page completely."""
     cfg = get_smoke("granite-3-2b")
     eng = Engine(cfg, ServeConfig(max_seq=16, n_slots=1, kv_layout=layout,
                                   page_size=PS))
     rng = np.random.default_rng(11)
     prompt = rng.integers(0, cfg.vocab, (9,)).astype(np.int32)
-    with pytest.raises(ValueError, match="max_seq"):
-        eng.serve([Request(tokens=prompt.copy(), max_new_tokens=9)])  # 17
+    bad = Request(tokens=prompt.copy(), max_new_tokens=9)             # 17
     ok = Request(tokens=prompt.copy(), max_new_tokens=8)              # 16
-    eng.serve([ok])
-    assert ok.done and len(ok.out) == 8
+    eng.serve([bad, ok])
+    assert bad.done and bad.status == "rejected" and bad.out == []
+    assert "max_seq" in bad.error
+    assert ok.ok_like and len(ok.out) == 8
     assert ok.out == _oracle(eng, ok)
 
 
-def test_serve_request_too_big_for_pool_raises():
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_serve_strict_restores_max_seq_raise(layout):
+    """strict=True escape hatch: the PR 5 fail-stop ValueError is back."""
     cfg = get_smoke("granite-3-2b")
+    eng = Engine(cfg, ServeConfig(max_seq=16, n_slots=1, kv_layout=layout,
+                                  page_size=PS, strict=True))
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, (9,)).astype(np.int32)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.serve([Request(tokens=prompt, max_new_tokens=9)])         # 17
+
+
+def test_serve_request_too_big_for_pool_rejected_and_strict():
+    cfg = get_smoke("granite-3-2b")
+    rng = np.random.default_rng(15)
+    mk_big = lambda: Request(tokens=np.arange(16, dtype=np.int32)
+                             % cfg.vocab, max_new_tokens=20)  # worst 5 pages
     eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=2, page_size=8,
                                   n_pages=3))                 # 2 usable
-    req = Request(tokens=np.arange(16, dtype=np.int32) % cfg.vocab,
-                  max_new_tokens=20)                          # worst 5 pages
+    big = mk_big()
+    ok = Request(tokens=rng.integers(0, cfg.vocab, (6,)).astype(np.int32),
+                 max_new_tokens=2)
+    eng.serve([big, ok])
+    assert big.done and big.status == "rejected" and "pool" in big.error
+    assert ok.ok_like and ok.out == _oracle(eng, ok)
+    assert eng.paging_stats["rejected"] == 1
+    strict = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=2, page_size=8,
+                                     n_pages=3, strict=True),
+                    params=eng.params)
     with pytest.raises(ValueError, match="pool"):
-        eng.serve([req])
+        strict.serve([mk_big()])
 
 
 def test_paged_residency_bounded_by_dense():

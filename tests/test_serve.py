@@ -178,6 +178,78 @@ def test_top_k_clamped_to_vocab():
     assert out2.shape == (2, 3)
 
 
+# ------------------------------------- per-request fault isolation (§6.4)
+
+
+def test_prefill_fault_fails_only_that_request(engine):
+    """An exception during the 2nd prefill of the serve call kills that
+    request alone: its slot goes to the next queued request and everyone
+    else matches the oracle."""
+    from repro.train.fault import FaultInjector
+    eng = Engine(engine.model.cfg, ServeConfig(max_seq=96, n_slots=2),
+                 params=engine.params)
+    rng = np.random.default_rng(20)
+    reqs = [Request(tokens=rng.integers(0, eng.model.cfg.vocab,
+                                        (8,)).astype(np.int32),
+                    max_new_tokens=4) for _ in range(3)]
+    inj = FaultInjector(fail_at_steps=(("prefill", 1),))
+    eng.serve(reqs, fault_injector=inj)
+    assert inj.fired == [("prefill", 1)]
+    bad = reqs[1]
+    assert bad.done and bad.status == "failed" and bad.out == []
+    assert "injected fault at prefill 1" in bad.error
+    for r in (reqs[0], reqs[2]):
+        assert r.ok_like and len(r.out) == 4
+        g = eng.generate(r.tokens[None, :], max_new_tokens=4)[0]
+        assert list(g) == r.out
+    assert eng.paging_stats["failed"] == 1
+    assert eng.paging_stats["completed"] == 2
+    assert eng.paging_stats["pages_in_use"] == 0     # failed slot freed
+
+
+def test_decode_fault_fails_only_that_request(engine):
+    """A per-request decode fault ("committing the 3rd generated token")
+    hits exactly one request — the entry fires once, so its batchmate
+    passes the same step count unharmed."""
+    from repro.train.fault import FaultInjector
+    eng = Engine(engine.model.cfg, ServeConfig(max_seq=96, n_slots=2),
+                 params=engine.params)
+    rng = np.random.default_rng(21)
+    reqs = [Request(tokens=rng.integers(0, eng.model.cfg.vocab,
+                                        (8,)).astype(np.int32),
+                    max_new_tokens=5) for _ in range(3)]
+    inj = FaultInjector(fail_at_steps=(("decode", 2),))
+    eng.serve(reqs, fault_injector=inj)
+    assert inj.fired == [("decode", 2)]
+    bad = reqs[0]                  # slot 0 reaches len(out) == 2 first
+    assert bad.done and bad.status == "failed"
+    assert len(bad.out) == 2       # partial output kept
+    assert "injected fault at decode 2" in bad.error
+    for r in (reqs[1], reqs[2]):
+        assert r.ok_like and len(r.out) == 5
+        g = eng.generate(r.tokens[None, :], max_new_tokens=5)[0]
+        assert list(g) == r.out
+    assert eng.paging_stats["failed"] == 1
+    assert eng.paging_stats["pages_in_use"] == 0
+
+
+def test_strict_propagates_injected_fault(engine):
+    """strict=True restores fail-stop: the injected fault raises out of
+    serve() instead of being contained."""
+    from repro.train.fault import FaultInjector
+    eng = Engine(engine.model.cfg,
+                 ServeConfig(max_seq=96, n_slots=2, strict=True),
+                 params=engine.params,
+                 fault_injector=FaultInjector(fail_at_steps=(("prefill",
+                                                             0),)))
+    rng = np.random.default_rng(22)
+    req = Request(tokens=rng.integers(0, eng.model.cfg.vocab,
+                                      (8,)).astype(np.int32),
+                  max_new_tokens=3)
+    with pytest.raises(RuntimeError, match="injected fault"):
+        eng.serve([req])
+
+
 def test_encdec_generate():
     cfg = get_smoke("seamless-m4t-medium")
     eng = Engine(cfg, ServeConfig(max_seq=64))
