@@ -28,6 +28,14 @@ complete via recompute preemption (token streams still deterministic) and
 the oversized one must be rejected per-request.  Its ``preemptions``,
 ``recompute_tokens``, and ``rejected`` counts are deterministic allocator
 properties and CI-gated never-grow, like the page metrics.
+
+The **router_kill** mix (DESIGN.md §7) runs 3 engine replicas behind the
+fault-tolerant Router, kills one mid-decode through the site-qualified
+injector, and bounds the router queue so the submission tail is shed: the
+surviving replicas absorb the dead one's in-flight requests (recompute
+migration — streams asserted token-identical to the single-engine
+oracle), and ``migrations`` / ``retries_exhausted`` / ``shed`` are
+deterministic scheduler properties, CI-gated never-grow.
 """
 from __future__ import annotations
 
@@ -166,6 +174,103 @@ def bench_overload(cfg) -> Dict:
     }
 
 
+# router mix geometry (DESIGN.md §7): 3 replicas, one killed on its 3rd
+# decode step (site-qualified injector), bounded router queue so the
+# submission tail is shed.  Engine clocks run on a fake timer advanced per
+# decode step, so fault timing, migrations, restart scheduling, and shed
+# counts are deterministic plan properties of the mix — CI-gateable —
+# while wall_s stays informational.
+ROUTER = dict(n_replicas=3, n_slots=2, page_size=8, queue_limit=6,
+              n_requests=10, prompt_len=8, max_new=6,
+              kill_replica=1, kill_at_step=2)
+
+
+def bench_router(cfg) -> Dict:
+    from repro.serve import Engine, Request, Router, RouterConfig, \
+        ServeConfig
+    from repro.train.fault import FaultConfig, FaultInjector
+    rv = ROUTER
+
+    class _Clock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clock = _Clock()
+    scfg = ServeConfig(max_seq=MAX_SEQ, n_slots=rv["n_slots"],
+                       page_size=rv["page_size"], temperature=0.0,
+                       eos_id=-1)
+    fault_cfg = FaultConfig(max_restarts=3, backoff_s=0.5)
+    first = Engine(cfg, scfg, fault_cfg=fault_cfg)
+    engines = [first] + [Engine(cfg, scfg, params=first.params,
+                                fault_cfg=fault_cfg)
+                         for _ in range(rv["n_replicas"] - 1)]
+    engines[rv["kill_replica"]].fault_injector = FaultInjector(
+        fail_at_steps=(("replica", rv["kill_at_step"]),))
+    for e in engines:
+        e.clock = clock
+        orig = e._decode
+
+        def tick(*a, _orig=orig):
+            clock.t += 1.0
+            return _orig(*a)
+
+        e._decode = tick
+    router = Router(engines, cfg=RouterConfig(
+        n_replicas=rv["n_replicas"], queue_limit=rv["queue_limit"]),
+        fault_cfg=fault_cfg, clock=clock,
+        sleep=lambda s: setattr(clock, "t", clock.t + s))
+    rng = np.random.default_rng(2)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, (rv["prompt_len"],)
+                                        ).astype(np.int32),
+                    max_new_tokens=rv["max_new"])
+            for _ in range(rv["n_requests"])]
+    t0 = time.time()
+    router.serve(reqs)
+    wall_s = time.time() - t0
+    assert all(r.done for r in reqs), "router: unfinished requests"
+    shed = [r for r in reqs if r.status == "shed"]
+    served = [r for r in reqs if r.status != "shed"]
+    assert len(shed) == rv["n_requests"] - rv["queue_limit"], \
+        "router: backpressure bound did not hold"
+    assert all(r.ok_like for r in served), \
+        "router: a request failed instead of migrating"
+    # THE acceptance assert: every stream — including every migrated one —
+    # is token-identical to the single-engine greedy oracle
+    for r in served:
+        oracle = list(engines[0].generate(
+            r.tokens[None, :], max_new_tokens=r.max_new_tokens)[0])
+        assert r.out == oracle, "router: migrated stream drifted from oracle"
+    st = router.stats()
+    assert st["replica_faults"] == 1 and st["migrations"] > 0
+    assert st["failed"] == 0 and st["retries_exhausted"] == 0
+    return {
+        **{k: rv[k] for k in ("n_replicas", "n_slots", "page_size",
+                              "queue_limit", "prompt_len", "max_new")},
+        "n_requests": rv["n_requests"],
+        "total_tokens": int(sum(len(r.out) for r in served)),
+        "wall_s": round(wall_s, 4),                     # informational
+        "decode_steps": st["decode_steps"],
+        # deterministic fault-tolerance counters (gated never-grow in CI)
+        "migrations": st["migrations"],
+        "retries_exhausted": st["retries_exhausted"],
+        "shed": st["shed"],
+        "failed": st["failed"],
+        "replica_faults": st["replica_faults"],
+        "replica_restarts": st["replica_restarts"],
+        "completed": st["completed"],
+        "preemptions": st["preemptions"],
+        "recompute_tokens": st["recompute_tokens"],
+        "rejected": st["rejected"],
+        "timed_out": st["timed_out"],
+        # page metrics: fleet max + the per-replica spread
+        "page_high_water": st["page_high_water"],
+        "page_high_water_per_replica": st["page_high_water_per_replica"],
+        "peak_live_tokens": st["peak_live_tokens"],
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -205,7 +310,18 @@ def main(argv=None) -> int:
           f"{overload['completed']} completed on "
           f"{overload['n_pages']} pages")
 
-    peaks = [m["paged"]["paged_peak_tokens"] for m in mixes.values()]
+    router = bench_router(cfg)
+    mixes["router_kill"] = {"paged": router}
+    print(f"router_kill: {router['n_replicas']} replicas, "
+          f"{router['migrations']} migrations after "
+          f"{router['replica_faults']} replica fault, "
+          f"{router['shed']} shed at queue_limit "
+          f"{router['queue_limit']}, {router['retries_exhausted']} "
+          f"retry-budget exhaustions, per-replica page high-water "
+          f"{router['page_high_water_per_replica']}")
+
+    peaks = [m["paged"]["paged_peak_tokens"] for m in mixes.values()
+             if "paged_peak_tokens" in m["paged"]]
     dense_equiv = N_SLOTS * MAX_SEQ
     out = {
         "meta": {
@@ -222,7 +338,8 @@ def main(argv=None) -> int:
             "mixed_length_paged_peak": mixes["mixed_length"]["paged"][
                 "paged_peak_tokens"],
             "pages_per_token_worst": max(
-                m["paged"]["pages_per_token"] for m in mixes.values()),
+                m["paged"]["pages_per_token"] for m in mixes.values()
+                if "pages_per_token" in m["paged"]),
         },
     }
     with open(args.out, "w") as f:

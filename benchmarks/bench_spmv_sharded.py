@@ -9,12 +9,12 @@ before any jax import, unless the environment already provides one):
 
 Per matrix it builds the single-device plan and the 8-shard stacked plan at
 a fixed config (cps=2, block + heuristic-spill adaptive) **plus the
-per-shard autotuned plan** (DESIGN.md §11: each shard's own
+per-shard autotuned plan** (DESIGN.md §12: each shard's own
 ``(chunks_per_step, ordering, spill_threshold)`` winner), verifies every
 shard_map result against the dense product, and records the acceptance
 figures: **per-shard stored slots and grid steps vs 1/D of the
 single-device plan** (the ~1/D shrink), the split-mode **exchange volume**
-of the §11 plan-driven sparse collective — received x entries per shard,
+of the §12 plan-driven sparse collective — received x entries per shard,
 asserted equal to that shard's plan-time remote column count, vs the
 ``n_cols`` entries the old all_gather moved per device — and µs/call for
 the replicated, split and per-shard-tuned paths.  Absolute µs are CPU
@@ -67,7 +67,7 @@ def bench_one(family: str, n: int, mesh, axis: str, d: int,
     spill = _heuristic_spill(a)
     single = kops.make_plan(RgCSR.from_dense(a), chunks_per_step=2)
     sm = ShardedRgCSR.from_dense(a, n_shards=d)
-    # §11 per-shard tuning: every shard searches (cps, ordering, spill)
+    # §12 per-shard tuning: every shard searches (cps, ordering, spill)
     # over its own local-column block (what split-mode grouped storage
     # actually holds); the signature memo dedupes the light shards
     shard_results = autotune.autotune_spmv_per_shard(a, d, repeats=repeats,
@@ -126,7 +126,7 @@ def bench_one(family: str, n: int, mesh, axis: str, d: int,
             "steps_shrink_vs_single": round(
                 single.num_steps / max(steps_max * d, 1), 3),
             "remote_cols_per_shard": list(plan.shard_remote_cols),
-            # §11 sparse-collective exchange volume (all zeros when
+            # §12 sparse-collective exchange volume (all zeros when
             # replicated: that mode communicates nothing by construction)
             "exchange_recv_cols_per_shard": list(
                 plan.shard_exchange_recv_cols),
@@ -228,7 +228,7 @@ def main(argv=None) -> int:
             [r["sharded"]["adaptive_split"]["slots_shrink_vs_single"]
              for r in rows]),
         "max_remote_cols": int(max(remote)),
-        # §11 sparse collective: worst per-device exchange, and the factor
+        # §12 sparse collective: worst per-device exchange, and the factor
         # vs the n_cols·itemsize every device paid under the all_gather
         "max_exchange_bytes_per_shard": int(max(xchg_bytes)),
         "allgather_bytes_per_shard": int(

@@ -26,7 +26,7 @@ geomean, not the max, because per-matrix interpret-mode jitter is large.
 The **sharded** gate applies the same normalization to
 ``BENCH_spmv_sharded.json`` — each split/tuned variant's µs over the same
 run's ``block_replicated`` µs, compared per (matrix, variant) — and
-additionally gates the §11 sparse-collective **exchange volume**: the new
+additionally gates the §12 sparse-collective **exchange volume**: the new
 run must (a) satisfy the structural bound ``exchange_recv_cols ==
 remote_cols`` per shard, and (b) never move more exchange bytes per matrix
 than the baseline did (falling back to the baseline's remote-column counts
@@ -94,7 +94,7 @@ def _sharded_normalized(row: dict, label: str):
 def _exchange_bytes_total(row: dict):
     """Total exchange bytes a matrix's split path moves, from the newest
     metric available: exchange_bytes_per_shard, else remote_cols × 4 B
-    (pre-§11 baselines recorded the plan-time remote sets only — the
+    (pre-§12 baselines recorded the plan-time remote sets only — the
     sparse collective moves exactly those entries, so they are the bound)."""
     entry = row.get("sharded", {}).get("block_split")
     if entry is None:
@@ -183,10 +183,12 @@ def compare_serve(baseline: dict, new: dict):
         if base is None:
             continue
         # page metrics everywhere; overload adds the §6.4 preemption
-        # counters (both sides must carry a key for it to gate, so older
-        # baselines without the overload mix cannot flip this)
+        # counters and router_kill the §7 fault-tolerance counters (both
+        # sides must carry a key for it to gate, so older baselines
+        # without a mix cannot flip this)
         for key in ("page_high_water", "pages_per_token",
-                    "preemptions", "recompute_tokens", "rejected"):
+                    "preemptions", "recompute_tokens", "rejected",
+                    "migrations", "retries_exhausted", "shed"):
             old_v, new_v = base.get(key), paged.get(key)
             if old_v is not None and new_v is not None and new_v > old_v:
                 failures.append(

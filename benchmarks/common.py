@@ -65,7 +65,7 @@ def bench_corpus(small_only: bool = False) -> List[MatrixSpec]:
                   seeds=(0,))
 
 
-# the paper's small/large boundary, scaled with the corpus (DESIGN.md §9)
+# the paper's small/large boundary, scaled with the corpus (DESIGN.md §10)
 LARGE_BOUNDARY = 2048
 
 

@@ -6,7 +6,7 @@ Paper claims reproduced (relative behaviour):
   sense to use the Hybrid format for the small matrices").
 
 Statistics: min/max/avg measured SpMV throughput per set (complete /
-small / large, boundary scaled per DESIGN.md §9), plus the TPU-modeled
+small / large, boundary scaled per DESIGN.md §10), plus the TPU-modeled
 GFLOPS from each format's byte footprint.
 """
 from __future__ import annotations

@@ -3,7 +3,7 @@
 Paper claims reproduced:
 * descending row-length ordering is near-optimal for fill (paper: fd18
   2.76% → 0.34%, Raj1 938% → 189%),
-* the bandwidth-reducing ordering (paper: AMD; here: RCM, DESIGN.md §8)
+* the bandwidth-reducing ordering (paper: AMD; here: RCM, DESIGN.md §9)
   helps x-locality but pads more than descending,
 * ordering cannot rescue the dense-row pathologies (trans4 stays >1000%).
 """

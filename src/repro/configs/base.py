@@ -107,7 +107,7 @@ class ModelConfig:
     dtype: str = "bfloat16"            # compute dtype
     param_dtype: str = "float32"
     kv_cache_dtype: str = "bfloat16"   # int8 available (beyond-paper opt)
-    long_context_fallback: str = "window"  # full-attn archs at 500k (DESIGN §8)
+    long_context_fallback: str = "window"  # full-attn archs at 500k (DESIGN §9)
     fallback_window: int = 32_768
     remat: str = "none"                # none | full | dots  (set by trainer)
     # --- activation sharding (set by the launcher per mesh/cell) ---

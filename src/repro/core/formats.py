@@ -659,7 +659,7 @@ class SlicedEllpack:
 
 @_tree_dataclass
 class ShardedRgCSR:
-    """RgCSR partitioned by rows over a 1-D mesh axis (DESIGN.md §10).
+    """RgCSR partitioned by rows over a 1-D mesh axis (DESIGN.md §11).
 
     The canonical distributed-SpMV decomposition (Kreutzer et al.,
     arXiv:1112.5588): shard ``d`` owns the contiguous row block

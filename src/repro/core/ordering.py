@@ -10,7 +10,7 @@ The paper evaluates three orderings of the row index:
   (reverse Cuthill–McKee, via scipy) — the same role in the experiment: a
   bandwidth/profile-reducing symmetric permutation that improves x-reuse at
   the cost of more artificial zeros than descending.  The substitution is
-  recorded in DESIGN.md §8 and labeled in every benchmark table.
+  recorded in DESIGN.md §9 and labeled in every benchmark table.
 
 All orderings are host-side (numpy/scipy) — format construction time, exactly
 as in the paper.

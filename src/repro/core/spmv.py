@@ -211,7 +211,7 @@ def _sharded_dispatch(a: ShardedRgCSR, mesh, mesh_axis,
         raise ValueError(
             "ShardedRgCSR spmv/spmm needs mesh= (and usually mesh_axis=): "
             "the row shards execute under shard_map over a 1-D mesh axis "
-            "(DESIGN.md §10)")
+            "(DESIGN.md §11)")
     if mesh_axis is None:
         from repro.sharding import resolve_spmv_shard_axis
         mesh_axis = resolve_spmv_shard_axis(mesh)
@@ -239,7 +239,7 @@ def spmv(a: Matrix, x, *, impl: str = "auto", chunks_per_step: int = 1,
     restores the original row order.  Oracle paths ignore both knobs.
 
     :class:`ShardedRgCSR` matrices run the multi-device shard_map path
-    (DESIGN.md §10/§11): ``mesh`` is required, ``mesh_axis`` defaults to
+    (DESIGN.md §11/§12): ``mesh`` is required, ``mesh_axis`` defaults to
     the partitioner's ``sparse_rows`` rule, ``x_mode`` picks replicated-x
     vs the local/remote split with its plan-driven sparse exchange, and
     ``shard_configs`` (one ``(chunks_per_step, ordering, spill_threshold)``

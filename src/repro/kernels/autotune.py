@@ -321,7 +321,7 @@ def shard_row_blocks(dense: np.ndarray, n_shards: int,
 
     ``x_mode='split'`` additionally restricts each block to the shard's
     **local** column slice (padded to ``cols_per_shard``): split-mode
-    grouped storage holds only local-column entries (DESIGN.md §11.1 —
+    grouped storage holds only local-column entries (DESIGN.md §12.1 —
     remote entries ride the config-independent exchange tail), so that is
     the matrix the schedule knobs actually shape.
     """
@@ -351,7 +351,7 @@ def autotune_spmv_per_shard(dense: np.ndarray, n_shards: int, *,
                             x_mode: str = "replicated",
                             interpret: bool | None = None
                             ) -> Tuple[TuneResult, ...]:
-    """Tune each row shard independently (DESIGN.md §11).
+    """Tune each row shard independently (DESIGN.md §12).
 
     One global winner wastes the skewed case: the shard holding the heavy
     rows wants spill/adaptive while light shards want plain block cps>1
@@ -379,7 +379,7 @@ def autotune_spmv_per_shard(dense: np.ndarray, n_shards: int, *,
 
 
 def harmonize_shard_winners(results: Sequence[TuneResult]) -> list:
-    """Per-shard configs that *stack* well (DESIGN.md §11.2).
+    """Per-shard configs that *stack* well (DESIGN.md §12.2).
 
     Taking each shard's independent winner ignores the SPMD coupling: the
     kernel cps is the gcd of the per-shard cps values, every shard's step

@@ -492,7 +492,7 @@ def rgcsr_spmm(plan: RgCSRPlan, x, *, d_tile: int = LANES,
 
 
 # ---------------------------------------------------------------------------
-# Row-sharded multi-device SpMV/SpMM (DESIGN.md §10)
+# Row-sharded multi-device SpMV/SpMM (DESIGN.md §11)
 # ---------------------------------------------------------------------------
 
 
@@ -513,7 +513,7 @@ class ShardedRgCSRPlan:
     one static ``chunks_per_step``, per-shard winners are reconciled at the
     table level: each shard's layout is padded at its *own* winner
     granularity and its step table is expanded to the common kernel
-    ``chunks_per_step`` (the gcd of the winners — DESIGN.md §11).
+    ``chunks_per_step`` (the gcd of the winners — DESIGN.md §12).
 
     ``x_mode`` fixes how the dense vector is reconciled (arXiv:1112.5588's
     local/remote split):
@@ -522,7 +522,7 @@ class ShardedRgCSRPlan:
       Zero communication, D× x memory: the fast path while x fits.
     * ``'split'`` — x is row-sharded over the same axis
       (``cols_per_shard`` entries per device) and the exchange is a
-      plan-driven **sparse collective** (DESIGN.md §11): grouped storage
+      plan-driven **sparse collective** (DESIGN.md §12): grouped storage
       holds only the shard's *local*-column entries (columns remapped into
       ``[0, cols_per_shard)``), each shard's *remote* entries live in a COO
       remote tail (``rem_*``) indexed into the exchange receive buffer, and
@@ -1030,7 +1030,7 @@ def _build_sharded_exec(plan: ShardedRgCSRPlan, kind: str, mesh, axis: str,
         x_in = next(it)
         recv_flat = None
         if exchange:
-            # plan-driven sparse collective (DESIGN.md §11): move ONLY the
+            # plan-driven sparse collective (DESIGN.md §12): move ONLY the
             # remote x entries — each device sends its (D, e_max) schedule
             # rows, one all_to_all delivers recv[s] = what src s sent us.
             # Issued before the kernel, which reads only x_in: the two are

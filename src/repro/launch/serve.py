@@ -1,4 +1,5 @@
-"""Serving launcher: bring up the paged continuous-batching engine.
+"""Serving launcher: bring up the paged continuous-batching engine, or a
+fault-tolerant multi-replica router over it.
 
 Usage:
   python -m repro.launch.serve --arch granite-3-2b --smoke --requests 8 \
@@ -10,6 +11,24 @@ the queue via recompute preemption; --admission-policy worst_case restores
 FIFO deferral; --deadline-s puts a completion deadline on every request;
 --strict restores fail-stop serving (oversized requests raise).  The
 overload report prints per-status counts and the preemption counters.
+
+Multi-replica drills (DESIGN.md §7):
+  --replicas N      front N engine replicas (shared params, independent
+                    KV pools) with the health-checked Router: failover
+                    migrates in-flight requests off faulted replicas,
+                    re-prefilling prompt + generated prefix on survivors.
+  --router-queue K  bound the router queue at K waiting requests;
+                    over-capacity arrivals are shed (status="shed")
+                    instead of queueing unboundedly.  0 = unbounded.
+  --retry-budget R  per-request migration budget AND per-replica restart
+                    budget (FaultConfig.max_restarts).
+  --drain I         drain replica I after the first scheduling round:
+                    stop admitting to it, let residents finish, recycle
+                    it with a fresh session (planned maintenance).
+  --kill-replica I --kill-at-step K
+                    inject a replica-tier fault (FaultInjector site
+                    "replica") on replica I's K-th decode step — the
+                    failover drill the router bench and tests run.
 """
 import argparse
 import time
@@ -41,7 +60,7 @@ def main(argv=None):
                          "and defer admissions (PR 5 behavior)")
     ap.add_argument("--deadline-s", type=float, default=0.0,
                     help="per-request completion deadline in seconds from "
-                         "serve() entry; 0 = none")
+                         "the request's arrival; 0 = none")
     ap.add_argument("--strict", action="store_true",
                     help="fail-stop: oversized requests / mid-request "
                          "faults raise out of serve() instead of failing "
@@ -49,19 +68,38 @@ def main(argv=None):
     ap.add_argument("--straggler-factor", type=float, default=2.0,
                     help="watchdog: flag decode steps slower than this "
                          "factor times the EWMA step time")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the router; 1 = single "
+                         "engine, no router (DESIGN.md §7)")
+    ap.add_argument("--router-queue", type=int, default=0,
+                    help="router queue bound; arrivals beyond it are shed "
+                         "(status=\"shed\"); 0 = unbounded")
+    ap.add_argument("--retry-budget", type=int, default=3,
+                    help="per-request migration / per-replica restart "
+                         "budget (FaultConfig.max_restarts)")
+    ap.add_argument("--drain", type=int, default=-1, metavar="REPLICA",
+                    help="drain this replica index after the first round "
+                         "(finish residents, recycle); -1 = off")
+    ap.add_argument("--kill-replica", type=int, default=-1,
+                    help="inject a replica-tier fault on this replica "
+                         "index (failover drill); -1 = off")
+    ap.add_argument("--kill-at-step", type=int, default=2,
+                    help="decode step of the injected replica fault")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, get_smoke
-    from repro.serve import Engine, Request, ServeConfig
-    from repro.train.fault import FaultConfig
+    from repro.serve import Engine, Request, Router, RouterConfig, \
+        ServeConfig
+    from repro.train.fault import FaultConfig, FaultInjector
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    eng = Engine(cfg, ServeConfig(
+    scfg = ServeConfig(
         max_seq=args.max_seq, n_slots=args.slots, kv_layout=args.kv_layout,
         page_size=args.page_size, n_pages=args.n_pages,
         admission_policy=args.admission_policy, strict=args.strict,
-        deadline_s=args.deadline_s),
-        fault_cfg=FaultConfig(straggler_factor=args.straggler_factor))
+        deadline_s=args.deadline_s)
+    fault_cfg = FaultConfig(straggler_factor=args.straggler_factor,
+                            max_restarts=args.retry_budget)
     rng = np.random.default_rng(0)
     lengths = [16] * args.requests
     if args.mixed_lengths:
@@ -71,20 +109,43 @@ def main(argv=None):
     reqs = [Request(tokens=rng.integers(0, cfg.vocab, (ln,)).astype(np.int32),
                     max_new_tokens=args.max_new)
             for ln in lengths]
-    t0 = time.time()
-    done = eng.serve(reqs)
-    dt = time.time() - t0
+
+    if args.replicas > 1:
+        first = Engine(cfg, scfg, fault_cfg=fault_cfg)
+        engines = [first] + [Engine(cfg, scfg, params=first.params,
+                                    fault_cfg=fault_cfg)
+                             for _ in range(args.replicas - 1)]
+        if 0 <= args.kill_replica < len(engines):
+            engines[args.kill_replica].fault_injector = FaultInjector(
+                fail_at_steps=(("replica", args.kill_at_step),))
+        router = Router(engines, cfg=RouterConfig(
+            n_replicas=args.replicas, queue_limit=args.router_queue),
+            fault_cfg=fault_cfg)
+        t0 = time.time()
+        for r in reqs:
+            router.submit(r)
+        router.run_round()
+        if 0 <= args.drain < len(engines):
+            router.drain_replica(args.drain)
+        while not router.idle:
+            router.run_round()
+        dt = time.time() - t0
+        done = reqs
+        ps = router.stats()
+    else:
+        eng = Engine(cfg, scfg, fault_cfg=fault_cfg)
+        t0 = time.time()
+        done = eng.serve(reqs)
+        dt = time.time() - t0
+        ps = eng.paging_stats
+
     total = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests / {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s); all done: {all(r.done for r in done)}")
     by_status = Counter(r.status for r in done)
     print("request status:", dict(sorted(by_status.items())))
-    ps = eng.paging_stats
     if ps and ps.get("kv_layout") == "paged":
-        print(f"paging: high-water {ps['page_high_water']} pages "
-              f"({ps['paged_peak_tokens']} tokens; dense layout pins "
-              f"{ps['dense_equiv_tokens']}), fragmentation at peak "
-              f"{ps['frag_at_high_water']:.3f}, "
+        print(f"paging: high-water {ps['page_high_water']} pages, "
               f"{ps['admission_deferrals']} admission deferrals")
         print(f"overload: policy {ps['admission_policy']}, "
               f"{ps['preemptions']} preemptions "
@@ -93,6 +154,15 @@ def main(argv=None):
               f"{ps['rejected']} rejected, {ps['failed']} failed, "
               f"{ps['timed_out']} timed out, "
               f"{ps['straggler_decode_steps']} straggler decode steps")
+    if args.replicas > 1:
+        print(f"router: {ps['n_replicas']} replicas "
+              f"{ps['replica_states']}, per-replica page high-water "
+              f"{ps.get('page_high_water_per_replica')}, "
+              f"{ps['migrations']} migrations, "
+              f"{ps['replica_faults']} replica faults / "
+              f"{ps['replica_restarts']} restarts, "
+              f"{ps['retries_exhausted']} retry-budget exhaustions, "
+              f"{ps['shed']} shed, {ps['drains']} drains")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 
 Both are the *sub-quadratic* archs of the assignment: decode state is O(1) in
 sequence length, which is what makes the ``long_500k`` cell natively runnable
-(DESIGN.md §8).
+(DESIGN.md §9).
 
 Mamba-2 uses the SSD (state-space duality) chunked algorithm [arXiv:2405.21060]:
 intra-chunk attention-like matmuls + an inter-chunk state scan — matmul-heavy

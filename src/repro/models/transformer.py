@@ -79,7 +79,7 @@ def _effective_window(cfg, kind: str, shape_kind: str) -> Optional[int]:
     if kind == "attn_local":
         return cfg.window
     if shape_kind == "long_decode" and not cfg.is_subquadratic:
-        # DESIGN.md §8: full-attention archs fall back to a sliding window
+        # DESIGN.md §9: full-attention archs fall back to a sliding window
         # at 500k (recorded as `fallback` in every table row).
         return cfg.fallback_window
     return None

@@ -1,6 +1,9 @@
 """Serving: batched prefill/decode engine with continuous mixed-length
-batching over a paged KV cache (DESIGN.md §6)."""
+batching over a paged KV cache (DESIGN.md §6), fronted by a fault-tolerant
+multi-replica router (DESIGN.md §7)."""
 from repro.serve import paging  # noqa: F401
-from repro.serve.engine import Engine, Request, ServeConfig  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    Engine, EngineSession, Request, ServeConfig)
 from repro.serve.paging import (  # noqa: F401
     PageAllocator, PageGeometry, PoolExhausted)
+from repro.serve.router import Replica, Router, RouterConfig  # noqa: F401

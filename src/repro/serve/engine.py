@@ -42,7 +42,7 @@ import numpy as np
 from repro.models import LanguageModel
 from repro.serve import paging
 
-__all__ = ["ServeConfig", "Engine", "Request"]
+__all__ = ["ServeConfig", "Engine", "EngineSession", "Request"]
 
 
 @dataclasses.dataclass
@@ -76,8 +76,8 @@ class ServeConfig:
 class Request:
     """One serving request.
 
-    Terminal state (set by ``serve``): ``done`` flips True exactly once,
-    and ``status`` says how the request ended —
+    Terminal state (set by ``serve``/the router): ``done`` flips True
+    exactly once, and ``status`` says how the request ended —
 
     * ``"ok"``            — completed normally;
     * ``"preempted_<n>"`` — completed normally after ``n`` recompute
@@ -85,24 +85,35 @@ class Request:
     * ``"rejected"``      — refused at admission (budget overflows
       ``max_seq``, or its worst-case page count exceeds the whole pool);
     * ``"failed"``        — a mid-request exception (prefill/decode fault)
-      killed this request; the rest of the batch kept serving;
+      killed this request, or a router-migrated request exhausted its
+      retry budget; the rest of the batch kept serving;
     * ``"timed_out"``     — its ``deadline_s`` passed (queued or
-      mid-decode); partial output is kept in ``out``.
+      mid-decode); partial output is kept in ``out``;
+    * ``"shed"``          — refused at the router's door: the bounded
+      router queue was full (backpressure, DESIGN.md §7) — the request
+      never reached an engine.
 
-    ``error`` carries the reason for the three failure statuses.
+    ``error`` carries the reason for the failure statuses.
     ``deadline_s`` is a completion deadline in seconds measured from the
-    ``serve()`` call's entry (it bounds queue wait + processing; ``None``
-    falls back to ``ServeConfig.deadline_s``).
+    request's **arrival** — the moment it was submitted to a session or
+    router (``arrival_t``; batch-submitted ``serve()`` requests arrive at
+    call entry, keeping the original semantics).  It bounds queue wait +
+    processing and keeps running across router migrations; ``None`` falls
+    back to ``ServeConfig.deadline_s``.
+
+    ``retries`` counts router migrations of this request off faulted
+    replicas (bounded by the router's ``FaultConfig.max_restarts``).
 
     Timing fields (all seconds, set by ``serve``):
 
-    * ``queue_s``   — time from ``serve()`` entry until this request was
-      first slotted (head-of-line wait).
+    * ``queue_s``   — time from arrival until this request was first
+      slotted (head-of-line wait).
     * ``prefill_s`` — its own (first) prefill forward duration.
     * ``latency_s`` — end-to-end latency measured from *this request's own
-      processing start* (first slotting) to its completion — NOT from the
-      start of the whole serve call, which would bill earlier requests'
-      work to late-slotted ones.
+      processing start* (first slotting; re-measured from re-slotting
+      after a router migration) to its completion — NOT from the start of
+      the whole serve call, which would bill earlier requests' work to
+      late-slotted ones.
     """
     tokens: np.ndarray                  # (prompt_len,) int32
     max_new_tokens: int = 32
@@ -112,6 +123,8 @@ class Request:
     status: str = "ok"
     error: Optional[str] = None
     preemptions: int = 0
+    retries: int = 0
+    arrival_t: Optional[float] = None
     latency_s: float = 0.0
     queue_s: float = 0.0
     prefill_s: float = 0.0
@@ -203,7 +216,7 @@ class Engine:
         With ``mesh`` set, each matrix is additionally row-sharded over the
         resolved mesh axis (``mesh_axis`` or the partitioner's
         ``sparse_rows`` rule) and, with ``per_shard_tune`` (the default),
-        **each shard is tuned independently** (DESIGN.md §11,
+        **each shard is tuned independently** (DESIGN.md §12,
         ``autotune.autotune_spmv_per_shard``): the heavy shard of a skewed
         matrix gets spill/adaptive while light shards keep plain block
         cps>1, all at the global winner's ``group_size`` so the stacked
@@ -212,7 +225,7 @@ class Engine:
         the shard/device count, so re-warming on a resized mesh builds a
         fresh plan instead of reusing a stale stacked one.  Per-matrix
         shard stats (slots, steps, remote columns, exchange volume per the
-        §11 sparse-collective schedule, per-shard winner configs) land in
+        §12 sparse-collective schedule, per-shard winner configs) land in
         ``sharded_spmv_shard_stats``.  The sharded matrices are retained
         on the engine so the cache entries survive warmup.
         """
@@ -329,17 +342,38 @@ class Engine:
         return np.asarray(jnp.concatenate(outs, axis=1))
 
     # ------------------------------------------------- continuous batching
+    def start_session(self, requests: Optional[List[Request]] = None,
+                      fault_injector=None) -> "EngineSession":
+        """Open a reentrant serving session (DESIGN.md §7).
+
+        The returned :class:`EngineSession` owns the decode batch, page
+        allocator, and request queue, and hands control back to the host
+        between decode steps: ``submit()`` enqueues requests at any time,
+        ``step(k)`` runs up to ``k`` decode steps (admissions, deadline
+        sweeps, and completions happen at the step boundaries), and
+        ``drain()`` runs to quiescence.  ``serve()`` below is the thin
+        blocking wrapper; a :class:`~repro.serve.router.Router` interleaves
+        many sessions — one per replica — through this interface.  The
+        "run K steps, then sync host state" cadence is also the shape the
+        ROADMAP's on-device ``lax.while_loop`` decode body slots into: the
+        host side of this session is already written against it.
+        """
+        injector = fault_injector if fault_injector is not None \
+            else self.fault_injector
+        return EngineSession(self, requests or [], injector)
+
     def serve(self, requests: List[Request],
               fault_injector=None) -> List[Request]:
         """Continuous mixed-length batching over a request queue.
 
-        Slots share one jit'd decode over the fixed batch; prefill is
-        per-request (batch 1) and its cache is committed into the slot —
-        page-pool scatter for paged layers, slot-axis splice for rings /
-        recurrent state / dense mode (``serve/paging.commit_prefill``).
-        Finished slots immediately pull the next queued request — no
-        head-of-line blocking on long generations, no drain barriers, no
-        cache resets.
+        Thin blocking wrapper over :meth:`start_session` +
+        :meth:`EngineSession.drain`.  Slots share one jit'd decode over
+        the fixed batch; prefill is per-request (batch 1) and its cache is
+        committed into the slot — page-pool scatter for paged layers,
+        slot-axis splice for rings / recurrent state / dense mode
+        (``serve/paging.commit_prefill``).  Finished slots immediately
+        pull the next queued request — no head-of-line blocking on long
+        generations, no drain barriers, no cache resets.
 
         Semantics:
 
@@ -369,11 +403,17 @@ class Engine:
           slot/pages while the rest of the batch keeps serving.  A
           :class:`~repro.train.fault.FaultInjector` (argument, or the
           engine's ``fault_injector``) is consulted at the per-request
-          prefill and token-commit sites;
+          prefill and token-commit sites.  The injector's ``"replica"``
+          site is the exception: it models a whole-engine fault (node
+          loss) and raises out of ``step()``/``serve()`` regardless of
+          ``strict`` — the router catches it and migrates the session's
+          in-flight requests to surviving replicas (DESIGN.md §7);
         * deadlines: a request whose ``deadline_s`` (or the config
-          default) elapses — measured from serve() entry, so queue wait
-          counts — is timed out at the next decode boundary (or while
-          still queued), keeping its partial ``out``;
+          default) elapses — measured from its **arrival**
+          (``Request.arrival_t``; for batch-submitted calls like this one,
+          serve() entry), so queue wait counts — is timed out at the next
+          decode boundary (or while still queued), keeping its partial
+          ``out``;
         * a request whose first (prefill-sampled) token is EOS, or whose
           ``max_new_tokens <= 1``, completes immediately without spending
           decode steps, a slot, or pages;
@@ -388,276 +428,413 @@ class Engine:
           steps flagged by a :class:`~repro.train.fault.Watchdog` over
           ``self.fault_cfg``.
         """
+        session = self.start_session(requests, fault_injector)
+        session.drain()
+        self.paging_stats = session.stats_snapshot()
+        return requests
+
+
+class EngineSession:
+    """Reentrant serving stepper over one :class:`Engine` (DESIGN.md §7).
+
+    Holds everything ``Engine.serve`` used to keep as loop locals — the
+    decode batch, page allocator, request queue, per-slot bookkeeping, and
+    stats — so the host can run ``step(k)`` decode steps, regain control,
+    and interleave other work (other replicas, admissions, I/O) between
+    bursts.  All the §6 serving semantics (recompute preemption,
+    per-request fault isolation, deadlines, prefill-EOS fast path) live
+    here unchanged; ``Engine.serve`` is a ``drain()`` around this class.
+
+    Faults split into two tiers:
+
+    * **request tier** — prefill/decode-site injections and real
+      exceptions in a request's prefill fail only that request
+      (``strict=False``), exactly as before;
+    * **replica tier** — an injected ``("replica", k)`` fault (checked
+      once per decode step, ``k`` = this session's decode-step count) or
+      any exception escaping the decode dispatch itself raises out of
+      ``step()``: the whole session is presumed lost.  The router
+      harvests ``inflight()`` (generated prefixes intact in ``out``) and
+      re-prefills them on surviving replicas — the same prompt+prefix
+      recompute path preemption uses, so migrated streams stay
+      oracle-identical.
+    """
+
+    def __init__(self, engine: Engine, requests: List[Request],
+                 injector=None):
         from repro.train.fault import Watchdog
-        cfg = self.cfg
-        n = cfg.n_slots
-        paged = cfg.kv_layout == "paged"
-        strict = cfg.strict
-        clock = self.clock
-        injector = fault_injector if fault_injector is not None \
-            else self.fault_injector
-        geom = alloc = None
-        if paged:
-            geom = paging.geometry(cfg.max_seq, cfg.page_size, n,
-                                   cfg.n_pages)
-            alloc = paging.PageAllocator(geom, n,
-                                         policy=cfg.admission_policy)
-        caches = self.model.init_cache(n, cfg.max_seq, paging=geom)
-        queue = deque(requests)
-        active: List[Optional[Request]] = [None] * n
-        remaining = [0] * n
-        pos = [0] * n                       # tokens resident per slot
-        admit_seq = [-1] * n                # admission order per slot
-        seq_counter = 0
-        started: Dict[int, float] = {}      # id(req) → first slotting time
-        cur_tok = jnp.zeros((n, 1), jnp.int32)
-        t_start = clock()
-        watchdog = Watchdog(self.fault_cfg)
-        prefill_count = 0                   # prefill site index (injector)
-        stats = {"decode_steps": 0, "admission_deferrals": 0,
-                 "peak_live_tokens": 0, "frag_at_high_water": 0.0,
-                 "requests": len(requests), "completed": 0,
-                 "preemptions": 0, "recompute_tokens": 0,
-                 "rejected": 0, "failed": 0, "timed_out": 0}
+        self.engine = engine
+        cfg = engine.cfg
+        self.cfg = cfg
+        self.n = cfg.n_slots
+        self.paged = cfg.kv_layout == "paged"
+        self.strict = cfg.strict
+        self.clock = engine.clock
+        self.injector = injector
+        self.geom = self.alloc = None
+        if self.paged:
+            self.geom = paging.geometry(cfg.max_seq, cfg.page_size, self.n,
+                                        cfg.n_pages)
+            self.alloc = paging.PageAllocator(self.geom, self.n,
+                                              policy=cfg.admission_policy)
+        self.caches = engine.model.init_cache(self.n, cfg.max_seq,
+                                              paging=self.geom)
+        self.queue: deque = deque()
+        self.active: List[Optional[Request]] = [None] * self.n
+        self.remaining = [0] * self.n
+        self.pos = [0] * self.n             # tokens resident per slot
+        self.admit_seq = [-1] * self.n      # admission order per slot
+        self.seq_counter = 0
+        self.started: Dict[int, float] = {}  # id(req) → first slotting time
+        self.cur_tok = jnp.zeros((self.n, 1), jnp.int32)
+        self.t_start = self.clock()
+        self.watchdog = Watchdog(engine.fault_cfg)
+        self.prefill_count = 0              # prefill site index (injector)
+        self.stats = {"decode_steps": 0, "admission_deferrals": 0,
+                      "peak_live_tokens": 0, "frag_at_high_water": 0.0,
+                      "requests": 0, "completed": 0,
+                      "preemptions": 0, "recompute_tokens": 0,
+                      "rejected": 0, "failed": 0, "timed_out": 0}
+        for req in requests:
+            self.submit(req)
 
-        def deadline_expired(req: Request, now: float) -> bool:
-            d = req.deadline_s if req.deadline_s is not None else \
-                (cfg.deadline_s if cfg.deadline_s > 0 else None)
-            return d is not None and (now - t_start) > d
+    # ------------------------------------------------------------ queries
+    @property
+    def idle(self) -> bool:
+        """No queued and no resident work."""
+        return not self.queue and all(a is None for a in self.active)
 
-        def finish_ok(req: Request) -> None:
-            req.done = True
-            req.status = "ok" if req.preemptions == 0 \
-                else f"preempted_{req.preemptions}"
-            req.latency_s = clock() - started[id(req)]
-            stats["completed"] += 1
+    @property
+    def num_queued(self) -> int:
+        return len(self.queue)
 
-        def finish_bad(req: Request, status: str, error: str,
-                       slot: Optional[int] = None) -> None:
-            """Terminal failure for ONE request: record status/error, free
-            its slot and pages, leave everyone else serving."""
-            req.done = True
-            req.status = status
-            req.error = error
-            if req.out is None:
-                req.out = []
-            if id(req) in started:
-                req.latency_s = clock() - started[id(req)]
-            stats[status] += 1
-            if slot is not None:
-                active[slot] = None
-                if paged:
-                    alloc.release(slot)
+    @property
+    def num_active(self) -> int:
+        return sum(a is not None for a in self.active)
 
-        def preempt_victim() -> int:
-            """Recompute-preempt the latest-admitted (fewest tokens
-            generated) active slot: free its pages, re-enqueue the request
-            at the queue HEAD with its generated prefix kept in ``out`` —
-            re-admission prefills prompt+prefix and resumes sampling where
-            it left off.  Returns the victim slot."""
-            victim = max((s for s in range(n) if active[s] is not None),
-                         key=lambda s: (admit_seq[s], -len(active[s].out)))
-            req = active[victim]
-            req.preemptions += 1
-            req.status = f"preempted_{req.preemptions}"
-            stats["preemptions"] += 1
-            stats["recompute_tokens"] += pos[victim]
-            active[victim] = None
-            alloc.release(victim, evicted=True)
-            # FIFO: the victim was admitted before anything still queued
-            # (later evictions are earlier admissions — appendleft keeps
-            # them ordered ahead of this one)
-            queue.appendleft(req)
-            return victim
+    @property
+    def has_free_slot(self) -> bool:
+        return any(a is None for a in self.active)
 
-        while queue or any(a is not None for a in active):
-            # fill free slots; a request finishing at prefill (EOS as its
-            # first token, or an exhausted budget) completes without ever
-            # occupying the slot, so the next queued request slots in
-            deferred = False
-            for slot in range(n):
-                while active[slot] is None and queue and not deferred:
-                    req = queue[0]
-                    now = clock()
-                    if deadline_expired(req, now):
-                        queue.popleft()
-                        started.setdefault(id(req), now)
-                        req.queue_s = now - t_start
-                        finish_bad(req, "timed_out",
-                                   "deadline exceeded after "
-                                   f"{now - t_start:.3f}s in queue")
-                        continue
-                    prefix = req.out or []      # preempted: generated so far
-                    length = len(req.tokens) + len(prefix)
-                    budget = max(req.max_new_tokens, 1) - len(prefix)
-                    # max resident tokens: the last decode step has written
-                    # length + max_new - 1 of them (the final sampled token
-                    # never enters the cache) — preemption never raises it
-                    max_resident = len(req.tokens) \
-                        + max(req.max_new_tokens, 1) - 1
-                    if max_resident > cfg.max_seq:
-                        msg = (f"request needs {max_resident} cache "
-                               f"positions (prompt {len(req.tokens)} + "
-                               f"max_new_tokens {req.max_new_tokens} - 1) "
-                               f"but max_seq is {cfg.max_seq}")
-                        if strict:
+    @property
+    def free_pages(self) -> int:
+        """Routing signal: free pages in this session's pool (dense
+        sessions report free slots — the analogous capacity unit)."""
+        if self.alloc is not None:
+            return self.alloc.free_pages
+        return sum(a is None for a in self.active)
+
+    def inflight(self) -> List[Request]:
+        """Undone requests this session owns, FIFO: resident slots in
+        admission order, then the queue.  This is what a router migrates
+        when the replica dies — each request's generated prefix is in
+        ``out``, so re-admission elsewhere resumes it exactly."""
+        resident = sorted((s for s in range(self.n)
+                           if self.active[s] is not None),
+                          key=lambda s: self.admit_seq[s])
+        return [self.active[s] for s in resident] + \
+            [r for r in self.queue if not r.done]
+
+    # ---------------------------------------------------------- lifecycle
+    def submit(self, req: Request, front: bool = False) -> None:
+        """Enqueue a request (``front=True``: ahead of the line — used for
+        preemption re-entry and router migrations).  Stamps ``arrival_t``
+        on first submission; a migrated request keeps its original arrival
+        so its deadline keeps running across replicas."""
+        if req.arrival_t is None:
+            req.arrival_t = self.clock()
+        self.stats["requests"] += 1
+        if front:
+            self.queue.appendleft(req)
+        else:
+            self.queue.append(req)
+
+    def _deadline_expired(self, req: Request, now: float) -> bool:
+        d = req.deadline_s if req.deadline_s is not None else \
+            (self.cfg.deadline_s if self.cfg.deadline_s > 0 else None)
+        return d is not None and (now - req.arrival_t) > d
+
+    def _finish_ok(self, req: Request) -> None:
+        req.done = True
+        req.status = "ok" if req.preemptions == 0 \
+            else f"preempted_{req.preemptions}"
+        req.latency_s = self.clock() - self.started[id(req)]
+        self.stats["completed"] += 1
+
+    def _finish_bad(self, req: Request, status: str, error: str,
+                    slot: Optional[int] = None) -> None:
+        """Terminal failure for ONE request: record status/error, free
+        its slot and pages, leave everyone else serving."""
+        req.done = True
+        req.status = status
+        req.error = error
+        if req.out is None:
+            req.out = []
+        if id(req) in self.started:
+            req.latency_s = self.clock() - self.started[id(req)]
+        self.stats[status] += 1
+        if slot is not None:
+            self.active[slot] = None
+            if self.paged:
+                self.alloc.release(slot)
+
+    def _preempt_victim(self) -> int:
+        """Recompute-preempt the latest-admitted (fewest tokens
+        generated) active slot: free its pages, re-enqueue the request
+        at the queue HEAD with its generated prefix kept in ``out`` —
+        re-admission prefills prompt+prefix and resumes sampling where
+        it left off.  Returns the victim slot."""
+        victim = max((s for s in range(self.n)
+                      if self.active[s] is not None),
+                     key=lambda s: (self.admit_seq[s],
+                                    -len(self.active[s].out)))
+        req = self.active[victim]
+        req.preemptions += 1
+        req.status = f"preempted_{req.preemptions}"
+        self.stats["preemptions"] += 1
+        self.stats["recompute_tokens"] += self.pos[victim]
+        self.active[victim] = None
+        self.alloc.release(victim, evicted=True)
+        # FIFO: the victim was admitted before anything still queued
+        # (later evictions are earlier admissions — appendleft keeps
+        # them ordered ahead of this one)
+        self.queue.appendleft(req)
+        return victim
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue; a request finishing at prefill
+        (EOS as its first token, or an exhausted budget) completes without
+        ever occupying the slot, so the next queued request slots in."""
+        cfg, alloc = self.cfg, self.alloc
+        deferred = False
+        for slot in range(self.n):
+            while self.active[slot] is None and self.queue and not deferred:
+                req = self.queue[0]
+                now = self.clock()
+                if self._deadline_expired(req, now):
+                    self.queue.popleft()
+                    self.started.setdefault(id(req), now)
+                    req.queue_s = now - req.arrival_t
+                    self._finish_bad(req, "timed_out",
+                                     "deadline exceeded after "
+                                     f"{now - req.arrival_t:.3f}s in queue")
+                    continue
+                prefix = req.out or []      # preempted: generated so far
+                length = len(req.tokens) + len(prefix)
+                budget = max(req.max_new_tokens, 1) - len(prefix)
+                # max resident tokens: the last decode step has written
+                # length + max_new - 1 of them (the final sampled token
+                # never enters the cache) — preemption never raises it
+                max_resident = len(req.tokens) \
+                    + max(req.max_new_tokens, 1) - 1
+                if max_resident > cfg.max_seq:
+                    msg = (f"request needs {max_resident} cache "
+                           f"positions (prompt {len(req.tokens)} + "
+                           f"max_new_tokens {req.max_new_tokens} - 1) "
+                           f"but max_seq is {cfg.max_seq}")
+                    if self.strict:
+                        raise ValueError(msg)
+                    self.queue.popleft()
+                    self._finish_bad(req, "rejected", msg)
+                    continue
+                worst = 0
+                if self.paged:
+                    worst = alloc.pages_for(max_resident)
+                    if worst > alloc.usable:
+                        msg = (f"request needs up to {worst} pages but "
+                               f"the pool has {alloc.usable}: raise "
+                               f"n_pages or lower max_new_tokens")
+                        if self.strict:
                             raise ValueError(msg)
-                        queue.popleft()
-                        finish_bad(req, "rejected", msg)
+                        self.queue.popleft()
+                        self._finish_bad(req, "rejected", msg)
                         continue
-                    worst = 0
-                    if paged:
-                        worst = alloc.pages_for(max_resident)
-                        if worst > alloc.usable:
-                            msg = (f"request needs up to {worst} pages but "
-                                   f"the pool has {alloc.usable}: raise "
-                                   f"n_pages or lower max_new_tokens")
-                            if strict:
-                                raise ValueError(msg)
-                            queue.popleft()
-                            finish_bad(req, "rejected", msg)
-                            continue
-                        if not alloc.can_admit(
-                                alloc.admission_pages(length, worst)):
-                            # FIFO: don't let shorter later requests starve
-                            # the head — stop admitting until pages free
-                            stats["admission_deferrals"] += 1
-                            deferred = True
-                            break
-                    queue.popleft()
-                    t0 = clock()
-                    if id(req) not in started:
-                        started[id(req)] = t0
-                        req.queue_s = t0 - t_start
-                    tokens = req.tokens if not prefix else np.concatenate(
-                        [np.asarray(req.tokens, np.int32),
-                         np.asarray(prefix, np.int32)])
-                    site = prefill_count
-                    prefill_count += 1
-                    try:
-                        if injector is not None:
-                            injector.check(site, site="prefill")
-                        logits, slot_cache = self._prefill(
-                            self.params,
-                            {"tokens": jnp.asarray(tokens[None, :],
-                                                   jnp.int32)})
-                        first = int(self._sample(logits)[0])
-                    except Exception as e:  # noqa: BLE001 — isolate request
-                        if strict:
-                            raise
-                        finish_bad(req, "failed", repr(e))
-                        continue
-                    if req.out is None:
-                        req.out = []
-                    req.out.append(first)
-                    if not prefix:
-                        req.prefill_s = clock() - t0
-                    if first == cfg.eos_id or budget <= 1:
-                        finish_ok(req)
-                        continue
-                    if paged:
-                        alloc.admit(slot, length, worst)
-                        caches = paging.commit_prefill(
-                            caches, slot_cache, slot, length, alloc.table,
-                            geom.page_size)
-                    else:
-                        caches = paging.commit_prefill(
-                            caches, slot_cache, slot, length)
-                    active[slot] = req
-                    admit_seq[slot] = seq_counter
-                    seq_counter += 1
-                    remaining[slot] = budget - 1
-                    pos[slot] = length
-                    cur_tok = cur_tok.at[slot, 0].set(first)
-            if all(a is None for a in active):
-                if queue:
+                    if not alloc.can_admit(
+                            alloc.admission_pages(length, worst)):
+                        # FIFO: don't let shorter later requests starve
+                        # the head — stop admitting until pages free
+                        self.stats["admission_deferrals"] += 1
+                        deferred = True
+                        break
+                self.queue.popleft()
+                t0 = self.clock()
+                if id(req) not in self.started:
+                    self.started[id(req)] = t0
+                    req.queue_s = t0 - req.arrival_t
+                tokens = req.tokens if not prefix else np.concatenate(
+                    [np.asarray(req.tokens, np.int32),
+                     np.asarray(prefix, np.int32)])
+                site = self.prefill_count
+                self.prefill_count += 1
+                try:
+                    if self.injector is not None:
+                        self.injector.check(site, site="prefill")
+                    logits, slot_cache = self.engine._prefill(
+                        self.engine.params,
+                        {"tokens": jnp.asarray(tokens[None, :],
+                                               jnp.int32)})
+                    first = int(self.engine._sample(logits)[0])
+                except Exception as e:  # noqa: BLE001 — isolate request
+                    if self.strict:
+                        raise
+                    self._finish_bad(req, "failed", repr(e))
+                    continue
+                if req.out is None:
+                    req.out = []
+                req.out.append(first)
+                if not prefix:
+                    req.prefill_s = self.clock() - t0
+                if first == cfg.eos_id or budget <= 1:
+                    self._finish_ok(req)
+                    continue
+                if self.paged:
+                    alloc.admit(slot, length, worst)
+                    self.caches = paging.commit_prefill(
+                        self.caches, slot_cache, slot, length, alloc.table,
+                        self.geom.page_size)
+                else:
+                    self.caches = paging.commit_prefill(
+                        self.caches, slot_cache, slot, length)
+                self.active[slot] = req
+                self.admit_seq[slot] = self.seq_counter
+                self.seq_counter += 1
+                self.remaining[slot] = budget - 1
+                self.pos[slot] = length
+                self.cur_tok = self.cur_tok.at[slot, 0].set(first)
+
+    def _sweep_deadlines(self) -> None:
+        """Decode-boundary deadline sweep: expired slots free their pages
+        before anyone is preempted for space."""
+        now = self.clock()
+        for slot in range(self.n):
+            req = self.active[slot]
+            if req is not None and self._deadline_expired(req, now):
+                self._finish_bad(req, "timed_out",
+                                 "deadline exceeded after "
+                                 f"{now - req.arrival_t:.3f}s with "
+                                 f"{len(req.out)} tokens", slot=slot)
+
+    def _ensure_pages(self) -> None:
+        """This decode step writes each active slot's token at position
+        ``pos[slot]`` — allocate boundary pages up front, earliest-
+        admitted first.  worst_case policy: always succeeds under the
+        reservation invariant.  prompt policy: pool exhaustion preempts
+        the latest-admitted slot (possibly the requester itself) and
+        retries — the earliest active slot can always make progress,
+        since alone it fits by the worst-case-vs-pool admission check."""
+        alloc = self.alloc
+        changed = False
+        order = sorted((s for s in range(self.n)
+                        if self.active[s] is not None),
+                       key=lambda s: self.admit_seq[s])
+        for slot in order:
+            if self.active[slot] is None:
+                continue                 # evicted as a victim below
+            while True:
+                try:
+                    changed |= alloc.ensure(slot, self.pos[slot] + 1)
+                    break
+                except paging.PoolExhausted:
+                    victim = self._preempt_victim()
+                    changed = True       # victim's table row went null
+                    if victim == slot:
+                        break            # requester evicted itself
+        if changed:
+            self.caches = paging.sync_block_tables(self.caches, alloc.table)
+
+    def step(self, max_steps: int = 1) -> int:
+        """Run up to ``max_steps`` decode steps; returns how many ran.
+
+        Each step: admit from the queue, sweep deadlines, grow/preempt
+        pages, one jit'd decode over the batch, commit sampled tokens,
+        release completed slots — then control returns to the caller.
+        Admission-only iterations (heads rejected / timed out / finished
+        at prefill) don't count against ``max_steps``.  A replica-tier
+        fault (see class docstring) raises out of this method with the
+        session state intact for ``inflight()`` harvesting.
+        """
+        cfg = self.cfg
+        ran = 0
+        while ran < max_steps and (
+                self.queue or any(a is not None for a in self.active)):
+            self._admit()
+            if all(a is None for a in self.active):
+                if self.queue:
                     continue     # heads were rejected/timed out — refill
                 break            # the fill loop drained the queue
-            # deadline sweep at the decode boundary: expired slots free
-            # their pages before anyone is preempted for space
-            now = clock()
-            for slot in range(n):
-                req = active[slot]
-                if req is not None and deadline_expired(req, now):
-                    finish_bad(req, "timed_out",
-                               "deadline exceeded after "
-                               f"{now - t_start:.3f}s with "
-                               f"{len(req.out)} tokens", slot=slot)
-            if paged:
-                # this decode step writes each active slot's token at
-                # position pos[slot] — allocate boundary pages up front,
-                # earliest-admitted first.  worst_case policy: always
-                # succeeds under the reservation invariant.  prompt
-                # policy: pool exhaustion preempts the latest-admitted
-                # slot (possibly the requester itself) and retries — the
-                # earliest active slot can always make progress, since
-                # alone it fits by the worst-case-vs-pool admission check.
-                changed = False
-                order = sorted((s for s in range(n)
-                                if active[s] is not None),
-                               key=lambda s: admit_seq[s])
-                for slot in order:
-                    if active[slot] is None:
-                        continue             # evicted as a victim below
-                    while True:
-                        try:
-                            changed |= alloc.ensure(slot, pos[slot] + 1)
-                            break
-                        except paging.PoolExhausted:
-                            victim = preempt_victim()
-                            changed = True   # victim's table row went null
-                            if victim == slot:
-                                break        # requester evicted itself
-                if changed:
-                    caches = paging.sync_block_tables(caches, alloc.table)
+            self._sweep_deadlines()
+            if self.paged:
+                self._ensure_pages()
             # live-token peak is layout-agnostic (the dense layout used to
             # report 0, skewing the paged-vs-dense residency comparison)
-            live = sum(pos[s] + 1 for s in range(n)
-                       if active[s] is not None)
-            stats["peak_live_tokens"] = max(stats["peak_live_tokens"], live)
-            if paged and alloc.pages_in_use >= alloc.high_water:
-                stats["frag_at_high_water"] = 1.0 - live / max(
-                    alloc.pages_in_use * geom.page_size, 1)
-            if all(a is None for a in active):
+            live = sum(self.pos[s] + 1 for s in range(self.n)
+                       if self.active[s] is not None)
+            self.stats["peak_live_tokens"] = max(
+                self.stats["peak_live_tokens"], live)
+            if self.paged and self.alloc.pages_in_use >= \
+                    self.alloc.high_water:
+                self.stats["frag_at_high_water"] = 1.0 - live / max(
+                    self.alloc.pages_in_use * self.geom.page_size, 1)
+            if all(a is None for a in self.active):
                 continue         # deadline sweep / self-eviction emptied
-            step_t0 = clock()
-            logits, caches = self._decode(self.params, caches, cur_tok)
-            watchdog.observe(stats["decode_steps"], clock() - step_t0)
-            stats["decode_steps"] += 1
-            nxt = self._sample(logits)
-            cur_tok = nxt[:, None]
-            for slot in range(n):
-                req = active[slot]
+            if self.injector is not None:
+                # replica-tier fault: the whole engine dies mid-decode —
+                # deliberately NOT per-request isolated, raises out of
+                # step() so the router migrates this session's inflight()
+                self.injector.check(self.stats["decode_steps"],
+                                    site="replica")
+            step_t0 = self.clock()
+            logits, self.caches = self.engine._decode(
+                self.engine.params, self.caches, self.cur_tok)
+            self.watchdog.observe(self.stats["decode_steps"],
+                                  self.clock() - step_t0)
+            self.stats["decode_steps"] += 1
+            ran += 1
+            nxt = self.engine._sample(logits)
+            self.cur_tok = nxt[:, None]
+            for slot in range(self.n):
+                req = self.active[slot]
                 if req is None:
                     continue
-                if injector is not None:
+                if self.injector is not None:
                     try:
                         # per-request decode site: "this request committing
                         # its len(out)-th generated token"
-                        injector.check(len(req.out), site="decode")
-                    except Exception as e:  # noqa: BLE001 — isolate request
-                        if strict:
+                        self.injector.check(len(req.out), site="decode")
+                    except Exception as e:  # noqa: BLE001 — isolate req
+                        if self.strict:
                             raise
-                        finish_bad(req, "failed", repr(e), slot=slot)
+                        self._finish_bad(req, "failed", repr(e), slot=slot)
                         continue
                 tok = int(nxt[slot])
                 req.out.append(tok)
-                pos[slot] += 1
-                remaining[slot] -= 1
-                if remaining[slot] <= 0 or tok == cfg.eos_id:
-                    finish_ok(req)
-                    active[slot] = None
-                    if paged:
-                        alloc.release(slot)
-        stats["straggler_decode_steps"] = len(watchdog.events)
-        if paged:
-            stats.update(alloc.stats())
+                self.pos[slot] += 1
+                self.remaining[slot] -= 1
+                if self.remaining[slot] <= 0 or tok == cfg.eos_id:
+                    self._finish_ok(req)
+                    self.active[slot] = None
+                    if self.paged:
+                        self.alloc.release(slot)
+        return ran
+
+    def drain(self) -> None:
+        """Run to quiescence: every submitted request reaches a terminal
+        status.  New ``submit()``s after drain() returns start it again."""
+        while not self.idle:
+            self.step(max_steps=1 << 30)
+
+    def stats_snapshot(self) -> Dict:
+        """Current counters in the ``Engine.paging_stats`` shape; callable
+        at any point in the session (the router snapshots mid-flight)."""
+        stats = dict(self.stats)
+        stats["straggler_decode_steps"] = len(self.watchdog.events)
+        if self.paged:
+            stats.update(self.alloc.stats())
             stats["kv_layout"] = "paged"
             # dense-equivalent residency: what (n_slots, S_max) slabs pin
-            stats["dense_equiv_tokens"] = n * cfg.max_seq
+            stats["dense_equiv_tokens"] = self.n * self.cfg.max_seq
             stats["paged_peak_tokens"] = stats["page_high_water"] \
-                * geom.page_size
+                * self.geom.page_size
         else:
             stats["kv_layout"] = "dense"
-        self.paging_stats = stats
-        return requests
+        return stats

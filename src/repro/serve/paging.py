@@ -129,6 +129,11 @@ class PageAllocator:
     def pages_in_use(self) -> int:
         return sum(len(p) for p in self.slot_pages)
 
+    @property
+    def free_pages(self) -> int:
+        """Pages available right now — the router's load-balance signal."""
+        return len(self.free)
+
     def pages_for(self, n_tokens: int) -> int:
         return self.geom.pages_for(n_tokens)
 
@@ -310,6 +315,40 @@ def commit_prefill(caches, slot_cache, slot: int, length: int,
                                 table_dev, page_ids, offs, stacked)
             for name, full in caches[part].items()}
     return new
+
+
+def merge_replica_stats(per_replica: list) -> dict:
+    """Aggregate per-replica session stats into one router-level view.
+
+    Counters (requests, completions, preemptions, failures, decode steps,
+    …) sum across replicas; capacity gauges take the fleet-wide extreme —
+    ``page_high_water`` is the max over replicas (the hottest pool), with
+    the full per-replica list kept under ``page_high_water_per_replica``
+    so a skewed router policy shows up in the bench JSON, not just in the
+    max.  Pool geometry keys (``n_pages``/``page_size``/…) are taken from
+    the first replica — replicas share one config.
+    """
+    merged: dict = {}
+    if not per_replica:
+        return merged
+    summed = ("requests", "completed", "preemptions", "recompute_tokens",
+              "rejected", "failed", "timed_out", "decode_steps",
+              "admission_deferrals", "evictions", "pages_evicted",
+              "straggler_decode_steps")
+    for key in summed:
+        if any(key in s for s in per_replica):
+            merged[key] = sum(s.get(key, 0) for s in per_replica)
+    for key in ("n_pages", "page_size", "usable_pages", "admission_policy",
+                "kv_layout", "dense_equiv_tokens"):
+        if key in per_replica[0]:
+            merged[key] = per_replica[0][key]
+    if any("page_high_water" in s for s in per_replica):
+        hw = [s.get("page_high_water", 0) for s in per_replica]
+        merged["page_high_water"] = max(hw)
+        merged["page_high_water_per_replica"] = hw
+        merged["peak_live_tokens"] = max(
+            s.get("peak_live_tokens", 0) for s in per_replica)
+    return merged
 
 
 def sync_block_tables(caches, table: np.ndarray):

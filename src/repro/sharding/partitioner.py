@@ -114,7 +114,7 @@ def mesh_signature(mesh: Mesh) -> tuple:
     Mesh-dependent caches (the sharded SpMV executable memo, warm-plan
     bookkeeping) key on this instead of ``id(mesh)`` alone so a resized or
     rebuilt mesh — same Python id after GC, different topology — can never
-    alias a stale entry (DESIGN.md §11).
+    alias a stale entry (DESIGN.md §12).
     """
     return (tuple(mesh.axis_names),
             tuple(int(mesh.shape[a]) for a in mesh.axis_names),
@@ -125,7 +125,7 @@ def resolve_spmv_shard_axis(mesh: Mesh, shape_kind: str = "decode") -> str:
     """The mesh axis for row-sharded SpMV, or raise with guidance.
 
     Single source of the lookup-or-raise shared by ``core.spmv`` dispatch
-    and ``Engine.warm_spmv_plans`` (DESIGN.md §10 routing).
+    and ``Engine.warm_spmv_plans`` (DESIGN.md §11 routing).
     """
     axis = Partitioner(mesh, shape_kind).spmv_shard_axis()
     if axis is None:
@@ -171,7 +171,7 @@ class Partitioner:
         """Mesh axis the ``sparse_rows`` rule resolves to on this mesh.
 
         This is the routing hook for the row-sharded SpMV path
-        (DESIGN.md §10): ``ShardedRgCSR`` splits rows over exactly one mesh
+        (DESIGN.md §11): ``ShardedRgCSR`` splits rows over exactly one mesh
         axis, and both rule tables already map ``sparse_rows → model``.
         Returns the first rule candidate that is a single axis present on
         the mesh (row counts are padded per shard, so no divisibility check

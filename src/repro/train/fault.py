@@ -41,7 +41,18 @@ class FaultConfig:
 
 
 class Watchdog:
-    """EWMA step-time tracker; flags stragglers (slow steps/hosts)."""
+    """EWMA step-time tracker; flags stragglers (slow steps/hosts).
+
+    A flagged step's ``dt`` is **clamped to the flagging threshold**
+    (``straggler_factor × EWMA``) before it feeds the EWMA: folding the
+    raw outlier in used to inflate the baseline so fast that a sustained
+    slowdown stopped being flagged after a single alert.  With the clamp
+    the baseline still adapts — geometrically, one clamped update at a
+    time — so a host that is *permanently* slower eventually becomes the
+    new normal (bounded alert stream), but a step-function slowdown is
+    flagged for several consecutive steps first, long enough for a
+    router/scheduler health policy to act on it.
+    """
 
     def __init__(self, cfg: FaultConfig,
                  on_straggler: Optional[Callable[[int, float, float], None]]
@@ -64,7 +75,10 @@ class Watchdog:
             if self.on_straggler:
                 self.on_straggler(step, dt, self.ewma)
         a = self.cfg.straggler_ewma_alpha
-        self.ewma = dt if self.ewma is None else (1 - a) * self.ewma + a * dt
+        # clamp flagged outliers at the threshold so one straggler can't
+        # poison the baseline (see class docstring)
+        d = min(dt, self.cfg.straggler_factor * self.ewma) if flagged else dt
+        self.ewma = d if self.ewma is None else (1 - a) * self.ewma + a * d
         self.n += 1
         return flagged
 
@@ -109,14 +123,28 @@ class RestartableLoop:
     ``step_fn(state, step) -> state`` and ``restore_fn() -> (state, step)``
     reloads the latest checkpoint.  Deterministic data (train/data.py) makes
     the recovery exact: the replayed steps see identical batches.
+
+    ``sleep=`` / ``clock=`` are injectable (matching ``Engine.clock`` /
+    ``Router.clock``): the restart backoff sleeps through ``sleep`` and
+    each restart is stamped with ``clock()`` into ``restart_log`` as
+    ``(failed_step, backoff_s, t)`` — so tests assert the exact backoff
+    schedule on a fake timer instead of burning real wall-clock.
     """
 
-    def __init__(self, cfg: FaultConfig):
+    def __init__(self, cfg: FaultConfig, sleep: Optional[Callable] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.cfg = cfg
         self.restarts = 0
+        # resolved lazily so monkeypatching repro.train.fault.time still
+        # works for callers that construct the loop first
+        self._sleep = sleep
+        self._clock = clock
+        self.restart_log = []
 
     def run(self, state, start_step: int, n_steps: int, step_fn,
             restore_fn):
+        sleep = self._sleep if self._sleep is not None else time.sleep
+        clock = self._clock if self._clock is not None else time.time
         step = start_step
         end = start_step + n_steps
         while step < end:
@@ -130,6 +158,8 @@ class RestartableLoop:
                     raise
                 log.warning("step %d failed (%r); restoring (restart %d/%d)",
                             step, e, self.restarts, self.cfg.max_restarts)
-                time.sleep(self.cfg.backoff_s * self.restarts)
+                backoff = self.cfg.backoff_s * self.restarts
+                self.restart_log.append((step, backoff, clock()))
+                sleep(backoff)
                 state, step = restore_fn()
         return state, step

@@ -40,12 +40,32 @@ def test_watchdog_flags_straggler_and_ewma_adapts():
     # 2.5 > factor(2.0) * ewma(1.0) -> flagged, with the pre-update ewma
     assert wd.observe(3, 2.5)
     assert wd.events == [(3, 2.5, pytest.approx(1.0))]
-    # the straggler itself feeds the EWMA: 0.5*1.0 + 0.5*2.5 = 1.75, so a
-    # later 3.0s step is within 2*1.75 = 3.5 — a permanently-slower host
-    # is the new normal, not an endless alert stream
-    assert wd.ewma == pytest.approx(1.75)
-    assert not wd.observe(4, 3.0)
-    assert len(wd.events) == 1
+    # the flagged dt feeds the EWMA *clamped at the threshold* (2.0, not
+    # the raw 2.5): 0.5*1.0 + 0.5*2.0 = 1.5 — so a still-slow 3.1s step
+    # (> 2*1.5) keeps being flagged instead of being absorbed
+    assert wd.ewma == pytest.approx(1.5)
+    assert wd.observe(4, 3.1)
+    assert len(wd.events) == 2
+
+
+def test_watchdog_sustained_slowdown_keeps_flagging():
+    """Regression for EWMA pollution: pre-clamp, folding a straggler's raw
+    dt into the EWMA inflated the baseline so fast that a *step-function*
+    slowdown (host goes 1.0s → 10.0s and stays there) was flagged exactly
+    once and then became invisible.  With the clamp the baseline adapts
+    geometrically (×factor per flagged step), so the slowdown is flagged
+    for several consecutive steps — long enough for a router health policy
+    to mark the replica degraded — before becoming the new normal."""
+    wd = Watchdog(_cfg(straggler_ewma_alpha=1.0))  # worst case: EWMA = last
+    for step in range(3):
+        wd.observe(step, 1.0)
+    flags = [wd.observe(3 + i, 10.0) for i in range(6)]
+    # baseline climbs 1.0 → 2.0 → 4.0 → 8.0 (clamped ×2 per step); the
+    # 10.0s steps flag until 2*ewma catches up, then stop
+    assert flags == [True, True, True, False, False, False]
+    # pre-clamp behavior (alpha=1.0 folds the raw 10.0 in immediately):
+    # exactly one flag, then silence — the bug this guards against
+    assert sum(flags) >= 3
 
 
 def test_watchdog_on_straggler_callback():
@@ -83,6 +103,35 @@ def test_restartable_loop_retry_backoff_and_exact_replay(monkeypatch):
     assert loop.restarts == 2
     assert sleeps == [pytest.approx(0.1), pytest.approx(0.2)]
     assert inj.fired == [(None, 2), (None, 4)]
+
+
+def test_restartable_loop_injectable_sleep_and_clock():
+    """Backoff via injected hooks (no monkeypatching, no wall-clock):
+    sleep= records instead of sleeping and clock= stamps restart_log, so
+    the exact backoff schedule is assertable on a fake timer."""
+    sleeps = []
+    t = [100.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    loop = RestartableLoop(FaultConfig(max_restarts=3, backoff_s=0.5),
+                           sleep=sleeps.append, clock=clock)
+    inj = FaultInjector(fail_at_steps=(1, 3))
+
+    def step_fn(state, step):
+        inj.check(step)
+        return state + 1
+
+    state, step = loop.run(0, 0, 4, step_fn, lambda: (0, 0))
+    assert step == 4
+    # backoff_s * restarts: 0.5 then 1.0, through the injected sleep only
+    assert sleeps == [pytest.approx(0.5), pytest.approx(1.0)]
+    assert [(s, pytest.approx(b)) for s, b, _ in loop.restart_log] == \
+        [(1, pytest.approx(0.5)), (3, pytest.approx(1.0))]
+    # timestamps come from the injected clock (strictly increasing fakes)
+    assert [ts for _, _, ts in loop.restart_log] == [101.0, 102.0]
 
 
 def test_restartable_loop_budget_exhausted_reraises():

@@ -1,0 +1,343 @@
+"""Multi-replica router fault tolerance (DESIGN.md §7, serve/router.py).
+
+Covers the acceptance scenario — 3 replicas, one killed mid-decode, every
+migrated stream token-identical to the single-engine ``generate()`` oracle
+with zero failures — plus retry-budget exhaustion, backpressure shedding,
+FIFO fairness across replicas under sustained overload, replica draining,
+and the per-arrival deadline semantics the reentrant session enables.
+
+Determinism note (the PR 3 lesson): nothing here asserts on wall-clock —
+every engine runs a shared FakeClock advanced per decode step, the router
+``sleep`` advances the same fake timer, token streams are greedy, and
+the ``("replica", k)`` fault site fires on an exact decode-step count.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.serve import (Engine, Request, Router, RouterConfig, ServeConfig,
+                         paging)
+from repro.train.fault import FaultConfig, FaultInjector
+
+S_MAX = 64
+PS = 4
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _tick_decode(eng, clock, dt=1.0):
+    """Each decode step on this engine advances the shared fake clock."""
+    orig = eng._decode
+
+    def wrapped(*a):
+        clock.advance(dt)
+        return orig(*a)
+
+    eng._decode = wrapped
+
+
+def _fleet(n_replicas, clock=None, fault_cfg=None, router_cfg=None,
+           injectors=None, **serve_kw):
+    """n engine replicas sharing one set of params + a router over them.
+
+    ``injectors``: {replica_index: FaultInjector} — attached BEFORE the
+    router opens sessions (a session resolves its injector at creation).
+    """
+    cfg = get_smoke("granite-3-2b")
+    skw = dict(max_seq=S_MAX, n_slots=2, page_size=PS)
+    skw.update(serve_kw)
+    scfg = ServeConfig(**skw)
+    first = Engine(cfg, scfg, fault_cfg=fault_cfg)
+    engines = [first] + [Engine(cfg, scfg, params=first.params,
+                                fault_cfg=fault_cfg)
+                         for _ in range(n_replicas - 1)]
+    for idx, inj in (injectors or {}).items():
+        engines[idx].fault_injector = inj
+    if clock is not None:
+        for e in engines:
+            e.clock = clock
+            _tick_decode(e, clock)
+    router = Router(engines, cfg=router_cfg, fault_cfg=fault_cfg,
+                    clock=clock,
+                    sleep=(clock.advance if clock is not None else None))
+    return cfg, engines, router
+
+
+def _reqs(cfg, n, seed=5, prompt_len=8, max_new=5):
+    rng = np.random.default_rng(seed)
+    return [Request(tokens=rng.integers(0, cfg.vocab,
+                                        (prompt_len,)).astype(np.int32),
+                    max_new_tokens=max_new) for _ in range(n)]
+
+
+def _oracle(eng, req):
+    return list(eng.generate(req.tokens[None, :],
+                             max_new_tokens=req.max_new_tokens)[0])
+
+
+# ----------------------------------------------------------- happy path
+
+
+def test_router_serve_matches_oracle_across_replicas():
+    """No faults: the router spreads requests over 2 replicas and every
+    stream equals the single-engine oracle (replicas share params, so one
+    oracle engine answers for all)."""
+    clock = FakeClock()
+    cfg, engines, router = _fleet(2, clock=clock)
+    reqs = _reqs(cfg, 5)
+    router.serve(reqs)
+    assert all(r.ok_like for r in reqs)
+    for r in reqs:
+        assert r.out == _oracle(engines[0], r)
+    st = router.stats()
+    assert st["completed"] == 5
+    assert st["migrations"] == 0 and st["shed"] == 0
+    assert st["retries_exhausted"] == 0
+    assert len(st["page_high_water_per_replica"]) == 2
+    # work actually spread: no replica served everything alone
+    assert all(hw > 0 for hw in st["page_high_water_per_replica"])
+
+
+# ----------------------------------------------------- failover + migration
+
+
+def test_replica_kill_mid_decode_migrates_token_identical():
+    """THE acceptance scenario: 3 replicas, one killed mid-decode via the
+    site-qualified injector.  Its in-flight requests migrate to survivors
+    (recompute path: re-prefill prompt + generated prefix) and every
+    stream — migrated or not — is token-identical to the oracle, with
+    zero failed requests."""
+    clock = FakeClock()
+    fc = FaultConfig(max_restarts=3, backoff_s=0.5)
+    # the victim's 3rd decode step dies with requests resident mid-stream
+    cfg, engines, router = _fleet(
+        3, clock=clock, fault_cfg=fc,
+        injectors={1: FaultInjector(fail_at_steps=(("replica", 2),))})
+    reqs = _reqs(cfg, 8, max_new=6)
+    router.serve(reqs)
+    assert all(r.ok_like for r in reqs), \
+        [(r.status, r.error) for r in reqs if not r.ok_like]
+    for r in reqs:
+        assert r.out == _oracle(engines[0], r), "migrated stream drifted"
+    st = router.stats()
+    assert st["replica_faults"] == 1
+    assert st["migrations"] > 0                 # someone was mid-stream
+    assert st["failed"] == 0 and st["retries_exhausted"] == 0
+    assert st["completed"] == 8
+    migrated = [r for r in reqs if r.retries > 0]
+    assert migrated and all(r.retries == 1 for r in migrated)
+    # the dead replica came back after backoff (fire-once injector)
+    assert st["replica_restarts"] == 1
+    assert all(s == "healthy" for s in st["replica_states"])
+
+
+def test_replica_restart_backoff_schedule_on_fake_clock():
+    """The revived replica comes back no earlier than backoff_s × restarts
+    on the injected clock — asserted exactly, zero wall-clock."""
+    clock = FakeClock()
+    fc = FaultConfig(max_restarts=3, backoff_s=10.0)
+    cfg, engines, router = _fleet(
+        1, clock=clock, fault_cfg=fc, n_slots=1,
+        injectors={0: FaultInjector(fail_at_steps=(("replica", 1),))})
+    reqs = _reqs(cfg, 2, max_new=4)
+    for r in reqs:
+        router.submit(r)
+    # run until the fault lands (decode step 1 → fault at t=1.0; the same
+    # round then sleeps the fleet — via the injected clock — up to the
+    # scheduled revival, since nothing else can make progress)
+    while router.counters["replica_faults"] == 0:
+        router.run_round()
+    rep = router.replicas[0]
+    assert rep.state == "dead"
+    assert rep.restart_at == pytest.approx(1.0 + 10.0)  # backoff_s × 1
+    router.serve([])                            # revive + drain
+    assert clock() >= 11.0                      # revival waited out backoff
+    assert router.counters["replica_restarts"] == 1
+    assert all(r.ok_like for r in reqs)
+    for r in reqs:
+        assert r.out == _oracle(engines[0], r)
+
+
+def test_retry_budget_exhaustion_fails_requests():
+    """max_restarts=0: the first replica fault exhausts both the replica's
+    restart budget (permanently down) and every migrated request's retry
+    budget — they fail with retries_exhausted counted, instead of
+    migrating forever."""
+    clock = FakeClock()
+    fc = FaultConfig(max_restarts=0, backoff_s=1.0)
+    cfg, engines, router = _fleet(
+        1, clock=clock, fault_cfg=fc,
+        injectors={0: FaultInjector(fail_at_steps=(("replica", 1),))})
+    reqs = _reqs(cfg, 4, max_new=6)
+    router.serve(reqs)
+    assert all(r.done for r in reqs)
+    assert all(r.status == "failed" for r in reqs)
+    st = router.stats()
+    assert st["retries_exhausted"] == 4
+    assert st["replica_restarts"] == 0
+    assert st["replica_states"] == ["dead"]
+    # resident victims carry their partial prefixes; none were lost
+    assert all(r.out is not None for r in reqs)
+
+
+# ------------------------------------------------------------ backpressure
+
+
+def test_backpressure_sheds_over_capacity_arrivals():
+    """Bounded router queue: arrivals beyond queue_limit are refused at
+    the door with status="shed" (never silently dropped, never queued
+    unboundedly); every accepted request still completes."""
+    clock = FakeClock()
+    cfg, engines, router = _fleet(1, clock=clock,
+                                  router_cfg=RouterConfig(
+                                      n_replicas=1, queue_limit=2),
+                                  n_slots=1)
+    reqs = _reqs(cfg, 5, max_new=3)
+    accepted = [router.submit(r) for r in reqs]
+    assert accepted == [True, True, False, False, False]
+    shed = [r for r in reqs if r.status == "shed"]
+    assert len(shed) == 3 and all(r.done and r.out == [] for r in shed)
+    assert router.counters["shed"] == 3
+    while not router.idle:
+        router.run_round()
+    kept = [r for r in reqs if r.status != "shed"]
+    assert all(r.ok_like for r in kept)
+    for r in kept:
+        assert r.out == _oracle(engines[0], r)
+    # draining the queue reopens capacity: a late arrival is accepted
+    late = _reqs(cfg, 1, seed=9, max_new=3)[0]
+    assert router.submit(late)
+    router.serve([])
+    assert late.ok_like
+
+
+# ----------------------------------------------------------- FIFO fairness
+
+
+def test_fifo_fairness_across_replicas_under_sustained_overload():
+    """Sustained overload (8 requests through 2 small replicas): requests
+    are first-slotted in submission order — the global router queue is the
+    one FIFO authority, and no request is starved by replica-local
+    queueing (first-slot instants, fake clock, are non-decreasing)."""
+    clock = FakeClock()
+    cfg, engines, router = _fleet(2, clock=clock, n_slots=2, page_size=8,
+                                  n_pages=5)
+    reqs = _reqs(cfg, 8, seed=12, max_new=5)
+    router.serve(reqs)
+    assert all(r.ok_like for r in reqs)
+    for r in reqs:
+        assert r.out == _oracle(engines[0], r)
+    slotted_at = [r.arrival_t + r.queue_s for r in reqs]
+    assert slotted_at == sorted(slotted_at), \
+        "a later submission was slotted before an earlier one"
+
+
+# ---------------------------------------------------------------- draining
+
+
+def test_drain_replica_finishes_residents_then_recycles():
+    """Planned maintenance: a draining replica takes no new work, its
+    residents run to completion (not migrated, not killed), and the
+    replica rejoins the healthy pool with a fresh session."""
+    clock = FakeClock()
+    cfg, engines, router = _fleet(2, clock=clock, n_slots=1)
+    reqs = _reqs(cfg, 4, max_new=8)
+    for r in reqs:
+        router.submit(r)
+    router.run_round()                         # residents on both replicas
+    resident = router.replicas[0].session.inflight()
+    assert resident
+    router.drain_replica(0)
+    assert router.replicas[0].state == "draining"
+    while not router.idle:
+        router.run_round()
+    assert all(r.ok_like for r in reqs)
+    for r in reqs:
+        assert r.out == _oracle(engines[0], r)
+    st = router.stats()
+    assert st["drains"] == 1 and st["migrations"] == 0
+    assert router.replicas[0].state == "healthy"
+    # the drained replica's pre-drain work still shows in fleet stats
+    assert st["completed"] == 4
+
+
+# -------------------------------------------------- per-arrival deadlines
+
+
+def test_deadline_measured_from_arrival_not_session_start():
+    """A request submitted mid-session is billed from ITS arrival, not
+    the session's start: deadline_s=3 submitted at t=5 survives (old
+    semantics — measured from t_start=0 — would have expired it), while
+    a sibling with deadline_s=0.5 times out from its own arrival."""
+    clock = FakeClock()
+    cfg = get_smoke("granite-3-2b")
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=1, page_size=PS))
+    eng.clock = clock
+    _tick_decode(eng, clock)
+    rng = np.random.default_rng(3)
+    mk = lambda mx, dl=None: Request(
+        tokens=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+        max_new_tokens=mx, deadline_s=dl)
+    session = eng.start_session()
+    a = mk(7)                                  # occupies the only slot
+    session.submit(a)
+    session.step(5)                            # t = 5.0, a mid-stream
+    assert clock() == pytest.approx(5.0)
+    b = mk(3, dl=3.0)                          # expires at t > 8
+    c = mk(3, dl=0.5)                          # expires at t > 5.5
+    session.submit(b)
+    session.submit(c)
+    assert b.arrival_t == pytest.approx(5.0)
+    session.drain()
+    # a finishes at t=6 (6 decode steps total); b slots at t=6 within its
+    # own window — under from-t_start accounting it would be long dead
+    assert a.ok_like and b.ok_like
+    assert b.queue_s == pytest.approx(1.0)
+    assert c.status == "timed_out" and "in queue" in c.error
+    assert session.stats["timed_out"] == 1
+
+
+def test_serve_batch_deadline_semantics_unchanged():
+    """Batch-submitted serve(): every request arrives at call entry, so
+    from-arrival deadlines degrade to the original from-entry semantics —
+    a deadline shorter than the head-of-line wait still times out."""
+    clock = FakeClock()
+    cfg = get_smoke("granite-3-2b")
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=1, page_size=PS))
+    eng.clock = clock
+    _tick_decode(eng, clock)
+    rng = np.random.default_rng(4)
+    long = Request(tokens=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+                   max_new_tokens=8)
+    tight = Request(tokens=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+                    max_new_tokens=4, deadline_s=2.0)
+    eng.serve([long, tight])
+    assert long.ok_like
+    assert tight.status == "timed_out"         # queued behind 8 steps
+    assert tight.arrival_t == pytest.approx(0.0)
+
+
+# --------------------------------------------------------- stats plumbing
+
+
+def test_merge_replica_stats_shapes():
+    per = [{"requests": 3, "completed": 3, "page_high_water": 4,
+            "peak_live_tokens": 20, "n_pages": 17, "kv_layout": "paged"},
+           {"requests": 2, "completed": 1, "page_high_water": 7,
+            "peak_live_tokens": 10, "n_pages": 17, "kv_layout": "paged"}]
+    m = paging.merge_replica_stats(per)
+    assert m["requests"] == 5 and m["completed"] == 4
+    assert m["page_high_water"] == 7
+    assert m["page_high_water_per_replica"] == [4, 7]
+    assert m["peak_live_tokens"] == 20
+    assert m["n_pages"] == 17 and m["kv_layout"] == "paged"
+    assert paging.merge_replica_stats([]) == {}

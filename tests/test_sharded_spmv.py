@@ -1,9 +1,9 @@
-"""Row-sharded multi-device RgCSR SpMV/SpMM (DESIGN.md §10/§11).
+"""Row-sharded multi-device RgCSR SpMV/SpMM (DESIGN.md §11/§12).
 
 Two layers of coverage:
 
 * in-process tests validate the host-side machinery on the single real CPU
-  device — ShardedRgCSR construction, stacked-plan invariants, the §11
+  device — ShardedRgCSR construction, stacked-plan invariants, the §12
   sparse-exchange schedule (send_idx/edge_counts reconstruct x[remote]
   exactly; per-device exchange volume == plan-time remote count), its edge
   cases (empty remote set, all-remote shard, single-device degrade),
@@ -490,7 +490,7 @@ def test_sharded_spmv_matches_oracle_on_8_devices():
                                                mesh=mesh, axis="model"))
         np.testing.assert_allclose(y, big @ x, rtol=1e-4, atol=1e-4)
 
-        # §11 sparse collective: per-device exchange volume equals the
+        # §12 sparse collective: per-device exchange volume equals the
         # shard's plan-time remote column count (the acceptance bound),
         # and is far below the all_gather's n_cols-per-device traffic
         psplit = kops.get_sharded_plan(sm8, chunks_per_step=2,
@@ -544,7 +544,7 @@ def test_sharded_engine_warmup_and_partitioner_routing_on_8_devices():
         shard_stats = eng.sharded_spmv_shard_stats[0]
         assert shard_stats["n_shards"] == 4
         assert len(shard_stats["stored_slots"]) == 4
-        # per-shard tuning + §11 exchange accounting in the warm stats
+        # per-shard tuning + §12 exchange accounting in the warm stats
         assert len(shard_stats["shard_winners"]) == 4
         assert all(len(w) == 3 for w in shard_stats["shard_winners"])
         assert shard_stats["exchange_recv_cols"] == \
