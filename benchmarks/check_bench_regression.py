@@ -42,9 +42,12 @@ below it on the mixed-length mix).  The overload mix's preemption counters
 (``preemptions``, ``recompute_tokens``, ``rejected``) are likewise
 deterministic allocator properties and may never grow — a regression in
 the §6.4 recompute-preemption path (more evictions, more recomputed
-tokens, spurious rejections) fails exactly.  Serve wall-clock timings are
-recorded but never gated — they are the only machine-speed-dependent
-fields.
+tokens, spurious rejections) fails exactly.  ``dispatches_per_token``
+(fused decode launches per generated token, DESIGN.md §7.1) is a
+deterministic chunk-cadence property and gates never-grow on every mix —
+the decode loop cannot silently fall back toward one launch per token.
+Serve wall-clock timings are recorded but never gated — they are the
+only machine-speed-dependent fields.
 """
 from __future__ import annotations
 
@@ -183,12 +186,15 @@ def compare_serve(baseline: dict, new: dict):
         if base is None:
             continue
         # page metrics everywhere; overload adds the §6.4 preemption
-        # counters and router_kill the §7 fault-tolerance counters (both
+        # counters and router_kill the §7 fault-tolerance counters; all
+        # mixes gate the §7.1 fused-loop dispatches_per_token so the
+        # decode path can't regress toward one launch per token (both
         # sides must carry a key for it to gate, so older baselines
-        # without a mix cannot flip this)
+        # without a mix or metric cannot flip this)
         for key in ("page_high_water", "pages_per_token",
                     "preemptions", "recompute_tokens", "rejected",
-                    "migrations", "retries_exhausted", "shed"):
+                    "migrations", "retries_exhausted", "shed",
+                    "dispatches_per_token"):
             old_v, new_v = base.get(key), paged.get(key)
             if old_v is not None and new_v is not None and new_v > old_v:
                 failures.append(
@@ -276,7 +282,9 @@ def main(argv=None) -> int:
         for name, row in sorted(sv_new.get("mixes", {}).items()):
             paged = row.get("paged", {})
             print(f"serve:{name},hwm={paged.get('page_high_water')},"
-                  f"pages_per_token={paged.get('pages_per_token')}")
+                  f"pages_per_token={paged.get('pages_per_token')},"
+                  f"dispatches_per_token="
+                  f"{paged.get('dispatches_per_token')}")
         for msg in failures:
             print(f"# FAIL(serve paging): {msg}", file=sys.stderr)
         if failures:

@@ -48,6 +48,10 @@ def main(argv=None):
     ap.add_argument("--kv-layout", choices=("paged", "dense"),
                     default="paged")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="decode steps fused per on-device dispatch "
+                         "(lax.while_loop chunk, DESIGN.md §7.1); 1 = "
+                         "stepwise host sync every token")
     ap.add_argument("--n-pages", type=int, default=0,
                     help="page-pool size; 0 = dense capacity + null page "
                          "(size below worst case to exercise preemption)")
@@ -96,6 +100,7 @@ def main(argv=None):
     scfg = ServeConfig(
         max_seq=args.max_seq, n_slots=args.slots, kv_layout=args.kv_layout,
         page_size=args.page_size, n_pages=args.n_pages,
+        decode_chunk=args.decode_chunk,
         admission_policy=args.admission_policy, strict=args.strict,
         deadline_s=args.deadline_s)
     fault_cfg = FaultConfig(straggler_factor=args.straggler_factor,
@@ -144,6 +149,12 @@ def main(argv=None):
           f"({total / dt:.1f} tok/s); all done: {all(r.done for r in done)}")
     by_status = Counter(r.status for r in done)
     print("request status:", dict(sorted(by_status.items())))
+    if ps:
+        d = max(ps.get("decode_dispatches", 0), 1)
+        print(f"fused decode: {ps['decode_steps']} decode steps in "
+              f"{ps.get('decode_dispatches', 0)} dispatches "
+              f"(chunk {args.decode_chunk}, "
+              f"{ps['decode_steps'] / d:.1f} tokens/dispatch)")
     if ps and ps.get("kv_layout") == "paged":
         print(f"paging: high-water {ps['page_high_water']} pages, "
               f"{ps['admission_deferrals']} admission deferrals")

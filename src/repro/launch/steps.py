@@ -96,7 +96,9 @@ def make_prefill_step(model, s_max: int, shape_kind: str = "prefill"):
 
 
 def make_decode_step(model, shape_kind: str = "decode"):
-    def decode_step(params, caches, tokens):
-        return model.decode_step(params, caches, tokens,
-                                 shape_kind=shape_kind)
-    return decode_step
+    """One decode-step factory, shared with the serving engine: delegates
+    to ``serve/device_loop.make_decode_step`` so the dry-run lowers the
+    exact step the fused serving loop runs (imported lazily — the
+    launcher must stay importable without pulling the serve stack in)."""
+    from repro.serve.device_loop import make_decode_step as _make
+    return _make(model, shape_kind=shape_kind)

@@ -264,7 +264,14 @@ class LanguageModel:
 
     def decode_step(self, params, caches, tokens, *,
                     shape_kind: str = "decode"):
-        """One-token serve step. tokens: (B, 1). Returns (logits, caches)."""
+        """One-token serve step. tokens: (B, 1). Returns (logits, caches).
+
+        Loop-pure contract: all state flows through ``caches`` (per-slot
+        position indices included) and every array op is traceable, so
+        this body runs unchanged inside the serving engine's fused
+        ``lax.while_loop`` (``serve/device_loop.build_fused_decode``) —
+        no host callbacks, no Python-side mutation between steps.
+        """
         cfg = self.cfg
         x = embed_lookup(params["embed"], tokens).astype(self.compute_dtype)
         index = _cache_index(caches)         # (B,) per-slot positions

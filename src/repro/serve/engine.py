@@ -40,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import LanguageModel
-from repro.serve import paging
+from repro.serve import device_loop, paging
 
 __all__ = ["ServeConfig", "Engine", "EngineSession", "Request"]
 
@@ -57,6 +57,10 @@ class ServeConfig:
     kv_layout: str = "paged"            # paged | dense
     page_size: int = 16                 # tokens per KV page
     n_pages: int = 0                    # 0 → auto: dense capacity + null page
+    # --- fused decode loop (DESIGN.md §7.1) ---
+    # max decode steps per fused on-device dispatch; 1 restores the
+    # stepwise one-dispatch-per-token cadence (host sync every step)
+    decode_chunk: int = 8
     # --- overload behavior (DESIGN.md §6.4) ---
     # prompt     → admit on the resident tokens' pages only and
     #              recompute-preempt a victim at decode-boundary exhaustion
@@ -153,9 +157,13 @@ class Engine:
         self.model = LanguageModel(model_cfg)
         self.params = params if params is not None else \
             self.model.init(jax.random.PRNGKey(serve_cfg.seed))
-        self._decode = jax.jit(
-            lambda p, c, t: self.model.decode_step(p, c, t),
-            donate_argnums=(1,))
+        # one decode-step definition (device_loop.make_decode_step) feeds
+        # both the per-step jit (generate() and the stepwise oracle) and
+        # the fused lax.while_loop chunk runner EngineSession dispatches
+        self._decode = jax.jit(device_loop.make_decode_step(self.model),
+                               donate_argnums=(1,))
+        self._fused_decode = device_loop.build_fused_decode(self.model,
+                                                            serve_cfg)
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, self.cfg.max_seq),
             static_argnums=())
@@ -296,18 +304,13 @@ class Engine:
 
     # ---------------------------------------------------------------- sample
     def _sample(self, logits) -> jax.Array:
-        logits = logits[:, -1, :].astype(jnp.float32)
+        """Host-side sampling: split the engine key once per step and
+        defer to the pure sampler the fused device loop also uses."""
         if self.cfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return device_loop.sample_tokens(logits, None, 0.0, 0)
         self._key, sub = jax.random.split(self._key)
-        logits = logits / self.cfg.temperature
-        # clamp top_k to the vocab: k >= vocab keeps every token (the sort
-        # index -k would otherwise read out of range), k <= 0 disables.
-        k = min(int(self.cfg.top_k), logits.shape[-1])
-        if 0 < k < logits.shape[-1]:
-            kth = jnp.sort(logits, axis=-1)[:, -k][:, None]
-            logits = jnp.where(logits < kth, -1e30, logits)
-        return jax.random.categorical(sub, logits).astype(jnp.int32)
+        return device_loop.sample_tokens(logits, sub, self.cfg.temperature,
+                                         self.cfg.top_k)
 
     # ------------------------------------------------------------- one-shot
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 32
@@ -490,7 +493,8 @@ class EngineSession:
         self.t_start = self.clock()
         self.watchdog = Watchdog(engine.fault_cfg)
         self.prefill_count = 0              # prefill site index (injector)
-        self.stats = {"decode_steps": 0, "admission_deferrals": 0,
+        self.stats = {"decode_steps": 0, "decode_dispatches": 0,
+                      "admission_deferrals": 0,
                       "peak_live_tokens": 0, "frag_at_high_water": 0.0,
                       "requests": 0, "completed": 0,
                       "preemptions": 0, "recompute_tokens": 0,
@@ -714,14 +718,29 @@ class EngineSession:
                                  f"{now - req.arrival_t:.3f}s with "
                                  f"{len(req.out)} tokens", slot=slot)
 
-    def _ensure_pages(self) -> None:
-        """This decode step writes each active slot's token at position
-        ``pos[slot]`` — allocate boundary pages up front, earliest-
-        admitted first.  worst_case policy: always succeeds under the
-        reservation invariant.  prompt policy: pool exhaustion preempts
-        the latest-admitted slot (possibly the requester itself) and
-        retries — the earliest active slot can always make progress,
-        since alone it fits by the worst-case-vs-pool admission check."""
+    def _ensure_pages(self, horizon: int = 1) -> int:
+        """Grow each active slot's pages for the next fused chunk and
+        return the chunk length the pool can actually cover.
+
+        Phase A (mandatory, unchanged §6.4 semantics): the next decode
+        step writes each active slot's token at position ``pos[slot]`` —
+        allocate that boundary page up front, earliest-admitted first.
+        worst_case policy: always succeeds under the reservation
+        invariant.  prompt policy: pool exhaustion preempts the
+        latest-admitted slot (possibly the requester itself) and retries
+        — the earliest active slot can always make progress, since alone
+        it fits by the worst-case-vs-pool admission check.
+
+        Phase B (chunk horizon): extend surviving slots to cover
+        ``min(horizon, remaining)`` further steps, shrinking ``horizon``
+        until the extension fits the FREE pool — extension never
+        preempts and never raises, so a fused chunk of the returned
+        length cannot exhaust the pool mid-flight.  A slot running ``s``
+        steps writes positions ``pos .. pos+s-1`` (its final sampled
+        token never enters the cache), and ``pos + remaining`` is the
+        admission-checked max residency, so the extension stays within
+        each slot's worst-case cap.
+        """
         alloc = self.alloc
         changed = False
         order = sorted((s for s in range(self.n)
@@ -739,19 +758,59 @@ class EngineSession:
                     changed = True       # victim's table row went null
                     if victim == slot:
                         break            # requester evicted itself
+        k = max(1, horizon)
+        if k > 1:
+            live = [s for s in order if self.active[s] is not None]
+
+            def extra(steps: int) -> int:
+                return sum(
+                    max(0, alloc.pages_for(
+                        self.pos[s] + min(steps, self.remaining[s]))
+                        - len(alloc.slot_pages[s]))
+                    for s in live)
+
+            while k > 1 and extra(k) > alloc.free_pages:
+                k -= 1
+            for s in live:
+                changed |= alloc.ensure(
+                    s, self.pos[s] + min(k, self.remaining[s]))
         if changed:
             self.caches = paging.sync_block_tables(self.caches, alloc.table)
+        return k
+
+    def _record_live(self) -> None:
+        """Live-token peak is layout-agnostic (the dense layout used to
+        report 0, skewing the paged-vs-dense residency comparison);
+        called once per committed decode row so chunked serving sees the
+        same per-step peaks the stepwise cadence did."""
+        live = sum(self.pos[s] + 1 for s in range(self.n)
+                   if self.active[s] is not None)
+        self.stats["peak_live_tokens"] = max(
+            self.stats["peak_live_tokens"], live)
+        if self.paged and self.alloc.pages_in_use >= self.alloc.high_water:
+            self.stats["frag_at_high_water"] = 1.0 - live / max(
+                self.alloc.pages_in_use * self.geom.page_size, 1)
 
     def step(self, max_steps: int = 1) -> int:
         """Run up to ``max_steps`` decode steps; returns how many ran.
 
-        Each step: admit from the queue, sweep deadlines, grow/preempt
-        pages, one jit'd decode over the batch, commit sampled tokens,
-        release completed slots — then control returns to the caller.
-        Admission-only iterations (heads rejected / timed out / finished
-        at prefill) don't count against ``max_steps``.  A replica-tier
-        fault (see class docstring) raises out of this method with the
-        session state intact for ``inflight()`` harvesting.
+        Chunked cadence (DESIGN.md §7.1): each iteration admits from the
+        queue, sweeps deadlines, grows/preempts pages out to the chunk
+        horizon, then launches ONE fused on-device dispatch
+        (``device_loop.build_fused_decode``) that runs up to
+        ``decode_chunk`` decode+sample steps before syncing back — the
+        returned ``(k, n_slots)`` token block is committed host-side
+        row by row with exactly the stepwise per-slot semantics
+        (per-request decode fault sites, EOS/budget completion, page
+        release).  Admission-only iterations (heads rejected / timed out
+        / finished at prefill) don't count against ``max_steps``.
+
+        A replica-tier fault (see class docstring) raises out of this
+        method with the session state intact for ``inflight()``
+        harvesting; an armed replica fault *inside* the upcoming chunk
+        splits the chunk at the fault step, so the tokens before it are
+        committed (a partially-committed chunk migrates) and the fault
+        fires at exactly the stepwise decode-step index.
         """
         cfg = self.cfg
         ran = 0
@@ -763,58 +822,77 @@ class EngineSession:
                     continue     # heads were rejected/timed out — refill
                 break            # the fill loop drained the queue
             self._sweep_deadlines()
+            chunk = min(max(1, cfg.decode_chunk), max_steps - ran)
             if self.paged:
-                self._ensure_pages()
-            # live-token peak is layout-agnostic (the dense layout used to
-            # report 0, skewing the paged-vs-dense residency comparison)
-            live = sum(self.pos[s] + 1 for s in range(self.n)
-                       if self.active[s] is not None)
-            self.stats["peak_live_tokens"] = max(
-                self.stats["peak_live_tokens"], live)
-            if self.paged and self.alloc.pages_in_use >= \
-                    self.alloc.high_water:
-                self.stats["frag_at_high_water"] = 1.0 - live / max(
-                    self.alloc.pages_in_use * self.geom.page_size, 1)
+                chunk = self._ensure_pages(chunk)
+            self._record_live()  # chunk-boundary peak (pre-dispatch)
             if all(a is None for a in self.active):
                 continue         # deadline sweep / self-eviction emptied
             if self.injector is not None:
                 # replica-tier fault: the whole engine dies mid-decode —
                 # deliberately NOT per-request isolated, raises out of
-                # step() so the router migrates this session's inflight()
+                # step() so the router migrates this session's inflight().
+                # An armed step strictly inside the chunk caps it, so the
+                # next iteration fires the fault at the stepwise index
+                # with the pre-fault rows already committed.
                 self.injector.check(self.stats["decode_steps"],
                                     site="replica")
+                nxt_fault = self.injector.next_armed(
+                    "replica", self.stats["decode_steps"] + 1,
+                    self.stats["decode_steps"] + chunk)
+                if nxt_fault is not None:
+                    chunk = nxt_fault - self.stats["decode_steps"]
+            rem_dev = jnp.asarray(
+                [self.remaining[s] if self.active[s] is not None else 0
+                 for s in range(self.n)], jnp.int32)
+            act_dev = jnp.asarray(
+                [a is not None for a in self.active], bool)
             step_t0 = self.clock()
-            logits, self.caches = self.engine._decode(
-                self.engine.params, self.caches, self.cur_tok)
+            block, steps_ran, tok, key, self.caches = \
+                self.engine._fused_decode(
+                    self.engine.params, self.caches, self.cur_tok,
+                    rem_dev, act_dev, self.engine._key,
+                    jnp.asarray(chunk, jnp.int32))
+            steps = int(steps_ran)
+            self.cur_tok = tok
+            self.engine._key = key
+            block = np.asarray(jax.device_get(block))
+            self.stats["decode_dispatches"] += 1
+            # normalize wall time by steps actually fused into this
+            # dispatch — a k-step chunk must not read as a k× straggler
             self.watchdog.observe(self.stats["decode_steps"],
-                                  self.clock() - step_t0)
-            self.stats["decode_steps"] += 1
-            ran += 1
-            nxt = self.engine._sample(logits)
-            self.cur_tok = nxt[:, None]
-            for slot in range(self.n):
-                req = self.active[slot]
-                if req is None:
-                    continue
-                if self.injector is not None:
-                    try:
-                        # per-request decode site: "this request committing
-                        # its len(out)-th generated token"
-                        self.injector.check(len(req.out), site="decode")
-                    except Exception as e:  # noqa: BLE001 — isolate req
-                        if self.strict:
-                            raise
-                        self._finish_bad(req, "failed", repr(e), slot=slot)
+                                  (self.clock() - step_t0) / max(steps, 1))
+            for i in range(steps):
+                if all(a is None for a in self.active):
+                    break        # decode faults emptied the batch early
+                if i > 0:
+                    self._record_live()
+                self.stats["decode_steps"] += 1
+                ran += 1
+                for slot in range(self.n):
+                    req = self.active[slot]
+                    if req is None:
                         continue
-                tok = int(nxt[slot])
-                req.out.append(tok)
-                self.pos[slot] += 1
-                self.remaining[slot] -= 1
-                if self.remaining[slot] <= 0 or tok == cfg.eos_id:
-                    self._finish_ok(req)
-                    self.active[slot] = None
-                    if self.paged:
-                        self.alloc.release(slot)
+                    if self.injector is not None:
+                        try:
+                            # per-request decode site: "this request
+                            # committing its len(out)-th generated token"
+                            self.injector.check(len(req.out), site="decode")
+                        except Exception as e:  # noqa: BLE001 — isolate
+                            if self.strict:
+                                raise
+                            self._finish_bad(req, "failed", repr(e),
+                                             slot=slot)
+                            continue
+                    tok_i = int(block[i, slot])
+                    req.out.append(tok_i)
+                    self.pos[slot] += 1
+                    self.remaining[slot] -= 1
+                    if self.remaining[slot] <= 0 or tok_i == cfg.eos_id:
+                        self._finish_ok(req)
+                        self.active[slot] = None
+                        if self.paged:
+                            self.alloc.release(slot)
         return ran
 
     def drain(self) -> None:

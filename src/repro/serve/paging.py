@@ -333,8 +333,8 @@ def merge_replica_stats(per_replica: list) -> dict:
         return merged
     summed = ("requests", "completed", "preemptions", "recompute_tokens",
               "rejected", "failed", "timed_out", "decode_steps",
-              "admission_deferrals", "evictions", "pages_evicted",
-              "straggler_decode_steps")
+              "decode_dispatches", "admission_deferrals", "evictions",
+              "pages_evicted", "straggler_decode_steps")
     for key in summed:
         if any(key in s for s in per_replica):
             merged[key] = sum(s.get(key, 0) for s in per_replica)

@@ -63,8 +63,11 @@ class RouterConfig:
     # global backpressure: max requests waiting in the router queue;
     # submissions beyond it are shed (status="shed").  0 → unbounded.
     queue_limit: int = 0
-    # decode steps per replica per round — the stepper's interleave grain
-    steps_per_round: int = 1
+    # decode steps per replica per round — the stepper's interleave grain.
+    # 0 (default) → one full fused chunk (the session's decode_chunk) per
+    # round, so each round costs one on-device dispatch per busy replica;
+    # an explicit value restores a finer host-visible grain.
+    steps_per_round: int = 0
     # per-request migration budget and per-replica restart budget both
     # come from FaultConfig.max_restarts (backoff_s drives restart delay)
 
@@ -273,14 +276,18 @@ class Router:
             if not rep.alive or rep.session.idle:
                 continue
             t0 = self.clock()
+            grain = self.cfg.steps_per_round or \
+                max(1, rep.session.cfg.decode_chunk)
             try:
-                n = rep.session.step(self.cfg.steps_per_round)
+                n = rep.session.step(grain)
             except Exception as exc:  # noqa: BLE001 — replica-tier fault
                 self._on_fault(idx, exc)
                 continue
             ran += n
+            # normalize by steps run so a fused chunk is judged per-step
+            # (a k-step round must not read as a k× straggler)
             if n and rep.watchdog.observe(rep.session.stats["decode_steps"],
-                                          self.clock() - t0):
+                                          (self.clock() - t0) / n):
                 # transiently slow (stragglers) → route around it; the
                 # next clean round restores it to the healthy class
                 if rep.state == "healthy":

@@ -115,6 +115,20 @@ class FaultInjector:
                 raise self.exc(
                     f"injected fault at {site or 'step'} {step}")
 
+    def next_armed(self, site: Optional[str], start: int,
+                   stop: int) -> Optional[int]:
+        """Smallest armed step in ``[start, stop)`` that ``check(step,
+        site=site)`` would fire on (site-qualified tuples and bare
+        site-agnostic ints both count), or ``None``.  The serving
+        engine's fused decode loop uses this to split a chunk exactly at
+        an injected replica fault, so chunked serving fires faults at
+        the same decode-step index the stepwise cadence did."""
+        if not self.armed:
+            return None
+        hits = [s for s in range(start, stop)
+                if (site, s) in self.fail_at or s in self.fail_at]
+        return min(hits) if hits else None
+
 
 class RestartableLoop:
     """Run a step function with restart-from-checkpoint on failure.

@@ -1,0 +1,315 @@
+"""Fused on-device decode loop (DESIGN.md §7.1, serve/device_loop.py).
+
+The serving core dispatches decode in chunks: one jitted ``lax.while_loop``
+runs up to ``decode_chunk`` decode+sample+mask steps on device (KV caches
+donated, PRNG key threaded through the carry) and returns a ``(k, n_slots)``
+token block the host commits in a single pass.  These tests pin the cadence
+contract:
+
+- token streams are IDENTICAL to the stepwise ``generate()`` oracle for any
+  chunk size, both KV layouts — chunking is an execution detail, never a
+  semantics change;
+- per-slot EOS/budget masks make finished slots decode harmlessly until the
+  host commit truncates them, and the early-exit predicate stops the loop
+  once every slot is done;
+- host-authority events (deadline sweeps, recompute preemption, admissions)
+  land at chunk boundaries without changing any committed token;
+- replica faults split the chunk so the fault fires at its exact stepwise
+  decode-step index, with the pre-fault rows already committed (a partially
+  committed chunk migrates);
+- the watchdog observes per-step-normalized dt, so an 8-step dispatch is
+  not 8x "slower" than a 1-step one.
+
+Determinism note: greedy streams everywhere (temperature=0 consumes no PRNG
+key, so cadence cannot perturb sampling), fake clocks for anything timed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.serve import Engine, Request, Router, RouterConfig, ServeConfig
+from repro.serve import device_loop
+from repro.train.fault import FaultConfig, FaultInjector
+
+S_MAX = 64
+PS = 4
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _tick_decode(eng, clock, dt=1.0):
+    orig = eng._decode
+    orig_fused = eng._fused_decode
+
+    def wrapped(*a):
+        clock.advance(dt)
+        return orig(*a)
+
+    def wrapped_fused(*a):
+        out = orig_fused(*a)
+        clock.advance(dt * int(out[1]))
+        return out
+
+    eng._decode = wrapped
+    eng._fused_decode = wrapped_fused
+
+
+def _oracle(eng, req):
+    return list(eng.generate(req.tokens[None, :],
+                             max_new_tokens=req.max_new_tokens)[0])
+
+
+# ------------------------------------------------- cadence-invariance oracle
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+@pytest.mark.parametrize("chunk", [1, 2, 7, 32])
+def test_fused_serve_matches_oracle_any_chunk(chunk, layout):
+    """Token-for-token generate() equality across chunk sizes that
+    undershoot (1, 2), straddle (7) and overshoot (32) the 5-token budgets
+    — mixed-length prompts in one live batch, both KV layouts.  chunk=1
+    degenerates to the stepwise cadence; chunk=32 proves the early-exit
+    predicate and per-slot budget masks (no slot may run past remaining)."""
+    cfg = get_smoke("granite-3-2b")
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=2, kv_layout=layout,
+                                  page_size=PS, decode_chunk=chunk))
+    rng = np.random.default_rng(5)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, (ln,)).astype(np.int32),
+                    max_new_tokens=5) for ln in (10, 13, 7)]
+    eng.serve(reqs)
+    assert all(r.ok_like for r in reqs)
+    for r in reqs:
+        assert r.out == _oracle(eng, r), f"chunk={chunk} drifted"
+    st = eng.paging_stats
+    assert st["decode_dispatches"] > 0
+    if chunk == 1:
+        assert st["decode_dispatches"] == st["decode_steps"]
+    else:
+        # amortization is real: strictly fewer dispatches than steps
+        assert st["decode_dispatches"] < st["decode_steps"]
+
+
+def test_fused_dispatch_count_amortized():
+    """The acceptance ratio at bench scale, in miniature: a uniform
+    2-slot wave of 8-token budgets under chunk=8 is ONE dispatch per
+    wave — >=4x fewer dispatches than tokens."""
+    cfg = get_smoke("granite-3-2b")
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=2, page_size=PS,
+                                  decode_chunk=8))
+    rng = np.random.default_rng(8)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, (9,)).astype(np.int32),
+                    max_new_tokens=8) for _ in range(2)]
+    eng.serve(reqs)
+    st = eng.paging_stats
+    assert all(r.ok_like and len(r.out) == 8 for r in reqs)
+    # prefill emits token 1; the remaining 7 decode steps fuse into 1 chunk
+    assert st["decode_dispatches"] == 1
+    assert st["decode_steps"] / st["decode_dispatches"] >= 4.0
+
+
+# ----------------------------------------------------------- EOS mid-chunk
+
+
+def test_eos_mid_chunk_truncates_stream_batchmate_unaffected():
+    """EOS landing inside a chunk: the device keeps decoding the finished
+    slot harmlessly (budget mask holds it), the host commit truncates the
+    stream at the EOS token, and the batchmate's stream is untouched."""
+    cfg = get_smoke("granite-3-2b")
+    probe = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=2, page_size=PS))
+    found = None
+    for seed in range(16, 48):        # greedy smoke streams often repeat a
+        rng = np.random.default_rng(seed)          # token — scan for a seed
+        pa = rng.integers(0, cfg.vocab, (9,)).astype(np.int32)   # whose EOS
+        pb = rng.integers(0, cfg.vocab, (11,)).astype(np.int32)  # is clean
+        ga = _oracle(probe, Request(tokens=pa, max_new_tokens=8))
+        gb = _oracle(probe, Request(tokens=pb, max_new_tokens=8))
+        # first mid-chunk position whose token is NEW to both streams' heads
+        for idx in range(2, 7):
+            eos = ga[idx]
+            if eos not in ga[:idx] and eos not in gb:
+                found = (pa, pb, ga, gb, idx, int(eos))
+                break
+        if found:
+            break
+    assert found, "no seed produced a clean mid-chunk EOS geometry"
+    pa, pb, ga, gb, idx, eos = found
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=2, page_size=PS,
+                                  decode_chunk=8, eos_id=eos),
+                 params=probe.params)
+    ra = Request(tokens=pa, max_new_tokens=8)
+    rb = Request(tokens=pb, max_new_tokens=8)
+    eng.serve([ra, rb])
+    assert ra.ok_like and ra.out == ga[:idx + 1]  # truncated AT the EOS
+    assert rb.ok_like and rb.out == gb            # batchmate unaffected
+    assert eng.paging_stats["pages_in_use"] == 0  # early finisher freed
+
+
+# ------------------------------------------- host events at chunk boundaries
+
+
+def test_deadline_expiry_at_chunk_boundary():
+    """The deadline sweep runs once per chunk: a request whose deadline
+    lapses mid-chunk is timed out at the NEXT boundary with its partial
+    chunk committed, while its batchmate completes against the oracle."""
+    cfg = get_smoke("granite-3-2b")
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=2, page_size=PS,
+                                  decode_chunk=4))
+    clock = FakeClock()
+    eng.clock = clock
+    _tick_decode(eng, clock)                      # 1s per decode step
+    rng = np.random.default_rng(13)
+    mk = lambda mx, dl: Request(
+        tokens=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+        max_new_tokens=mx, deadline_s=dl)
+    slow = mk(12, 2.5)            # lapses inside the first 4-step chunk
+    ok = mk(6, None)
+    eng.serve([slow, ok])
+    assert slow.done and slow.status == "timed_out"
+    assert "deadline" in slow.error
+    # the whole in-flight chunk commits before the boundary sweep: prefill
+    # token + one full 4-step chunk (t=4 > 2.5), never a mid-chunk cut
+    assert len(slow.out) == 5
+    assert ok.ok_like and ok.out == _oracle(eng, ok)
+    st = eng.paging_stats
+    assert st["timed_out"] == 1 and st["completed"] == 1
+    assert st["pages_in_use"] == 0
+
+
+def test_preemption_at_chunk_boundary_matches_oracle():
+    """The §6.4 overload geometry under chunk=4: recompute preemption is
+    decided at chunk boundaries (_ensure_pages horizon grows to the chunk,
+    capped by free pages), every stream still completes token-identical,
+    and the pool bound holds."""
+    cfg = get_smoke("granite-3-2b")
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=3, page_size=8,
+                                  n_pages=5, decode_chunk=4))
+    rng = np.random.default_rng(7)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+                    max_new_tokens=5) for _ in range(6)]
+    eng.serve(reqs)
+    assert all(r.ok_like and len(r.out) == 5 for r in reqs)
+    for r in reqs:
+        assert r.out == _oracle(eng, r), "preempted stream drifted"
+    st = eng.paging_stats
+    assert st["preemptions"] > 0 and st["recompute_tokens"] > 0
+    assert st["page_high_water"] <= 4
+    assert st["pages_in_use"] == 0 and st["reserved_pages"] == 0
+
+
+# -------------------------------------------------- replica fault mid-chunk
+
+
+def test_replica_kill_mid_chunk_migrates_partial_commit():
+    """A ("replica", 2) fault under chunk=8: the session splits the chunk
+    so the fault fires at exactly decode step 2 — the 2 pre-fault steps
+    are already committed when the replica dies, and the migrated requests
+    (re-prefilled prompt + partial prefix on a survivor) finish
+    token-identical to the oracle."""
+    clock = FakeClock()
+    fc = FaultConfig(max_restarts=3, backoff_s=0.5)
+    cfg = get_smoke("granite-3-2b")
+    scfg = ServeConfig(max_seq=S_MAX, n_slots=2, page_size=PS,
+                       decode_chunk=8)
+    first = Engine(cfg, scfg, fault_cfg=fc)
+    engines = [first] + [Engine(cfg, scfg, params=first.params,
+                                fault_cfg=fc) for _ in range(2)]
+    engines[1].fault_injector = FaultInjector(
+        fail_at_steps=(("replica", 2),))
+    for e in engines:
+        e.clock = clock
+        _tick_decode(e, clock)
+    router = Router(engines, cfg=RouterConfig(n_replicas=3), fault_cfg=fc,
+                    clock=clock, sleep=clock.advance)
+    rng = np.random.default_rng(5)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+                    max_new_tokens=6) for _ in range(8)]
+    router.serve(reqs)
+    assert all(r.ok_like for r in reqs), \
+        [(r.status, r.error) for r in reqs if not r.ok_like]
+    for r in reqs:
+        assert r.out == _oracle(engines[0], r), "migrated stream drifted"
+    st = router.stats()
+    assert st["replica_faults"] == 1 and st["migrations"] > 0
+    assert st["failed"] == 0 and st["completed"] == 8
+    # the chunk was split at the armed step: the dead session retired with
+    # exactly 2 decode steps committed (not 0 — partial commit migrated;
+    # not 8 — the fault did not wait for the chunk boundary)
+    dead = router.replicas[1].retired_stats[0]
+    assert dead["decode_steps"] == 2
+    migrated = [r for r in reqs if r.retries > 0]
+    assert migrated and any(len(r.out) for r in migrated)
+
+
+# ------------------------------------------------- watchdog normalization
+
+
+def test_watchdog_normalizes_dt_per_step_in_chunk():
+    """A fused dispatch reports dt / steps_ran to the watchdog: warming
+    the EWMA with chunk-of-1 dispatches (1s per step) and then running an
+    8-step chunk (8s total, still 1s per step) must flag NO straggler —
+    pre-normalization it looked 8x slow and always fired."""
+    cfg = get_smoke("granite-3-2b")
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=2, page_size=PS,
+                                  decode_chunk=8),
+                 fault_cfg=FaultConfig(straggler_factor=2.0))
+    clock = FakeClock()
+    eng.clock = clock
+    _tick_decode(eng, clock)                      # 1s per decode STEP
+    rng = np.random.default_rng(14)
+    session = eng.start_session()
+    session.submit(Request(tokens=rng.integers(0, cfg.vocab,
+                                               (6,)).astype(np.int32),
+                           max_new_tokens=13))
+    for _ in range(5):                            # EWMA warmup, 1 step each
+        session.step(1)
+    session.step(8)                               # one fused 8-step dispatch
+    session.drain()
+    snap = session.stats_snapshot()
+    assert snap["straggler_decode_steps"] == 0
+    assert snap["decode_dispatches"] >= 6
+
+
+# ------------------------------------------------------- sampling kernel
+
+
+def test_sample_tokens_greedy_and_top_k():
+    """The shared sampler: temperature<=0 is pure argmax (no key consumed,
+    None accepted); top-k masks everything below the kth logit so sampled
+    ids always come from the top-k set; top_k=0 disables the filter."""
+    logits = jnp.asarray(
+        np.random.default_rng(0).standard_normal((3, 1, 17)),
+        jnp.float32)
+    greedy = device_loop.sample_tokens(logits, None, 0.0, 0)
+    np.testing.assert_array_equal(
+        np.asarray(greedy), np.argmax(np.asarray(logits)[:, -1], axis=-1))
+    top = set(np.argsort(np.asarray(logits)[0, -1])[-4:].tolist())
+    for seed in range(6):
+        t = device_loop.sample_tokens(logits, jax.random.PRNGKey(seed),
+                                      1.3, 4)
+        assert int(t[0]) in top, "sampled outside the top-k set"
+    full = device_loop.sample_tokens(logits, jax.random.PRNGKey(0), 1.0, 0)
+    assert full.shape == (3,) and full.dtype == jnp.int32
+
+
+def test_launch_decode_step_is_device_loop_factory():
+    """launch/steps.py delegates its decode-step builder to the serving
+    core's single factory — one decode path, no drift between the
+    launcher and the fused loop."""
+    from repro.launch import steps as launch_steps
+    cfg = get_smoke("granite-3-2b")
+    from repro.models import LanguageModel
+    model = LanguageModel(cfg)
+    a = launch_steps.make_decode_step(model)
+    b = device_loop.make_decode_step(model)
+    assert a.__code__ is b.__code__ or a.__qualname__ == b.__qualname__

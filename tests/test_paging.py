@@ -45,17 +45,32 @@ class FakeClock:
 
 
 def _tick_decode(eng, clock, dt=1.0, slow_at=()):
-    """Wrap the engine's decode so each step advances the fake clock by
-    ``dt`` (``slow_at``: step indices that take 10× — straggler fodder)."""
+    """Wrap the engine's decode dispatches so each decode STEP advances
+    the fake clock by ``dt`` (``slow_at``: step indices that take 10× —
+    straggler fodder).  Serving goes through the fused chunk runner
+    (``_fused_decode``, one dispatch = up to decode_chunk steps — the
+    clock advances by the steps that actually ran); ``generate()`` and
+    the stepwise oracle go through ``_decode`` (one step per call)."""
     orig = eng._decode
+    orig_fused = eng._fused_decode
     count = [0]
 
-    def wrapped(*a):
-        clock.advance(dt * (10.0 if count[0] in slow_at else 1.0))
+    def cost():
+        c = dt * (10.0 if count[0] in slow_at else 1.0)
         count[0] += 1
+        return c
+
+    def wrapped(*a):
+        clock.advance(cost())
         return orig(*a)
 
+    def wrapped_fused(*a):
+        out = orig_fused(*a)
+        clock.advance(sum(cost() for _ in range(int(out[1]))))
+        return out
+
     eng._decode = wrapped
+    eng._fused_decode = wrapped_fused
 
 
 # ------------------------------------------------------------- allocator
@@ -420,9 +435,12 @@ def test_serve_deadline_expiry_releases_slot_and_pages(layout):
 
 def test_serve_straggler_decode_steps_flagged():
     """The train/fault.py Watchdog rides along: a decode step 10x slower
-    than the EWMA (fake clock) lands in paging_stats."""
+    than the EWMA (fake clock) lands in paging_stats.  decode_chunk=1
+    keeps per-step watchdog granularity — chunked dispatches observe a
+    per-step-normalized dt (see test_device_loop.py for that case)."""
     cfg = get_smoke("granite-3-2b")
-    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=2, page_size=PS))
+    eng = Engine(cfg, ServeConfig(max_seq=S_MAX, n_slots=2, page_size=PS,
+                                  decode_chunk=1))
     clock = FakeClock()
     eng.clock = clock
     _tick_decode(eng, clock, slow_at=(8,))

@@ -35,14 +35,24 @@ class FakeClock:
 
 
 def _tick_decode(eng, clock, dt=1.0):
-    """Each decode step on this engine advances the shared fake clock."""
+    """Each decode step on this engine advances the shared fake clock.
+    Serving dispatches through the fused chunk runner (one call = up to
+    decode_chunk steps — the clock advances by the steps that ran);
+    generate()/oracle calls go through the per-step ``_decode``."""
     orig = eng._decode
+    orig_fused = eng._fused_decode
 
     def wrapped(*a):
         clock.advance(dt)
         return orig(*a)
 
+    def wrapped_fused(*a):
+        out = orig_fused(*a)
+        clock.advance(dt * int(out[1]))
+        return out
+
     eng._decode = wrapped
+    eng._fused_decode = wrapped_fused
 
 
 def _fleet(n_replicas, clock=None, fault_cfg=None, router_cfg=None,
@@ -249,7 +259,11 @@ def test_drain_replica_finishes_residents_then_recycles():
     residents run to completion (not migrated, not killed), and the
     replica rejoins the healthy pool with a fresh session."""
     clock = FakeClock()
-    cfg, engines, router = _fleet(2, clock=clock, n_slots=1)
+    # one decode step per round (not a full fused chunk) so replica 0
+    # still has a mid-stream resident when the drain order lands
+    cfg, engines, router = _fleet(
+        2, clock=clock, n_slots=1,
+        router_cfg=RouterConfig(n_replicas=2, steps_per_round=1))
     reqs = _reqs(cfg, 4, max_new=8)
     for r in reqs:
         router.submit(r)
