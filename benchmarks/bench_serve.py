@@ -42,6 +42,14 @@ surviving replicas absorb the dead one's in-flight requests (recompute
 migration — streams asserted token-identical to the single-engine
 oracle), and ``migrations`` / ``retries_exhausted`` / ``shed`` are
 deterministic scheduler properties, CI-gated never-grow.
+
+The **crash_restore** mix (DESIGN.md §7.6) snapshots a kv_integrity
+session mid-decode, restores it into a fresh engine (simulated process
+death), corrupts one live KV page through the injector during the drained
+tail, and asserts every stream token-identical to the oracle.  Its
+``restore_recompute_tokens`` and ``pages_quarantined`` counters are the
+deterministic recovery-cost budget and CI-gated never-grow;
+``snapshot_bytes`` is informational.
 """
 from __future__ import annotations
 
@@ -303,6 +311,89 @@ def bench_router(cfg) -> Dict:
     }
 
 
+# crash_restore mix geometry (DESIGN.md §7.6): serve with kv_integrity on,
+# snapshot the session mid-decode, "kill" the process (fresh engine, shared
+# params), restore from the snapshot, arm one silent page corruption in the
+# drained tail, and drain.  Every stream — pre-crash prefix plus post-
+# restore tail, including the corruption victim's recompute — must be
+# token-identical to the single-engine greedy oracle.  The recovery-cost
+# counters (``restore_recompute_tokens``: tokens re-prefilled to rebuild
+# the dead process's KV; ``pages_quarantined``: pool capacity retired by
+# the integrity checker) are deterministic plan properties and CI-gated
+# never-grow; ``snapshot_bytes`` is informational (float age strings vary).
+CRASH = dict(n_slots=2, page_size=8, n_requests=6, prompt_len=12,
+             max_new=20, snapshot_after_steps=6, corrupt_page=1)
+
+
+def bench_crash_restore(cfg) -> Dict:
+    from repro.serve import Engine, Request, ServeConfig
+    from repro.train.fault import FaultInjector
+    cv = CRASH
+    scfg = ServeConfig(max_seq=MAX_SEQ, n_slots=cv["n_slots"],
+                       page_size=cv["page_size"], temperature=0.0,
+                       eos_id=-1, kv_integrity=True)
+    eng = Engine(cfg, scfg)
+    rng = np.random.default_rng(3)
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab, (cv["prompt_len"],)
+                                        ).astype(np.int32),
+                    max_new_tokens=cv["max_new"])
+            for _ in range(cv["n_requests"])]
+    oracle = {r.tokens.tobytes(): list(eng.generate(
+        r.tokens[None, :], max_new_tokens=cv["max_new"])[0]) for r in reqs}
+
+    t0 = time.time()
+    sess = eng.start_session(list(reqs))
+    sess.step(cv["snapshot_after_steps"])
+    snap = sess.snapshot()
+    snapshot_bytes = len(json.dumps(snap).encode())
+    # process death: a fresh engine (weights survive, host state does not)
+    # restores the snapshot and drains, with one silent page corruption
+    # armed so the integrity checker earns its keep mid-recovery
+    eng2 = Engine(cfg, scfg, params=eng.params)
+    inj = FaultInjector(fail_at_steps=(("page", cv["corrupt_page"]),))
+    sess2, restored = eng2.restore_session(snap, fault_injector=inj)
+    sess2.drain()
+    wall_s = time.time() - t0
+
+    done = [r for r in reqs if r.done] + restored
+    assert len(done) == cv["n_requests"], "crash_restore: lost a request"
+    assert all(r.done and r.ok_like for r in done), \
+        "crash_restore: a request failed across the crash"
+    # THE acceptance assert: every stream survives the kill + corruption
+    # token-identical to the oracle
+    for r in done:
+        assert r.out == oracle[r.tokens.tobytes()], \
+            "crash_restore: stream drifted across snapshot/restore"
+    st = sess2.stats_snapshot()
+    assert st["restores"] == 1 and st["restore_recompute_tokens"] > 0
+    assert st["pages_quarantined"] >= 1, \
+        "crash_restore: corrupted page was not quarantined"
+    assert st["preemptions"] >= 1 and st["failed"] == 0
+    total_tokens = int(sum(len(r.out) for r in done))
+    return {
+        **{k: cv[k] for k in ("n_slots", "page_size", "prompt_len",
+                              "max_new", "snapshot_after_steps")},
+        "n_requests": cv["n_requests"],
+        "total_tokens": total_tokens,
+        "wall_s": round(wall_s, 4),                     # informational
+        "snapshot_bytes": snapshot_bytes,               # informational
+        "decode_steps": st["decode_steps"],
+        **_dispatch_metrics(st, total_tokens),
+        # deterministic recovery-cost counters (gated never-grow in CI)
+        "restores": st["restores"],
+        "restore_recompute_tokens": st["restore_recompute_tokens"],
+        "pages_quarantined": st["pages_quarantined"],
+        "nonfinite_logits": st["nonfinite_logits"],
+        "double_release": st["double_release"],
+        "preemptions": st["preemptions"],
+        "recompute_tokens": st["recompute_tokens"],
+        "failed": st["failed"],
+        "completed": st["completed"],
+        "page_high_water": st["page_high_water"],
+        "peak_live_tokens": st["peak_live_tokens"],
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -354,6 +445,14 @@ def main(argv=None) -> int:
           f"{router['queue_limit']}, {router['retries_exhausted']} "
           f"retry-budget exhaustions, per-replica page high-water "
           f"{router['page_high_water_per_replica']}")
+
+    crash = bench_crash_restore(cfg)
+    mixes["crash_restore"] = {"paged": crash}
+    print(f"crash_restore: snapshot {crash['snapshot_bytes']} bytes after "
+          f"{crash['snapshot_after_steps']} steps, "
+          f"{crash['restore_recompute_tokens']} restore-recompute tokens, "
+          f"{crash['pages_quarantined']} pages quarantined, "
+          f"{crash['completed']} completed / {crash['failed']} failed")
 
     peaks = [m["paged"]["paged_peak_tokens"] for m in mixes.values()
              if "paged_peak_tokens" in m["paged"]]

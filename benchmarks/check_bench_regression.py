@@ -194,7 +194,11 @@ def compare_serve(baseline: dict, new: dict):
         for key in ("page_high_water", "pages_per_token",
                     "preemptions", "recompute_tokens", "rejected",
                     "migrations", "retries_exhausted", "shed",
-                    "dispatches_per_token"):
+                    "dispatches_per_token",
+                    # §7.6 crash_restore recovery-cost budget: tokens
+                    # re-prefilled after a restore and pool capacity
+                    # retired by the integrity checker
+                    "restore_recompute_tokens", "pages_quarantined"):
             old_v, new_v = base.get(key), paged.get(key)
             if old_v is not None and new_v is not None and new_v > old_v:
                 failures.append(

@@ -29,8 +29,32 @@ Multi-replica drills (DESIGN.md §7):
                     inject a replica-tier fault (FaultInjector site
                     "replica") on replica I's K-th decode step — the
                     failover drill the router bench and tests run.
+
+Crash-consistency drills (DESIGN.md §7.6):
+  --snapshot-every N   write a crash-consistent snapshot (session or
+                       whole-router state, train/checkpoint.py atomic
+                       write + rolling retention) every N scheduling
+                       rounds into --snapshot-dir.
+  --restore-from DIR   start by restoring the latest snapshot under DIR
+                       (the dead process's queue and in-flight requests
+                       resume token-identically), then serve the new
+                       requests behind them.
+  --kill-process-at K  inject a ("process", K) fault: the whole process
+                       dies at decode step K.  With --snapshot-every set
+                       the launcher then runs the full drill in-process:
+                       rebuild the fleet from params, restore the latest
+                       snapshot, drain — the crash lane's CI check.
+  --corrupt-page IDX   inject KV-page corruption into live page IDX at a
+                       chunk boundary (--corrupt-nan: NaN poison caught
+                       by the logit screen instead of silent garbage
+                       caught by the checksum verify); requires
+                       --kv-integrity for detection/recovery.
+  --kv-integrity       arm per-page crc32 checksums + NaN/Inf logit
+                       screening (detection quarantines the page and
+                       recompute-preempts exactly the touched requests).
 """
 import argparse
+import sys
 import time
 from collections import Counter
 
@@ -89,12 +113,35 @@ def main(argv=None):
                          "index (failover drill); -1 = off")
     ap.add_argument("--kill-at-step", type=int, default=2,
                     help="decode step of the injected replica fault")
+    ap.add_argument("--kv-integrity", action="store_true",
+                    help="arm per-page checksums + NaN/Inf logit "
+                         "screening (DESIGN.md §7.6)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="write a crash-consistent snapshot every N "
+                         "scheduling rounds; 0 = off")
+    ap.add_argument("--snapshot-dir", default="snapshots_serve",
+                    help="directory for --snapshot-every / the crash "
+                         "drill's restore point")
+    ap.add_argument("--restore-from", default="",
+                    help="restore the latest snapshot under this "
+                         "directory before serving new requests")
+    ap.add_argument("--kill-process-at", type=int, default=-1,
+                    help="inject a (\"process\", K) fault at decode step "
+                         "K; with --snapshot-every the launcher rebuilds "
+                         "and restores in-process (crash drill); -1 = off")
+    ap.add_argument("--corrupt-page", type=int, default=-1,
+                    help="corrupt live KV page IDX at a chunk boundary "
+                         "(page-corruption drill); -1 = off")
+    ap.add_argument("--corrupt-nan", action="store_true",
+                    help="NaN-poison the corrupted page (logit-screen "
+                         "path) instead of silent garbage (checksum path)")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, get_smoke
     from repro.serve import Engine, Request, Router, RouterConfig, \
         ServeConfig
-    from repro.train.fault import FaultConfig, FaultInjector
+    from repro.train.checkpoint import SnapshotManager, restore_snapshot
+    from repro.train.fault import FaultConfig, FaultInjector, ProcessKilled
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     scfg = ServeConfig(
@@ -102,9 +149,18 @@ def main(argv=None):
         page_size=args.page_size, n_pages=args.n_pages,
         decode_chunk=args.decode_chunk,
         admission_policy=args.admission_policy, strict=args.strict,
-        deadline_s=args.deadline_s)
+        deadline_s=args.deadline_s, kv_integrity=args.kv_integrity)
     fault_cfg = FaultConfig(straggler_factor=args.straggler_factor,
                             max_restarts=args.retry_budget)
+    fail_at = []
+    if args.kill_process_at >= 0:
+        fail_at.append(("process", args.kill_process_at))
+    if args.corrupt_page >= 0:
+        fail_at.append(("page_nan" if args.corrupt_nan else "page",
+                        args.corrupt_page))
+    injector = FaultInjector(fail_at_steps=fail_at) if fail_at else None
+    write_mgr = SnapshotManager(args.snapshot_dir) \
+        if args.snapshot_every > 0 else None
     rng = np.random.default_rng(0)
     lengths = [16] * args.requests
     if args.mixed_lengths:
@@ -115,6 +171,9 @@ def main(argv=None):
                     max_new_tokens=args.max_new)
             for ln in lengths]
 
+    restored = []
+    crash_recovered = False
+    snap_seq = None
     if args.replicas > 1:
         first = Engine(cfg, scfg, fault_cfg=fault_cfg)
         engines = [first] + [Engine(cfg, scfg, params=first.params,
@@ -123,26 +182,89 @@ def main(argv=None):
         if 0 <= args.kill_replica < len(engines):
             engines[args.kill_replica].fault_injector = FaultInjector(
                 fail_at_steps=(("replica", args.kill_at_step),))
-        router = Router(engines, cfg=RouterConfig(
-            n_replicas=args.replicas, queue_limit=args.router_queue),
-            fault_cfg=fault_cfg)
+        if injector is not None:
+            # process/page sites fire once — sharing the injector arms
+            # whichever replica reaches the step first
+            for e in engines:
+                e.fault_injector = injector
+
+        def build_router(es):
+            return Router(es, cfg=RouterConfig(
+                n_replicas=args.replicas, queue_limit=args.router_queue),
+                fault_cfg=fault_cfg)
+
+        router = build_router(engines)
+        if args.restore_from:
+            restored = router.restore(restore_snapshot(args.restore_from))
         t0 = time.time()
         for r in reqs:
             router.submit(r)
-        router.run_round()
-        if 0 <= args.drain < len(engines):
-            router.drain_replica(args.drain)
-        while not router.idle:
-            router.run_round()
+        rounds = 0
+        try:
+            while not router.idle:
+                if write_mgr and rounds % args.snapshot_every == 0:
+                    write_mgr.save(router.snapshot())
+                router.run_round()
+                rounds += 1
+                if rounds == 1 and 0 <= args.drain < len(engines):
+                    router.drain_replica(args.drain)
+        except ProcessKilled as exc:
+            if write_mgr is None:
+                raise
+            # the whole-process crash drill: every replica, session, and
+            # queue is gone — rebuild the fleet from params and resume
+            # from the last crash-consistent snapshot
+            crash_recovered = True
+            print(f"process killed ({exc!r}); rebuilding the fleet and "
+                  "restoring the latest snapshot")
+            engines = [Engine(cfg, scfg, params=first.params,
+                              fault_cfg=fault_cfg)
+                       for _ in range(args.replicas)]
+            router = build_router(engines)
+            state, snap_seq = write_mgr.restore_latest()
+            restored = router.restore(state)
+            while not router.idle:
+                router.run_round()
         dt = time.time() - t0
-        done = reqs
+        done = [r for r in reqs if r.done] + restored
         ps = router.stats()
     else:
-        eng = Engine(cfg, scfg, fault_cfg=fault_cfg)
+        eng = Engine(cfg, scfg, fault_cfg=fault_cfg,
+                     fault_injector=injector)
         t0 = time.time()
-        done = eng.serve(reqs)
-        dt = time.time() - t0
-        ps = eng.paging_stats
+        if write_mgr is None and not args.restore_from:
+            done = eng.serve(reqs)
+            dt = time.time() - t0
+            ps = eng.paging_stats
+        else:
+            sess = eng.start_session()
+            if args.restore_from:
+                restored = sess.restore(
+                    restore_snapshot(args.restore_from))
+            for r in reqs:
+                sess.submit(r)
+            rounds = 0
+            try:
+                while not sess.idle:
+                    if write_mgr and rounds % args.snapshot_every == 0:
+                        write_mgr.save(sess.snapshot())
+                    sess.step(max(1, args.decode_chunk))
+                    rounds += 1
+            except ProcessKilled as exc:
+                if write_mgr is None:
+                    raise
+                crash_recovered = True
+                print(f"process killed ({exc!r}); rebuilding the engine "
+                      "and restoring the latest snapshot")
+                eng = Engine(cfg, scfg, params=eng.params,
+                             fault_cfg=fault_cfg)
+                state, snap_seq = write_mgr.restore_latest()
+                sess, restored = eng.restore_session(state)
+                sess.drain()
+            dt = time.time() - t0
+            done = [r for r in reqs if r.done] + restored
+            eng.paging_stats = sess.stats_snapshot()
+            ps = eng.paging_stats
 
     total = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests / {total} tokens in {dt:.2f}s "
@@ -165,6 +287,18 @@ def main(argv=None):
               f"{ps['rejected']} rejected, {ps['failed']} failed, "
               f"{ps['timed_out']} timed out, "
               f"{ps['straggler_decode_steps']} straggler decode steps")
+    if crash_recovered:
+        n_ok = sum(r.ok_like for r in restored)
+        print(f"crash drill: restored {len(restored)} requests from "
+              f"snapshot seq {snap_seq}; {n_ok} completed ok, "
+              f"{len(restored) - n_ok} not ok")
+    if args.kv_integrity and ps:
+        print(f"integrity: {ps.get('nonfinite_logits', 0)} non-finite "
+              f"logit events, {ps.get('pages_quarantined', 0)} pages "
+              f"quarantined, {ps.get('double_release', 0)} double "
+              f"releases, {ps.get('restores', 0)} restores "
+              f"({ps.get('restore_recompute_tokens', 0)} restore-"
+              "recompute tokens)")
     if args.replicas > 1:
         print(f"router: {ps['n_replicas']} replicas "
               f"{ps['replica_states']}, per-replica page high-water "
@@ -174,7 +308,20 @@ def main(argv=None):
               f"{ps['replica_restarts']} restarts, "
               f"{ps['retries_exhausted']} retry-budget exhaustions, "
               f"{ps['shed']} shed, {ps['drains']} drains")
+    # chaos-lane gate (CI): a drill run must leave no request unfinished,
+    # and under an injected kill or page corruption every request must end
+    # in an ok-like state — anything else is a recovery bug, exit non-zero
+    if not all(r.done for r in done):
+        print("# FAIL: unfinished requests", file=sys.stderr)
+        return 1
+    drill = crash_recovered or args.corrupt_page >= 0 \
+        or args.kill_process_at >= 0
+    if drill and any(not r.ok_like for r in done):
+        print("# FAIL: a request did not survive the fault drill",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -92,12 +92,18 @@ def build_fused_decode(model, cfg):
     """Build the jitted fused chunk runner for one engine config.
 
     Returns ``fused(params, caches, cur_tok, remaining, active, key,
-    n_steps) → (block, steps_ran, cur_tok, key, caches)`` where
+    n_steps) → (block, steps_ran, cur_tok, key, caches, logit_ok)`` where
     ``block`` is the static ``(k_max, n_slots)`` token block (rows past
-    ``steps_ran`` are zero-padding the host never reads).  Sampling
-    parameters (temperature, top-k, EOS) are baked in from ``cfg`` —
-    they are per-engine constants, and baking them keeps the loop body
-    free of host branches.
+    ``steps_ran`` are zero-padding the host never reads) and ``logit_ok``
+    is the matching ``(k_max, n_slots)`` bool block: row i is per-slot
+    "every last-position logit at step i was finite" — the host's
+    commit-time NaN/Inf screen (DESIGN.md §7.6) reads it to stop
+    committing a poisoned stream at the exact step the poison appeared.
+    ``logit_ok`` rides at the END of the tuple so existing consumers of
+    positions 0–4 keep working.  Sampling parameters (temperature,
+    top-k, EOS) are baked in from ``cfg`` — they are per-engine
+    constants, and baking them keeps the loop body free of host
+    branches.
     """
     eos = int(cfg.eos_id)
     temperature = float(cfg.temperature)
@@ -109,12 +115,16 @@ def build_fused_decode(model, cfg):
         n = cur_tok.shape[0]
 
         def cond(c):
-            step, _, _, _, act, _, _ = c
+            step, _, _, _, act, _, _, _ = c
             return (step < n_steps) & jnp.any(act)
 
         def body(c):
-            step, caches, tok, rem, act, key, block = c
+            step, caches, tok, rem, act, key, block, ok = c
             logits, caches = decode(params, caches, tok)
+            # per-slot finiteness of the sampled position's logits —
+            # NaN/Inf here means the KV pages this slot read are poisoned
+            fin = jnp.all(jnp.isfinite(logits[:, -1, :].astype(jnp.float32)),
+                          axis=-1)
             if temperature > 0.0:
                 # one split per decode step — the exact key-consumption
                 # cadence of the host sampler, so device streams match
@@ -124,17 +134,19 @@ def build_fused_decode(model, cfg):
             else:
                 nxt = sample_tokens(logits, None, temperature, top_k)
             block = block.at[step].set(nxt)
+            ok = ok.at[step].set(fin)
             rem = jnp.where(act, rem - 1, rem)
             done = rem <= 0
             if eos >= 0:
                 done = done | (nxt == eos)
             return (step + 1, caches, nxt[:, None], rem, act & ~done,
-                    key, block)
+                    key, block, ok)
 
         init = (jnp.zeros((), jnp.int32), caches, cur_tok, remaining,
-                active, key, jnp.zeros((k_max, n), jnp.int32))
-        step, caches, tok, _, _, key, block = jax.lax.while_loop(
+                active, key, jnp.zeros((k_max, n), jnp.int32),
+                jnp.ones((k_max, n), jnp.bool_))
+        step, caches, tok, _, _, key, block, ok = jax.lax.while_loop(
             cond, body, init)
-        return block, step, tok, key, caches
+        return block, step, tok, key, caches, ok
 
     return jax.jit(fused, donate_argnums=(1,))

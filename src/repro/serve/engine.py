@@ -42,7 +42,47 @@ import numpy as np
 from repro.models import LanguageModel
 from repro.serve import device_loop, paging
 
-__all__ = ["ServeConfig", "Engine", "EngineSession", "Request"]
+__all__ = ["ServeConfig", "Engine", "EngineSession", "Request",
+           "request_to_state", "request_from_state"]
+
+
+def request_to_state(req: "Request", now: float) -> Dict:
+    """JSON-serializable crash-consistent state of one undone request
+    (DESIGN.md §7.6).  KV tensors are NOT captured — the generated
+    prefix in ``out`` is enough for the recompute path to resume the
+    stream exactly.  The arrival timestamp is stored as an *age* so the
+    restoring process can rebase it onto its own clock (deadlines keep
+    running across the restart)."""
+    return {
+        "tokens": np.asarray(req.tokens, np.int32).tolist(),
+        "max_new_tokens": int(req.max_new_tokens),
+        "out": None if req.out is None else [int(t) for t in req.out],
+        "preemptions": int(req.preemptions),
+        "retries": int(req.retries),
+        "deadline_s": req.deadline_s,
+        "age_s": 0.0 if req.arrival_t is None
+        else float(now - req.arrival_t),
+        "queue_s": float(req.queue_s),
+        "prefill_s": float(req.prefill_s),
+    }
+
+
+def request_from_state(state: Dict, now: float) -> "Request":
+    """Inverse of :func:`request_to_state`: rebuild a live
+    :class:`Request` in the restoring process, arrival rebased to
+    ``now - age_s``."""
+    req = Request(tokens=np.asarray(state["tokens"], np.int32),
+                  max_new_tokens=state["max_new_tokens"])
+    req.out = None if state.get("out") is None else list(state["out"])
+    req.preemptions = state.get("preemptions", 0)
+    req.retries = state.get("retries", 0)
+    req.deadline_s = state.get("deadline_s")
+    req.arrival_t = now - state.get("age_s", 0.0)
+    req.queue_s = state.get("queue_s", 0.0)
+    req.prefill_s = state.get("prefill_s", 0.0)
+    if req.preemptions:
+        req.status = f"preempted_{req.preemptions}"
+    return req
 
 
 @dataclasses.dataclass
@@ -74,6 +114,15 @@ class ServeConfig:
     # default completion deadline (seconds from serve() entry) applied to
     # requests that don't carry their own ``deadline_s``; 0 → no deadline.
     deadline_s: float = 0.0
+    # --- KV-page integrity (DESIGN.md §7.6) ---
+    # kv_integrity=True arms two independent detectors for silent
+    # device-memory corruption in the long-lived page pools: per-page
+    # crc32 checksums recorded at chunk-commit boundaries and verified
+    # before every dispatch (corruption at rest), and a NaN/Inf logit
+    # screen in the commit loop (corruption that strikes inside the
+    # dispatch window).  Detection quarantines the page and
+    # recompute-preempts exactly the requests that touched it.
+    kv_integrity: bool = False
 
 
 @dataclasses.dataclass
@@ -365,6 +414,15 @@ class Engine:
             else self.fault_injector
         return EngineSession(self, requests or [], injector)
 
+    def restore_session(self, snap, fault_injector=None):
+        """Crash-recovery convenience: fresh session + load a
+        :meth:`EngineSession.snapshot`.  Returns ``(session, requests)``
+        where ``requests`` are the re-enqueued handles in queue order —
+        ``session.drain()`` completes them token-identically to the
+        streams the dead process was producing."""
+        session = self.start_session([], fault_injector)
+        return session, session.restore(snap)
+
     def serve(self, requests: List[Request],
               fault_injector=None) -> List[Request]:
         """Continuous mixed-length batching over a request queue.
@@ -479,7 +537,9 @@ class EngineSession:
             self.geom = paging.geometry(cfg.max_seq, cfg.page_size, self.n,
                                         cfg.n_pages)
             self.alloc = paging.PageAllocator(self.geom, self.n,
-                                              policy=cfg.admission_policy)
+                                              policy=cfg.admission_policy,
+                                              strict=cfg.strict)
+        self.kv_integrity = cfg.kv_integrity and self.paged
         self.caches = engine.model.init_cache(self.n, cfg.max_seq,
                                               paging=self.geom)
         self.queue: deque = deque()
@@ -498,7 +558,9 @@ class EngineSession:
                       "peak_live_tokens": 0, "frag_at_high_water": 0.0,
                       "requests": 0, "completed": 0,
                       "preemptions": 0, "recompute_tokens": 0,
-                      "rejected": 0, "failed": 0, "timed_out": 0}
+                      "rejected": 0, "failed": 0, "timed_out": 0,
+                      "restores": 0, "restore_recompute_tokens": 0,
+                      "nonfinite_logits": 0}
         for req in requests:
             self.submit(req)
 
@@ -582,28 +644,113 @@ class EngineSession:
             if self.paged:
                 self.alloc.release(slot)
 
+    def _preempt_slot(self, slot: int) -> None:
+        """Recompute-preempt one specific slot: free its pages (corrupt
+        ones land in quarantine at release), re-enqueue the request at
+        the queue HEAD with its generated prefix kept in ``out`` —
+        re-admission prefills prompt+prefix and resumes sampling where
+        it left off."""
+        req = self.active[slot]
+        req.preemptions += 1
+        req.status = f"preempted_{req.preemptions}"
+        self.stats["preemptions"] += 1
+        self.stats["recompute_tokens"] += self.pos[slot]
+        self.active[slot] = None
+        if self.paged:
+            self.alloc.release(slot, evicted=True)
+        self.queue.appendleft(req)
+
     def _preempt_victim(self) -> int:
         """Recompute-preempt the latest-admitted (fewest tokens
-        generated) active slot: free its pages, re-enqueue the request
-        at the queue HEAD with its generated prefix kept in ``out`` —
-        re-admission prefills prompt+prefix and resumes sampling where
-        it left off.  Returns the victim slot."""
+        generated) active slot (see :meth:`_preempt_slot`).  Returns the
+        victim slot.  FIFO: the victim was admitted before anything
+        still queued (later evictions are earlier admissions —
+        appendleft keeps them ordered ahead of this one)."""
         victim = max((s for s in range(self.n)
                       if self.active[s] is not None),
                      key=lambda s: (self.admit_seq[s],
                                     -len(self.active[s].out)))
-        req = self.active[victim]
-        req.preemptions += 1
-        req.status = f"preempted_{req.preemptions}"
-        self.stats["preemptions"] += 1
-        self.stats["recompute_tokens"] += self.pos[victim]
-        self.active[victim] = None
-        self.alloc.release(victim, evicted=True)
-        # FIFO: the victim was admitted before anything still queued
-        # (later evictions are earlier admissions — appendleft keeps
-        # them ordered ahead of this one)
-        self.queue.appendleft(req)
+        self._preempt_slot(victim)
         return victim
+
+    # ---------------------------------------------------- page integrity
+    def _record_checksums(self) -> None:
+        """Chunk-commit boundary: fingerprint every live page's committed
+        contents into the allocator's checksum table (DESIGN.md §7.6).
+        A slot with ``pos`` resident tokens has committed exactly the
+        first ``pos`` rows of its page chain; lookahead pages with no
+        committed rows carry no record (nothing to protect yet)."""
+        alloc, ps = self.alloc, self.geom.page_size
+        committed: Dict[int, int] = {}
+        for slot in range(self.n):
+            if self.active[slot] is None:
+                continue
+            for j, page in enumerate(alloc.slot_pages[slot]):
+                ntok = min(ps, self.pos[slot] - j * ps)
+                if ntok > 0:
+                    committed[page] = ntok
+        for page in list(alloc.checksums):
+            if page not in committed:
+                del alloc.checksums[page]
+        for page, crc in paging.page_fingerprints(self.caches,
+                                                  committed).items():
+            alloc.record_checksum(page, committed[page], crc)
+
+    def _verify_integrity(self) -> None:
+        """Pre-dispatch verify: recompute every recorded page's crc over
+        its recorded committed length and compare.  A mismatch means the
+        page mutated between commit boundaries with no token having been
+        sampled from it yet (the verify runs before the next dispatch),
+        so recovery is surgical and oracle-exact: quarantine the page,
+        recompute-preempt exactly the slots whose block tables reference
+        it (their ``out`` prefixes predate the corruption), null the
+        affected table rows on device, and leave every other slot
+        untouched."""
+        alloc = self.alloc
+        if not alloc.checksums:
+            return
+        recorded = dict(alloc.checksums)
+        crcs = paging.page_fingerprints(
+            self.caches, {p: lc[0] for p, lc in recorded.items()})
+        bad = [p for p, crc in crcs.items() if crc != recorded[p][1]]
+        if not bad:
+            return
+        victims = set()
+        for page in bad:
+            owner = alloc.owner_of(page)
+            alloc.quarantine(page)
+            if owner is not None and self.active[owner] is not None:
+                victims.add(owner)
+        # preempt in reverse admission order so appendleft leaves the
+        # earliest-admitted victim at the queue head (FIFO preserved)
+        for slot in sorted(victims, key=lambda s: self.admit_seq[s],
+                           reverse=True):
+            self._preempt_slot(slot)
+        self.caches = paging.sync_block_tables(self.caches, alloc.table)
+
+    def _quarantine_slot_pages(self, slot: int) -> None:
+        """A slot's logits went non-finite mid-dispatch: localize the
+        poison in its page chain and quarantine it (the preempting
+        release then withholds those pages from the free list).  NaN
+        leaks through the attention mask from any position of a touched
+        page — including uncommitted tail positions the checksums don't
+        cover — so localization scans the pages for non-finite values
+        directly, falls back to checksum mismatches, and as a last
+        resort quarantines the whole chain (losing a few clean pages
+        beats re-admitting onto a poisoned one)."""
+        alloc = self.alloc
+        chain = list(alloc.slot_pages[slot])
+        bad = paging.pages_nonfinite(self.caches, chain)
+        if not bad:
+            recorded = {p: alloc.checksums[p][0] for p in chain
+                        if p in alloc.checksums}
+            bad = {p for p, crc in paging.page_fingerprints(
+                self.caches, recorded).items()
+                if crc != alloc.checksums[p][1]}
+        if not bad:
+            bad = set(chain)
+        for page in bad:
+            alloc.quarantine(page)
 
     def _admit(self) -> None:
         """Fill free slots from the queue; a request finishing at prefill
@@ -816,6 +963,12 @@ class EngineSession:
         ran = 0
         while ran < max_steps and (
                 self.queue or any(a is not None for a in self.active)):
+            if self.kv_integrity:
+                # commit-boundary verify BEFORE admission: corruption
+                # detected here frees/quarantines pages and re-enqueues
+                # its victims at the head, so recovery re-prefills in
+                # this very iteration
+                self._verify_integrity()
             self._admit()
             if all(a is None for a in self.active):
                 if self.queue:
@@ -829,26 +982,42 @@ class EngineSession:
             if all(a is None for a in self.active):
                 continue         # deadline sweep / self-eviction emptied
             if self.injector is not None:
-                # replica-tier fault: the whole engine dies mid-decode —
-                # deliberately NOT per-request isolated, raises out of
-                # step() so the router migrates this session's inflight().
-                # An armed step strictly inside the chunk caps it, so the
-                # next iteration fires the fault at the stepwise index
-                # with the pre-fault rows already committed.
+                # process-tier fault first (exact-match so bare ints can't
+                # escalate): the whole process dies — ProcessKilled raises
+                # through the router to the crash drill, which restores
+                # the latest snapshot.  Then replica tier: the engine dies
+                # mid-decode — deliberately NOT per-request isolated,
+                # raises out of step() so the router migrates this
+                # session's inflight().  An armed step strictly inside the
+                # chunk caps it, so the next iteration fires the fault at
+                # the stepwise index with the pre-fault rows committed.
+                self.injector.check(self.stats["decode_steps"],
+                                    site="process", exact=True)
                 self.injector.check(self.stats["decode_steps"],
                                     site="replica")
-                nxt_fault = self.injector.next_armed(
-                    "replica", self.stats["decode_steps"] + 1,
-                    self.stats["decode_steps"] + chunk)
-                if nxt_fault is not None:
-                    chunk = nxt_fault - self.stats["decode_steps"]
+                lo = self.stats["decode_steps"] + 1
+                hi = self.stats["decode_steps"] + chunk
+                faults = [f for f in (
+                    self.injector.next_armed("replica", lo, hi),
+                    self.injector.next_armed("process", lo, hi, exact=True))
+                    if f is not None]
+                if faults:
+                    chunk = min(faults) - self.stats["decode_steps"]
+                if self.paged:
+                    # corruption striking INSIDE the dispatch window:
+                    # injected after the boundary verify, caught by the
+                    # commit loop's NaN/Inf screen instead
+                    idx = self.injector.take("page_nan")
+                    if idx is not None:
+                        self.caches = paging.corrupt_page(
+                            self.caches, idx, nan=True)
             rem_dev = jnp.asarray(
                 [self.remaining[s] if self.active[s] is not None else 0
                  for s in range(self.n)], jnp.int32)
             act_dev = jnp.asarray(
                 [a is not None for a in self.active], bool)
             step_t0 = self.clock()
-            block, steps_ran, tok, key, self.caches = \
+            block, steps_ran, tok, key, self.caches, logit_ok = \
                 self.engine._fused_decode(
                     self.engine.params, self.caches, self.cur_tok,
                     rem_dev, act_dev, self.engine._key,
@@ -857,6 +1026,7 @@ class EngineSession:
             self.cur_tok = tok
             self.engine._key = key
             block = np.asarray(jax.device_get(block))
+            ok_block = np.asarray(jax.device_get(logit_ok))
             self.stats["decode_dispatches"] += 1
             # normalize wall time by steps actually fused into this
             # dispatch — a k-step chunk must not read as a k× straggler
@@ -884,6 +1054,16 @@ class EngineSession:
                             self._finish_bad(req, "failed", repr(e),
                                              slot=slot)
                             continue
+                    if self.kv_integrity and not ok_block[i, slot]:
+                        # poisoned logits: this slot's pages were
+                        # corrupted inside the dispatch window.  The
+                        # tainted token is never committed, so ``out``
+                        # holds only clean tokens — quarantine the bad
+                        # page(s) and recompute-preempt just this slot
+                        self.stats["nonfinite_logits"] += 1
+                        self._quarantine_slot_pages(slot)
+                        self._preempt_slot(slot)
+                        continue
                     tok_i = int(block[i, slot])
                     req.out.append(tok_i)
                     self.pos[slot] += 1
@@ -893,6 +1073,15 @@ class EngineSession:
                         self.active[slot] = None
                         if self.paged:
                             self.alloc.release(slot)
+            if self.kv_integrity:
+                self._record_checksums()
+            if self.injector is not None and self.paged:
+                # silent corruption at rest: injected AFTER the boundary
+                # fingerprints, so the recorded crc reflects the clean
+                # contents and the next iteration's verify flags the page
+                idx = self.injector.take("page")
+                if idx is not None:
+                    self.caches = paging.corrupt_page(self.caches, idx)
         return ran
 
     def drain(self) -> None:
@@ -900,6 +1089,92 @@ class EngineSession:
         status.  New ``submit()``s after drain() returns start it again."""
         while not self.idle:
             self.step(max_steps=1 << 30)
+
+    # ------------------------------------------------- snapshot / restore
+    def snapshot(self) -> Dict:
+        """Crash-consistent session state as a JSON-serializable dict
+        (DESIGN.md §7.6).
+
+        Captures the *host* truth only — undone requests in ``inflight()``
+        order (prompt tokens, generated prefix, budgets, deadline ages),
+        counters, the engine PRNG key, and the allocator's quarantine/
+        accounting state.  Raw KV tensors are deliberately NOT serialized:
+        :meth:`restore` re-enqueues each request with its prefix in
+        ``out``, so re-admission re-prefills prompt+prefix through the
+        recompute path and the resumed stream is token-identical to the
+        ``generate()`` oracle.  Deadlines are stored as ages
+        (``now - arrival_t``) and rebased on the restoring session's
+        clock, so a half-spent deadline stays half-spent across the
+        restart."""
+        now = self.clock()
+        reqs = [request_to_state(req, now) for req in self.inflight()]
+        snap: Dict = {
+            "version": 1,
+            "kv_layout": self.cfg.kv_layout,
+            "n_slots": self.n,
+            "requests": reqs,
+            "stats": dict(self.stats),
+            "prng_key": np.asarray(
+                jax.device_get(self.engine._key)).tolist(),
+        }
+        if self.paged:
+            snap["alloc"] = {
+                "quarantined": sorted(self.alloc.quarantined
+                                      | self.alloc._pending_quarantine),
+                "double_release": self.alloc.double_release,
+                "evictions": self.alloc.evictions,
+                "pages_evicted": self.alloc.pages_evicted,
+                "page_high_water": self.alloc.high_water,
+            }
+        return snap
+
+    def restore(self, snap: Dict) -> List[Request]:
+        """Load a :meth:`snapshot` into this (idle, freshly-built)
+        session: counters resume, the PRNG key is reinstated, quarantined
+        pages stay out of circulation across the restart, and every
+        snapshotted request is re-enqueued FIFO with its generated prefix
+        — the next ``step()``/``drain()`` re-prefills and resumes each
+        stream exactly where the dead process left it.  Returns the new
+        :class:`Request` objects in queue order (the handles the caller
+        watches; re-prefilled prompt+prefix tokens are counted in
+        ``restore_recompute_tokens``)."""
+        if not self.idle:
+            raise RuntimeError("restore() needs an idle session — it "
+                               "rebuilds the queue from the snapshot")
+        if snap.get("kv_layout") != self.cfg.kv_layout:
+            raise ValueError(
+                f"snapshot was taken under kv_layout="
+                f"{snap.get('kv_layout')!r} but this session runs "
+                f"{self.cfg.kv_layout!r}")
+        now = self.clock()
+        self.engine._key = jnp.asarray(
+            np.asarray(snap["prng_key"], np.uint32))
+        for key, val in snap.get("stats", {}).items():
+            if key in self.stats:
+                self.stats[key] = val
+        self.stats["restores"] += 1
+        if self.paged and "alloc" in snap:
+            a = snap["alloc"]
+            for page in a.get("quarantined", ()):
+                self.alloc.quarantine(page)
+            self.alloc.double_release = a.get("double_release", 0)
+            self.alloc.evictions = a.get("evictions", 0)
+            self.alloc.pages_evicted = a.get("pages_evicted", 0)
+            self.alloc.high_water = max(self.alloc.high_water,
+                                        a.get("page_high_water", 0))
+        restored: List[Request] = []
+        for rs in snap.get("requests", []):
+            req = request_from_state(rs, now)
+            if req.out:
+                # the whole prompt+prefix must re-prefill — the KV pages
+                # died with the process
+                self.stats["restore_recompute_tokens"] += \
+                    len(req.tokens) + len(req.out)
+            # bypass submit(): the snapshotted stats already counted
+            # these requests once
+            self.queue.append(req)
+            restored.append(req)
+        return restored
 
     def stats_snapshot(self) -> Dict:
         """Current counters in the ``Engine.paging_stats`` shape; callable

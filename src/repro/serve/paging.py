@@ -44,7 +44,8 @@ same call, so the engine is layout-agnostic.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import zlib
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +54,8 @@ import numpy as np
 from repro.models.attention import PageGeometry
 
 __all__ = ["PageGeometry", "PageAllocator", "PoolExhausted", "geometry",
-           "commit_prefill", "sync_block_tables"]
+           "commit_prefill", "sync_block_tables", "page_fingerprints",
+           "corrupt_page"]
 
 # cache keys that live in page pools (everything else is per-slot dense)
 _POOL_KEYS = ("k", "v", "k_scale", "v_scale", "ckv", "krope")
@@ -96,18 +98,28 @@ class PageAllocator:
     then raises :class:`PoolExhausted` when the pool runs dry and the
     caller must evict a victim (``release(evicted=True)``) before
     retrying.
+
+    **Integrity extensions** (DESIGN.md §7.6): :meth:`quarantine` takes a
+    page out of circulation permanently (suspected device-memory
+    corruption) — a quarantined page shrinks :attr:`usable` so the
+    accounting invariant keeps holding; :meth:`record_checksum` /
+    :attr:`checksums` store per-page ``(committed_tokens, crc32)``
+    fingerprints recorded by the engine at chunk-commit boundaries.
+    ``strict=True`` upgrades the (counted) idempotent double-release
+    near-miss into a hard error.
     """
 
     POLICIES = ("worst_case", "prompt")
 
     def __init__(self, geom: PageGeometry, n_slots: int,
-                 policy: str = "worst_case"):
+                 policy: str = "worst_case", strict: bool = False):
         if policy not in self.POLICIES:
             raise ValueError(f"unknown admission policy {policy!r}: "
                              f"expected one of {self.POLICIES}")
         self.geom = geom
         self.n_slots = n_slots
         self.policy = policy
+        self.strict = strict
         # LIFO free list over pages 1..n_pages-1 (page 0 = null page);
         # popping the lowest id first keeps allocation deterministic
         self.free: List[int] = list(range(geom.n_pages - 1, 0, -1))
@@ -119,11 +131,20 @@ class PageAllocator:
         # eviction accounting (preemption observability, DESIGN.md §6.4)
         self.evictions = 0
         self.pages_evicted = 0
+        # integrity accounting (DESIGN.md §7.6)
+        self.double_release = 0
+        self.quarantined: set = set()          # out of circulation for good
+        self._pending_quarantine: set = set()  # owned by a slot; withheld
+        #                                        from the free list at release
+        self.checksums: Dict[int, Tuple[int, int]] = {}
 
     # ------------------------------------------------------------- queries
     @property
     def usable(self) -> int:
-        return self.geom.usable_pages
+        """Pages the allocator may hand out: the geometric pool minus
+        pages quarantined after corruption (pending ones still sit in a
+        slot, so they count as in-use until released)."""
+        return self.geom.usable_pages - len(self.quarantined)
 
     @property
     def pages_in_use(self) -> int:
@@ -216,8 +237,21 @@ class PageAllocator:
         additionally counts the free toward the preemption accounting."""
         freed = len(self.slot_pages[slot])
         if freed == 0 and self.reserved[slot] == 0:
+            # near-miss: harmless today, but a second release of a live
+            # slot would double-own pages — count it so accounting bugs
+            # upstream are observable (raise when strict)
+            self.double_release += 1
+            if self.strict:
+                raise RuntimeError(
+                    f"double release of already-free slot {slot}")
             return 0
-        self.free.extend(reversed(self.slot_pages[slot]))
+        for page in reversed(self.slot_pages[slot]):
+            self.checksums.pop(page, None)
+            if page in self._pending_quarantine:
+                self._pending_quarantine.discard(page)
+                self.quarantined.add(page)
+            else:
+                self.free.append(page)
         self.slot_pages[slot] = []
         self.table[slot] = 0
         self.reserved[slot] = 0
@@ -227,6 +261,44 @@ class PageAllocator:
             self.pages_evicted += freed
         self._check()
         return freed
+
+    # ---------------------------------------------------------- integrity
+    def owner_of(self, page: int) -> Optional[int]:
+        """Slot currently holding ``page``, or None (free/quarantined)."""
+        for slot, pages in enumerate(self.slot_pages):
+            if page in pages:
+                return slot
+        return None
+
+    def quarantine(self, page: int) -> bool:
+        """Take a (suspected-corrupt) page out of circulation for the
+        rest of this allocator's life.  A free page leaves the free list
+        immediately; a page still owned by a slot is marked pending and
+        withheld from the free list when that slot releases.  Returns
+        False if the page was already quarantined (idempotent)."""
+        if not 0 < page < self.geom.n_pages:
+            raise ValueError(f"page {page} outside pool "
+                             f"(1..{self.geom.n_pages - 1})")
+        if page in self.quarantined or page in self._pending_quarantine:
+            return False
+        self.checksums.pop(page, None)
+        if page in self.free:
+            self.free.remove(page)
+            self.quarantined.add(page)
+        else:
+            self._pending_quarantine.add(page)
+        self._check()
+        return True
+
+    @property
+    def pages_quarantined(self) -> int:
+        return len(self.quarantined) + len(self._pending_quarantine)
+
+    def record_checksum(self, page: int, n_tokens: int, crc: int) -> None:
+        """Record the fingerprint of a page's committed contents (engine
+        calls this at chunk-commit boundaries; n_tokens is how many of
+        the page's token rows the crc covers)."""
+        self.checksums[page] = (int(n_tokens), int(crc))
 
     def stats(self) -> dict:
         return {
@@ -239,6 +311,8 @@ class PageAllocator:
             "admission_policy": self.policy,
             "evictions": self.evictions,
             "pages_evicted": self.pages_evicted,
+            "double_release": self.double_release,
+            "pages_quarantined": self.pages_quarantined,
         }
 
 
@@ -334,7 +408,9 @@ def merge_replica_stats(per_replica: list) -> dict:
     summed = ("requests", "completed", "preemptions", "recompute_tokens",
               "rejected", "failed", "timed_out", "decode_steps",
               "decode_dispatches", "admission_deferrals", "evictions",
-              "pages_evicted", "straggler_decode_steps")
+              "pages_evicted", "straggler_decode_steps", "double_release",
+              "pages_quarantined", "nonfinite_logits", "restores",
+              "restore_recompute_tokens")
     for key in summed:
         if any(key in s for s in per_replica):
             merged[key] = sum(s.get(key, 0) for s in per_replica)
@@ -348,7 +424,106 @@ def merge_replica_stats(per_replica: list) -> dict:
         merged["page_high_water_per_replica"] = hw
         merged["peak_live_tokens"] = max(
             s.get("peak_live_tokens", 0) for s in per_replica)
+    if any("straggler_decode_steps" in s for s in per_replica):
+        # per-replica attribution alongside the fleet-wide sum: a single
+        # slow host shows up as a skewed entry here, not just a bigger sum
+        merged["straggler_decode_steps_per_replica"] = [
+            s.get("straggler_decode_steps", 0) for s in per_replica]
     return merged
+
+
+def _paged_entries(caches):
+    """Yield ``(entry, stacked)`` for every paged cache entry in the tree
+    (mirrors the traversal in :func:`commit_prefill`)."""
+    def walk(entry, stacked):
+        if isinstance(entry, dict) and "self" in entry:
+            yield from walk(entry["self"], stacked)
+        elif isinstance(entry, dict) and "block_table" in entry:
+            yield entry, stacked
+
+    for part, stacked in (("prefix", False), ("body", True)):
+        for entry in caches.get(part, {}).values():
+            yield from walk(entry, stacked)
+
+
+def page_fingerprints(caches, committed: Dict[int, int]) -> Dict[int, int]:
+    """crc32 fingerprint of each page's committed contents.
+
+    ``committed`` maps page id -> number of token rows committed into
+    that page; the crc covers exactly those rows (a page's tail beyond
+    the committed length holds garbage from slot reuse, so it must not
+    feed the fingerprint).  The crc chains over every pool leaf of every
+    paged entry, so corruption in any layer/head is caught.
+    """
+    crcs = {page: 0 for page in committed}
+    if not crcs:
+        return crcs
+    for entry, stacked in _paged_entries(caches):
+        for key in _POOL_KEYS:
+            if key not in entry:
+                continue
+            pool = np.asarray(jax.device_get(entry[key]))
+            for page, ntok in committed.items():
+                slab = pool[:, page, :ntok] if stacked else pool[page, :ntok]
+                crcs[page] = zlib.crc32(
+                    np.ascontiguousarray(slab).tobytes(), crcs[page])
+    return crcs
+
+
+def pages_nonfinite(caches, pages) -> set:
+    """Subset of ``pages`` holding any NaN/Inf in a float pool leaf —
+    precise localization for the commit-loop logit screen (NaN leaks
+    through the attention mask from *any* position of a touched page, so
+    detection can't rely on the committed-region checksums alone)."""
+    bad: set = set()
+    pages = [p for p in pages]
+    for entry, stacked in _paged_entries(caches):
+        for key in _POOL_KEYS:
+            if key not in entry:
+                continue
+            pool = entry[key]
+            if not jnp.issubdtype(pool.dtype, jnp.floating):
+                continue
+            arr = np.asarray(jax.device_get(pool))
+            for page in pages:
+                if page in bad:
+                    continue
+                slab = arr[:, page] if stacked else arr[page]
+                if not np.isfinite(slab).all():
+                    bad.add(page)
+    return bad
+
+
+def corrupt_page(caches, page: int, nan: bool = False):
+    """Scribble over KV page ``page`` in every pool leaf — the
+    ``("page", idx)`` fault payload (simulated device-memory corruption).
+    ``nan=True`` writes NaN into float pools (poisons logits, caught by
+    the engine's commit-time screen); otherwise writes finite garbage
+    (silent — caught only by the checksum verify)."""
+    def fix(entry, stacked):
+        if isinstance(entry, dict) and "self" in entry:
+            out = dict(entry)
+            out["self"] = fix(entry["self"], stacked)
+            return out
+        if isinstance(entry, dict) and "block_table" in entry:
+            out = dict(entry)
+            for key in _POOL_KEYS:
+                if key not in entry:
+                    continue
+                pool = entry[key]
+                if jnp.issubdtype(pool.dtype, jnp.floating):
+                    val = jnp.nan if nan else 1e4
+                else:
+                    val = jnp.iinfo(pool.dtype).max
+                fill = jnp.asarray(val, pool.dtype)
+                out[key] = (pool.at[:, page].set(fill) if stacked
+                            else pool.at[page].set(fill))
+            return out
+        return entry
+
+    return {part: {name: fix(entry, part == "body")
+                   for name, entry in caches[part].items()}
+            for part in ("prefix", "body")}
 
 
 def sync_block_tables(caches, table: np.ndarray):

@@ -50,7 +50,9 @@ from collections import deque
 from typing import Dict, List, Optional
 
 from repro.serve import paging
-from repro.serve.engine import Engine, EngineSession, Request
+from repro.serve.engine import (Engine, EngineSession, Request,
+                                request_from_state, request_to_state)
+from repro.train.fault import ProcessKilled
 
 __all__ = ["Router", "RouterConfig", "Replica"]
 
@@ -133,6 +135,10 @@ class Router:
                          "shed": 0, "replica_faults": 0,
                          "replica_restarts": 0, "drains": 0,
                          "degraded_marks": 0}
+        # prompt+prefix tokens that restore() re-enqueued at the ROUTER
+        # queue (session-resident restores count theirs in session stats);
+        # stats() folds this into the merged restore_recompute_tokens
+        self._queue_restore_tokens = 0
 
     @classmethod
     def build(cls, model_cfg, serve_cfg, n_replicas: int,
@@ -280,6 +286,12 @@ class Router:
                 max(1, rep.session.cfg.decode_chunk)
             try:
                 n = rep.session.step(grain)
+            except ProcessKilled:
+                # process-tier fault: there is no surviving replica to
+                # migrate to — the whole fleet is gone.  Propagate to the
+                # crash drill, which rebuilds the router and restores the
+                # latest snapshot (DESIGN.md §7.6).
+                raise
             except Exception as exc:  # noqa: BLE001 — replica-tier fault
                 self._on_fault(idx, exc)
                 continue
@@ -333,6 +345,72 @@ class Router:
             self.run_round()
         return requests
 
+    # ------------------------------------------------- snapshot / restore
+    def snapshot(self) -> Dict:
+        """Crash-consistent fleet state (DESIGN.md §7.6): every live
+        replica session's :meth:`EngineSession.snapshot`, the retired-
+        session counters, the router's own counters, and the global queue
+        (as rebased request states).  JSON-serializable; persist through
+        :class:`repro.train.checkpoint.SnapshotManager` for the atomic
+        write + rolling retention."""
+        now = self.clock()
+        return {
+            "version": 1,
+            "sessions": [None if rep.session is None
+                         else rep.session.snapshot()
+                         for rep in self.replicas],
+            "retired_stats": [list(rep.retired_stats)
+                              for rep in self.replicas],
+            "replica_restarts": [rep.restarts for rep in self.replicas],
+            "replica_drains": [rep.drains for rep in self.replicas],
+            "queue": [request_to_state(req, now) for req in self.queue
+                      if not req.done],
+            "counters": dict(self.counters),
+        }
+
+    def restore(self, snap: Dict) -> List[Request]:
+        """Load a :meth:`snapshot` into this freshly-built, idle router.
+        Every replica here starts alive (the old process's dead replicas
+        come back as fresh engines — their inflight work was already
+        migrated into the snapshotted queue at fault time); counters and
+        retired-session stats carry over so fleet totals survive the
+        restart.  Returns every re-enqueued :class:`Request` handle —
+        session residents first (per replica), then the global queue —
+        and ``serve([])``/``run_round()`` then drains them
+        token-identically to the dead process's streams."""
+        sessions = snap.get("sessions", [])
+        if len(sessions) != len(self.replicas):
+            raise ValueError(
+                f"snapshot holds {len(sessions)} replicas but this "
+                f"router has {len(self.replicas)}")
+        if self.queue or not self.idle:
+            raise RuntimeError("restore() needs an idle router")
+        now = self.clock()
+        restored: List[Request] = []
+        for rep, sess_snap, retired, restarts, drains in zip(
+                self.replicas, sessions,
+                snap.get("retired_stats", [[] for _ in self.replicas]),
+                snap.get("replica_restarts", [0] * len(self.replicas)),
+                snap.get("replica_drains", [0] * len(self.replicas))):
+            rep.retired_stats = [dict(s) for s in retired]
+            rep.restarts = restarts
+            rep.drains = drains
+            if sess_snap is not None:
+                restored.extend(rep.session.restore(sess_snap))
+        for rs in snap.get("queue", []):
+            req = request_from_state(rs, now)
+            if req.out:
+                # a migrated request parked in the global queue carries a
+                # generated prefix that must re-prefill after the restart
+                self._queue_restore_tokens += len(req.tokens) + \
+                    len(req.out)
+            self.queue.append(req)
+            restored.append(req)
+        for key, val in snap.get("counters", {}).items():
+            if key in self.counters:
+                self.counters[key] = val
+        return restored
+
     # ------------------------------------------------------------- stats
     def stats(self) -> Dict:
         """Fleet-level stats: merged per-session counters (live sessions +
@@ -350,6 +428,16 @@ class Router:
             merged["page_high_water_per_replica"] = [
                 max((s.get("page_high_water", 0) for s in sessions),
                     default=0) for sessions in by_replica]
+        if "straggler_decode_steps" in merged:
+            # same per-replica fold for straggler attribution: sum each
+            # replica's retired + live sessions, so one chronically slow
+            # host is visible as a skewed entry, not just a bigger total
+            merged["straggler_decode_steps_per_replica"] = [
+                sum(s.get("straggler_decode_steps", 0) for s in sessions)
+                for sessions in by_replica]
+        if self._queue_restore_tokens:
+            merged["restore_recompute_tokens"] = merged.get(
+                "restore_recompute_tokens", 0) + self._queue_restore_tokens
         merged.update(self.counters)
         merged["router_queue_len"] = len(self.queue)
         merged["replica_states"] = [r.state for r in self.replicas]

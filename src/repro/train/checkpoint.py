@@ -31,7 +31,8 @@ import jax
 import numpy as np
 
 __all__ = ["save", "save_async", "restore", "restore_sharded",
-           "latest_step", "CheckpointManager"]
+           "latest_step", "CheckpointManager", "save_snapshot",
+           "restore_snapshot", "latest_snapshot", "SnapshotManager"]
 
 
 def _flatten_with_keys(tree):
@@ -186,3 +187,79 @@ class CheckpointManager:
         if shardings is None:
             return restore(self.dir, tree_like)
         return restore_sharded(self.dir, tree_like, shardings)
+
+
+# ---------------------------------------------------------------------------
+# serving snapshots (DESIGN.md §7.6): small JSON state dicts — session /
+# router snapshot(), not parameter trees — written with the same atomic
+# tmp + os.replace discipline and LATEST pointer as the step checkpoints
+# ---------------------------------------------------------------------------
+
+
+def save_snapshot(snap_dir: str, seq: int, state: Dict) -> str:
+    """Atomic write of one serving snapshot (``snap_<seq>.json``): the
+    payload lands in a ``.tmp`` first and ``os.replace`` publishes it, so
+    a crash mid-write never corrupts a restore point; the ``LATEST``
+    pointer only advances after the publish."""
+    os.makedirs(snap_dir, exist_ok=True)
+    final = os.path.join(snap_dir, f"snap_{seq:09d}.json")
+    tmp = final + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(state, f)
+    os.replace(tmp, final)
+    _update_latest(snap_dir, seq)
+    return final
+
+
+def latest_snapshot(snap_dir: str) -> Optional[int]:
+    """Sequence number of the newest published snapshot, or None."""
+    return latest_step(snap_dir)
+
+
+def restore_snapshot(snap_dir: str, seq: Optional[int] = None) -> Dict:
+    """Load snapshot ``seq`` (default: the LATEST pointer's)."""
+    if seq is None:
+        seq = latest_snapshot(snap_dir)
+        if seq is None:
+            raise FileNotFoundError(f"no snapshot under {snap_dir}")
+    with open(os.path.join(snap_dir, f"snap_{seq:09d}.json")) as f:
+        return json.load(f)
+
+
+class SnapshotManager:
+    """Rolling serving snapshots with retention (the serving analogue of
+    :class:`CheckpointManager` — synchronous, since the payload is a few
+    KB of host JSON, not device arrays).  ``save(state)`` auto-increments
+    the sequence; ``restore_latest()`` returns ``(state, seq)``."""
+
+    def __init__(self, snap_dir: str, keep: int = 3):
+        self.dir = snap_dir
+        self.keep = keep
+        os.makedirs(snap_dir, exist_ok=True)
+
+    @property
+    def next_seq(self) -> int:
+        latest = latest_snapshot(self.dir)
+        return 0 if latest is None else latest + 1
+
+    def save(self, state: Dict, seq: Optional[int] = None) -> str:
+        path = save_snapshot(self.dir, self.next_seq if seq is None
+                             else seq, state)
+        self._gc()
+        return path
+
+    def restore_latest(self) -> Tuple[Dict, int]:
+        seq = latest_snapshot(self.dir)
+        if seq is None:
+            raise FileNotFoundError(f"no snapshot under {self.dir}")
+        return restore_snapshot(self.dir, seq), seq
+
+    def _gc(self):
+        seqs = sorted(
+            int(f[5:-5]) for f in os.listdir(self.dir)
+            if f.startswith("snap_") and f.endswith(".json"))
+        for s in seqs[: -self.keep]:
+            try:
+                os.remove(os.path.join(self.dir, f"snap_{s:09d}.json"))
+            except OSError:
+                pass

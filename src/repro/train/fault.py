@@ -26,9 +26,20 @@ import logging
 import time
 from typing import Callable, Optional
 
-__all__ = ["FaultConfig", "Watchdog", "RestartableLoop", "FaultInjector"]
+__all__ = ["FaultConfig", "Watchdog", "RestartableLoop", "FaultInjector",
+           "ProcessKilled"]
 
 log = logging.getLogger("repro.fault")
+
+
+class ProcessKilled(RuntimeError):
+    """A ``("process", k)`` fault site fired: the whole serving process is
+    presumed lost — every replica, every session, every in-memory queue.
+
+    Deliberately NOT a replica-tier fault: the router re-raises it instead
+    of migrating (there is no surviving replica to migrate to).  The crash
+    drill (DESIGN.md §7.6) catches it at the top level, rebuilds the fleet
+    from params, and restores the latest snapshot."""
 
 
 @dataclasses.dataclass
@@ -96,6 +107,16 @@ class FaultInjector:
     discarded), so injection is deterministic regardless of how many
     requests reach the same step count; fired entries are recorded in
     ``self.fired`` for assertions.
+
+    Two sites have non-raising / non-default semantics (DESIGN.md §7.6):
+
+    * ``("process", k)`` raises :class:`ProcessKilled` (never ``exc``) —
+      whole-process loss; checked with ``exact=True`` so bare ints can't
+      accidentally escalate a request fault to a process death;
+    * ``("page", idx)`` / ``("page_nan", idx)`` entries don't raise at
+      all: the engine drains them via :meth:`take` at chunk-commit
+      boundaries and *corrupts KV page* ``idx`` in place — silent
+      device-memory corruption, detected later by the integrity layer.
     """
 
     def __init__(self, fail_at_steps=(), exc=RuntimeError):
@@ -104,30 +125,58 @@ class FaultInjector:
         self.armed = True
         self.fired = []
 
-    def check(self, step: int, site: Optional[str] = None):
+    def check(self, step: int, site: Optional[str] = None,
+              exact: bool = False):
+        """Raise if an armed entry matches.  ``exact=True`` matches ONLY
+        the ``(site, step)`` tuple — bare site-agnostic ints are ignored
+        (used for the ``"process"`` site, where a stray bare int must not
+        escalate to a whole-process death)."""
         if not self.armed:
             return
-        keys = (step,) if site is None else ((site, step), step)
+        if exact:
+            keys = ((site, step),)
+        else:
+            keys = (step,) if site is None else ((site, step), step)
         for key in keys:
             if key in self.fail_at:
                 self.fail_at.discard(key)
                 self.fired.append((site, step))
-                raise self.exc(
-                    f"injected fault at {site or 'step'} {step}")
+                exc = ProcessKilled if site == "process" else self.exc
+                raise exc(f"injected fault at {site or 'step'} {step}")
 
     def next_armed(self, site: Optional[str], start: int,
-                   stop: int) -> Optional[int]:
+                   stop: int, exact: bool = False) -> Optional[int]:
         """Smallest armed step in ``[start, stop)`` that ``check(step,
         site=site)`` would fire on (site-qualified tuples and bare
-        site-agnostic ints both count), or ``None``.  The serving
-        engine's fused decode loop uses this to split a chunk exactly at
-        an injected replica fault, so chunked serving fires faults at
-        the same decode-step index the stepwise cadence did."""
+        site-agnostic ints both count, unless ``exact``), or ``None``.
+        The serving engine's fused decode loop uses this to split a chunk
+        exactly at an injected replica/process fault, so chunked serving
+        fires faults at the same decode-step index the stepwise cadence
+        did."""
         if not self.armed:
             return None
         hits = [s for s in range(start, stop)
-                if (site, s) in self.fail_at or s in self.fail_at]
+                if (site, s) in self.fail_at
+                or (not exact and s in self.fail_at)]
         return min(hits) if hits else None
+
+    def take(self, site: str) -> Optional[int]:
+        """Pop and return the smallest armed index for ``site`` WITHOUT
+        raising, or ``None``.  This is the corruption-site drain: the
+        engine calls ``take("page")`` at each chunk-commit boundary and
+        scribbles over the returned page — the fault is the *corruption*,
+        not an exception, so detection must come from the integrity
+        layer."""
+        if not self.armed:
+            return None
+        hits = sorted(k[1] for k in self.fail_at
+                      if isinstance(k, tuple) and k[0] == site)
+        if not hits:
+            return None
+        idx = hits[0]
+        self.fail_at.discard((site, idx))
+        self.fired.append((site, idx))
+        return idx
 
 
 class RestartableLoop:

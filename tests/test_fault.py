@@ -9,8 +9,8 @@ monkeypatched into a recording list, so the suite cannot flake under load.
 """
 import pytest
 
-from repro.train.fault import (FaultConfig, FaultInjector, RestartableLoop,
-                               Watchdog)
+from repro.train.fault import (FaultConfig, FaultInjector, ProcessKilled,
+                               RestartableLoop, Watchdog)
 
 # ------------------------------------------------------------- watchdog
 
@@ -171,3 +171,39 @@ def test_fault_injector_disarm():
     inj.armed = True
     with pytest.raises(RuntimeError):
         inj.check(0)
+
+
+def test_process_site_requires_exact_match():
+    """A bare site-agnostic int may escalate request-tier sites, but must
+    NOT kill the whole process: the engine checks the "process" site with
+    exact=True, which ignores bare ints."""
+    inj = FaultInjector(fail_at_steps=(3,))
+    inj.check(3, site="process", exact=True)      # bare int ignored
+    assert inj.fired == []
+    with pytest.raises(RuntimeError):
+        inj.check(3, site="decode")               # non-exact still matches
+    inj2 = FaultInjector(fail_at_steps=(("process", 7),))
+    assert inj2.next_armed("process", 0, 10, exact=True) == 7
+    with pytest.raises(ProcessKilled, match="process 7"):
+        inj2.check(7, site="process", exact=True)
+    inj2.check(7, site="process", exact=True)     # fires exactly once
+    assert inj2.fired == [("process", 7)]
+
+
+def test_take_drains_corruption_sites_without_raising():
+    """take() pops the smallest armed index for a site and never raises —
+    the corruption-site drain: the fault is the page scribble, detection
+    must come from the integrity layer."""
+    inj = FaultInjector(fail_at_steps=(("page", 4), ("page", 2),
+                                       ("page_nan", 9), 5))
+    assert inj.take("page") == 2
+    assert inj.take("page") == 4
+    assert inj.take("page") is None               # drained
+    assert inj.take("page_nan") == 9
+    assert ("page", 2) in inj.fired and ("page_nan", 9) in inj.fired
+    with pytest.raises(RuntimeError):
+        inj.check(5)                              # bare ints untouched
+    inj.armed = False
+    inj3 = FaultInjector(fail_at_steps=(("page", 1),))
+    inj3.armed = False
+    assert inj3.take("page") is None              # disarmed drain is a no-op

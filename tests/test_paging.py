@@ -538,3 +538,124 @@ def test_slot_reuse_without_cache_reset():
     assert all(r.done for r in reqs)
     for r in reqs:
         assert r.out == _oracle(eng, r)
+
+
+# ------------------------------- integrity hardening (DESIGN.md §7.6)
+
+
+def test_allocator_double_release_counter_and_strict():
+    """Double release is survivable-but-counted by default (the counter
+    is the observability hook: a nonzero value means an engine bug), and
+    raises under strict — the regression guard for the release path."""
+    geom = paging.geometry(max_seq=32, page_size=4, n_slots=2, n_pages=5)
+    alloc = PageAllocator(geom, n_slots=2)
+    alloc.admit(0, 8, worst_pages=2)
+    alloc.release(0)
+    assert alloc.double_release == 0
+    alloc.release(0)
+    alloc.release(1)                       # never-admitted slot counts too
+    assert alloc.double_release == 2
+    assert alloc.stats()["double_release"] == 2
+    strict = PageAllocator(geom, n_slots=2, strict=True)
+    strict.admit(0, 8, worst_pages=2)
+    strict.release(0)
+    with pytest.raises(RuntimeError, match="double release"):
+        strict.release(0)
+
+
+def test_allocator_quarantine_lifecycle():
+    """Free pages retire immediately; owned pages are withheld from the
+    free list at release; both shrink ``usable`` for good; idempotent."""
+    geom = paging.geometry(max_seq=32, page_size=4, n_slots=2, n_pages=7)
+    alloc = PageAllocator(geom, n_slots=2)
+    free_page = alloc.free[0]              # deep in the free list
+    assert alloc.quarantine(free_page)
+    assert free_page in alloc.quarantined and free_page not in alloc.free
+    assert alloc.usable == geom.usable_pages - 1
+    assert not alloc.quarantine(free_page)                  # idempotent
+    alloc.admit(0, 8, worst_pages=2)
+    owned = alloc.slot_pages[0][0]
+    assert alloc.quarantine(owned)
+    assert owned not in alloc.quarantined                   # pending
+    assert alloc.owner_of(owned) == 0
+    assert alloc.pages_quarantined == 2
+    alloc.release(0)
+    assert owned in alloc.quarantined and owned not in alloc.free
+    assert alloc.usable == geom.usable_pages - 2
+    with pytest.raises(ValueError):
+        alloc.quarantine(0)                # null page is out of the pool
+
+
+def test_allocator_checksum_records_cleared_on_release():
+    geom = paging.geometry(max_seq=32, page_size=4, n_slots=1, n_pages=5)
+    alloc = PageAllocator(geom, n_slots=1)
+    alloc.admit(0, 8, worst_pages=2)
+    page = alloc.slot_pages[0][0]
+    alloc.record_checksum(page, 4, 0xDEAD)
+    assert alloc.checksums[page] == (4, 0xDEAD)
+    alloc.release(0)
+    assert page not in alloc.checksums     # stale crc can't false-positive
+
+
+def test_allocator_property_fuzz_invariants():
+    """Property fuzz (satellite): random admit/ensure/release/quarantine
+    interleavings — after EVERY op the allocator's own ``_check`` runs
+    and no page is ever doubly owned, both free and owned, or circulating
+    after quarantine.  Uses the hypothesis shim so bare containers still
+    run the sweep deterministically."""
+    from _hypothesis_compat import given, settings, st
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000),
+           policy=st.sampled_from(["worst_case", "prompt"]))
+    def run(seed, policy):
+        rng = np.random.default_rng(seed)
+        geom = paging.geometry(max_seq=32, page_size=4, n_slots=3,
+                               n_pages=12)
+        alloc = PageAllocator(geom, n_slots=3, policy=policy)
+        live = {}
+        for _ in range(80):
+            op = int(rng.integers(0, 5))
+            slot = int(rng.integers(0, 3))
+            if op == 0 and slot not in live:
+                n_tok = int(rng.integers(1, 17))
+                worst = min(alloc.pages_for(n_tok) + int(rng.integers(0, 3)),
+                            geom.pages_per_slot)
+                if alloc.admit(slot, n_tok, worst):
+                    live[slot] = (n_tok, worst)
+            elif op == 1 and slot in live:
+                n_tok, worst = live[slot]
+                n_tok = min(n_tok + int(rng.integers(1, 5)),
+                            worst * geom.page_size)
+                try:
+                    alloc.ensure(slot, n_tok)
+                    live[slot] = (n_tok, worst)
+                except paging.PoolExhausted:
+                    pass    # prompt policy, dry pool: the engine would
+                    # evict a victim and retry; partial growth is kept
+            elif op == 2 and slot in live:
+                alloc.release(slot, evicted=bool(rng.integers(0, 2)))
+                del live[slot]
+            elif op == 3:
+                alloc.release(slot)        # double releases counted, not fatal
+                live.pop(slot, None)
+            elif op == 4:
+                page = int(rng.integers(1, geom.n_pages))
+                # quarantining a FREE page shrinks usable immediately —
+                # skip when reservations are at capacity (the engine only
+                # quarantines pages it preempts the owners of, so it
+                # never over-commits this way either)
+                if page in alloc.free \
+                        and sum(alloc.reserved) >= alloc.usable:
+                    continue
+                alloc.quarantine(page)
+            alloc._check()
+            owned = [p for pages in alloc.slot_pages for p in pages]
+            assert len(owned) == len(set(owned)), "page doubly owned"
+            assert not set(owned) & set(alloc.free), "page free AND owned"
+            assert not (set(owned) | set(alloc.free)) & alloc.quarantined, \
+                "quarantined page back in circulation"
+            assert len(alloc.free) + len(owned) == alloc.usable
+        assert alloc.high_water <= geom.usable_pages
+
+    run()

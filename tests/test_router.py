@@ -355,3 +355,33 @@ def test_merge_replica_stats_shapes():
     assert m["peak_live_tokens"] == 20
     assert m["n_pages"] == 17 and m["kv_layout"] == "paged"
     assert paging.merge_replica_stats([]) == {}
+
+
+def test_straggler_decode_steps_per_replica():
+    """Satellite (§7.6 observability): per-replica straggler attribution.
+    Replica 1's decode steps slow 10× after the watchdog warms up; the
+    merged ``straggler_decode_steps`` stays, and the new per-replica list
+    pins the slow host — [0] stays clean, [1] carries every event."""
+    clock = FakeClock()
+    cfg, engines, router = _fleet(2, clock=clock, decode_chunk=1)
+    # re-wrap replica 1 only: uniform dt=1 until step 8, then 10×
+    count = [0]
+    orig = engines[1]._fused_decode
+
+    def slow_fused(*a):
+        out = orig(*a)
+        for _ in range(int(out[1])):
+            clock.advance(9.0 if count[0] >= 8 else 0.0)  # on top of tick
+            count[0] += 1
+        return out
+
+    engines[1]._fused_decode = slow_fused
+    reqs = _reqs(cfg, 6, seed=31, prompt_len=6, max_new=12)
+    router.serve(reqs)
+    assert all(r.ok_like for r in reqs)
+    st = router.stats()
+    per = st["straggler_decode_steps_per_replica"]
+    assert isinstance(per, list) and len(per) == 2
+    assert per[0] == 0 and per[1] > 0, \
+        "straggler events must attribute to the slow replica only"
+    assert sum(per) == st["straggler_decode_steps"]

@@ -1,0 +1,367 @@
+"""Crash-consistent serving (DESIGN.md §7.6, ISSUE 9).
+
+Covers the session/router snapshot–restore path (host state only — the
+KV cache is rebuilt by re-prefilling prompt + generated prefix through
+the recompute machinery, so restored streams are token-identical to the
+greedy ``generate()`` oracle), the on-disk :class:`SnapshotManager`
+(atomic publish, LATEST pointer, rolling retention), the whole-process
+kill drill (``("process", k)`` → :class:`ProcessKilled` → rebuild fleet →
+restore → drain, zero failures), and the KV-page integrity layer: silent
+corruption (``("page", idx)``) detected by commit-boundary crc32
+verification, in-window corruption (``("page_nan", idx)``) caught by the
+fused loop's non-finite logit screen before the tainted token commits —
+both quarantine the poisoned page(s) and recompute-preempt exactly the
+touching request.
+
+Determinism note (the PR 3 lesson): engines run FakeClock advanced per
+decode step, streams are greedy, and fault sites fire on exact decode-step
+or page indices — nothing here asserts on wall-clock.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.serve import Engine, Request, Router, RouterConfig, ServeConfig
+from repro.train import checkpoint
+from repro.train.fault import FaultConfig, FaultInjector, ProcessKilled
+
+S_MAX = 64
+PS = 4
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _tick_decode(eng, clock, dt=1.0):
+    orig = eng._decode
+    orig_fused = eng._fused_decode
+
+    def wrapped(*a):
+        clock.advance(dt)
+        return orig(*a)
+
+    def wrapped_fused(*a):
+        out = orig_fused(*a)
+        clock.advance(dt * int(out[1]))
+        return out
+
+    eng._decode = wrapped
+    eng._fused_decode = wrapped_fused
+
+
+def _engine(cfg=None, clock=None, **serve_kw):
+    cfg = cfg or get_smoke("granite-3-2b")
+    skw = dict(max_seq=S_MAX, n_slots=2, page_size=PS)
+    skw.update(serve_kw)
+    eng = Engine(cfg, ServeConfig(**skw))
+    if clock is not None:
+        eng.clock = clock
+        _tick_decode(eng, clock)
+    return cfg, eng
+
+
+def _clone(cfg, eng, clock=None, **serve_kw):
+    """A "new process": fresh engine, fresh host state, surviving params."""
+    skw = dict(max_seq=S_MAX, n_slots=2, page_size=PS)
+    skw.update(serve_kw)
+    eng2 = Engine(cfg, ServeConfig(**skw), params=eng.params)
+    if clock is not None:
+        eng2.clock = clock
+        _tick_decode(eng2, clock)
+    return eng2
+
+
+def _reqs(cfg, n, seed=21, prompt_len=8, max_new=6):
+    rng = np.random.default_rng(seed)
+    return [Request(tokens=rng.integers(0, cfg.vocab,
+                                        (prompt_len,)).astype(np.int32),
+                    max_new_tokens=max_new) for _ in range(n)]
+
+
+def _oracle_map(eng, reqs):
+    return {r.tokens.tobytes(): list(eng.generate(
+        r.tokens[None, :], max_new_tokens=r.max_new_tokens)[0])
+        for r in reqs}
+
+
+def _assert_all_match(done, oracle, n_expected):
+    assert len(done) == n_expected
+    assert all(r.done and r.ok_like for r in done)
+    for r in done:
+        assert r.out == oracle[r.tokens.tobytes()], \
+            "stream drifted across snapshot/restore"
+
+
+# ------------------------------------------------- on-disk snapshots
+
+
+def test_snapshot_manager_roundtrip_retention_atomicity(tmp_path):
+    d = str(tmp_path / "snaps")
+    mgr = checkpoint.SnapshotManager(d, keep=3)
+    for i in range(5):
+        mgr.save({"seq": i})
+    files = sorted(f for f in os.listdir(d) if f.startswith("snap_"))
+    assert files == [f"snap_{i:09d}.json" for i in (2, 3, 4)]
+    assert not any(f.endswith(".tmp") for f in os.listdir(d))
+    assert checkpoint.latest_snapshot(d) == 4
+    state, seq = mgr.restore_latest()
+    assert state == {"seq": 4} and seq == 4
+    assert checkpoint.restore_snapshot(d, 3) == {"seq": 3}
+    with pytest.raises(FileNotFoundError):
+        checkpoint.restore_snapshot(d, 0)          # pruned by retention
+    assert mgr.next_seq == 5
+
+
+def test_snapshot_manager_empty_dir_raises(tmp_path):
+    mgr = checkpoint.SnapshotManager(str(tmp_path / "none"))
+    with pytest.raises(FileNotFoundError):
+        mgr.restore_latest()
+
+
+# ------------------------------------- session snapshot/restore core
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_session_snapshot_restore_midstream_token_identical(layout):
+    clock = FakeClock()
+    cfg, eng = _engine(clock=clock, kv_layout=layout)
+    reqs = _reqs(cfg, 4)
+    oracle = _oracle_map(eng, reqs)
+    sess = eng.start_session(list(reqs))
+    sess.step(3)
+    snap = sess.snapshot()
+    json.dumps(snap)                  # must be plain-JSON serializable
+    eng2 = _clone(cfg, eng, clock=clock, kv_layout=layout)
+    sess2, restored = eng2.restore_session(snap)
+    assert restored, "mid-stream snapshot restored no requests"
+    sess2.drain()
+    done = [r for r in reqs if r.done] + restored
+    _assert_all_match(done, oracle, len(reqs))
+    st = sess2.stats_snapshot()
+    assert st["restores"] == 1 and st["failed"] == 0
+    # prefix-bearing requests are re-prefilled: the recompute budget is
+    # prompt + generated prefix for each one restored mid-stream
+    assert st["restore_recompute_tokens"] >= max(
+        len(r.tokens) for r in restored)
+
+
+def test_restore_layout_mismatch_rejected():
+    cfg, eng = _engine(kv_layout="paged")
+    sess = eng.start_session(_reqs(cfg, 1))
+    snap = sess.snapshot()
+    _, eng2 = _engine(cfg=cfg, kv_layout="dense")
+    with pytest.raises(ValueError):
+        eng2.start_session([]).restore(snap)
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+@pytest.mark.parametrize("chunk", [1, 8])
+def test_snapshot_at_every_chunk_boundary_equivalence(layout, chunk):
+    """THE tentpole acceptance sweep: snapshot at *every* chunk boundary
+    of a serving session; each snapshot, restored into a fresh engine and
+    drained, must finish every request token-identical to the oracle."""
+    clock = FakeClock()
+    cfg, eng = _engine(clock=clock, kv_layout=layout, decode_chunk=chunk)
+    # chunk=8 drains 3×4-token requests inside ONE step() call (a single
+    # boundary) — lengthen generations there so the sweep crosses at
+    # least one mid-stream boundary; chunk=1 snapshots every decode step
+    reqs = _reqs(cfg, 3, seed=22, prompt_len=6,
+                 max_new=(4 if chunk == 1 else 6))
+    oracle = _oracle_map(eng, reqs)
+    sess = eng.start_session(list(reqs))
+    snaps = []
+    while not sess.idle:
+        snaps.append(sess.snapshot())
+        sess.step(chunk)
+    assert len(snaps) >= (5 if chunk == 1 else 2)   # the sweep swept
+    for snap in snaps:
+        eng2 = _clone(cfg, eng, clock=clock, kv_layout=layout,
+                      decode_chunk=chunk)
+        sess2, restored = eng2.restore_session(snap)
+        sess2.drain()
+        # requests finished before this boundary are not in the snapshot;
+        # the restored tail must cover exactly the rest
+        finished_before = len(reqs) - len(restored)
+        assert 0 <= finished_before <= len(reqs)
+        _assert_all_match(restored, oracle, len(restored))
+    # the original session also ran to completion, unperturbed
+    _assert_all_match(reqs, oracle, len(reqs))
+
+
+# --------------------------------------------- whole-process kill drill
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_kill_all_drill_restore_drain_token_identical(tmp_path, layout):
+    """Boundary snapshots + ("process", k) kill: everything dies, a fresh
+    engine restores the latest on-disk snapshot and drains — every
+    request completes, token-identical, zero failed."""
+    clock = FakeClock()
+    cfg, eng = _engine(clock=clock, kv_layout=layout)
+    eng.fault_injector = FaultInjector(fail_at_steps=(("process", 5),))
+    reqs = _reqs(cfg, 4, seed=23, prompt_len=8, max_new=8)
+    oracle = _oracle_map(eng, reqs)
+    mgr = checkpoint.SnapshotManager(str(tmp_path / "snaps"))
+    sess = eng.start_session(list(reqs))
+    with pytest.raises(ProcessKilled):
+        while not sess.idle:
+            mgr.save(sess.snapshot())
+            sess.step(4)
+    eng2 = _clone(cfg, eng, clock=clock, kv_layout=layout)
+    state, seq = mgr.restore_latest()
+    assert seq >= 1                   # at least one mid-stream snapshot
+    sess2, restored = eng2.restore_session(state)
+    sess2.drain()
+    _assert_all_match(restored, oracle, len(restored))
+    # nothing completed pre-kill with these lengths: full coverage
+    assert len(restored) == len(reqs)
+    st = sess2.stats_snapshot()
+    assert st["failed"] == 0 and st["restores"] == 1
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_kill_all_drill_router_fleet_restore(tmp_path, layout):
+    """The fleet-level drill: 2 replicas share one injector, the process
+    fault raises through ``run_round`` (NOT handled as a replica fault),
+    a rebuilt fleet restores the router snapshot and drains."""
+    clock = FakeClock()
+    cfg = get_smoke("granite-3-2b")
+    scfg = ServeConfig(max_seq=S_MAX, n_slots=2, page_size=PS,
+                       kv_layout=layout)
+    fc = FaultConfig(max_restarts=2, backoff_s=0.5)
+    first = Engine(cfg, scfg, fault_cfg=fc)
+    engines = [first, Engine(cfg, scfg, params=first.params, fault_cfg=fc)]
+    inj = FaultInjector(fail_at_steps=(("process", 3),))
+    for e in engines:
+        e.clock = clock
+        _tick_decode(e, clock)
+        e.fault_injector = inj
+
+    def build_router(es):
+        return Router(es, cfg=RouterConfig(n_replicas=2, queue_limit=16),
+                      fault_cfg=fc, clock=clock, sleep=clock.advance)
+
+    router = build_router(engines)
+    reqs = _reqs(cfg, 6, seed=24, prompt_len=8, max_new=8)
+    oracle = _oracle_map(first, reqs)
+    for r in reqs:
+        router.submit(r)
+    mgr = checkpoint.SnapshotManager(str(tmp_path / "rsnaps"))
+    with pytest.raises(ProcessKilled):
+        while not router.idle:
+            mgr.save(router.snapshot())
+            router.run_round()
+    # the whole fleet is gone; rebuild from surviving params and restore
+    engines2 = [Engine(cfg, scfg, params=first.params, fault_cfg=fc)
+                for _ in range(2)]
+    for e in engines2:
+        e.clock = clock
+        _tick_decode(e, clock)
+    router2 = build_router(engines2)
+    state, _ = mgr.restore_latest()
+    restored = router2.restore(state)
+    while not router2.idle:
+        router2.run_round()
+    _assert_all_match(restored, oracle, len(reqs))
+    st = router2.stats()
+    assert st["failed"] == 0
+    assert "straggler_decode_steps_per_replica" in st
+
+
+# ------------------------------------------------ KV-page integrity
+
+
+def test_page_corruption_detected_quarantined_exact_victim():
+    """Silent at-rest corruption: ("page", idx) scribbles over a live
+    page after the boundary fingerprints; the next boundary's crc verify
+    flags it, quarantines the page, and recompute-preempts exactly the
+    owning request — which still finishes token-identical."""
+    clock = FakeClock()
+    cfg, eng = _engine(clock=clock, kv_integrity=True)
+    reqs = _reqs(cfg, 3, seed=25, prompt_len=8, max_new=10)
+    oracle = _oracle_map(eng, reqs)
+    inj = FaultInjector(fail_at_steps=(("page", 1),))
+    sess = eng.start_session(list(reqs), inj)
+    sess.drain()
+    _assert_all_match(reqs, oracle, len(reqs))
+    st = sess.stats_snapshot()
+    assert inj.fired == [("page", 1)]
+    assert 1 in sess.alloc.quarantined
+    assert st["pages_quarantined"] >= 1
+    assert st["preemptions"] == 1, "corruption must preempt exactly one"
+    assert st["nonfinite_logits"] == 0          # silent path: crc caught it
+    assert st["failed"] == 0
+    # exact victim: page 1 belonged to the first-admitted request
+    victims = [r for r in reqs if r.status.startswith("preempted")]
+    assert victims == [reqs[0]]
+    # quarantined page is out of circulation for good
+    assert 1 not in sess.alloc.free
+    assert sess.alloc.owner_of(1) is None
+
+
+def test_page_nan_screen_blocks_commit():
+    """In-window corruption: ("page_nan", idx) poisons a page after the
+    boundary verify; the fused loop's non-finite logit screen blocks the
+    tainted commit, the page is quarantined, only the victim preempts."""
+    clock = FakeClock()
+    cfg, eng = _engine(clock=clock, kv_integrity=True)
+    reqs = _reqs(cfg, 3, seed=26, prompt_len=8, max_new=10)
+    oracle = _oracle_map(eng, reqs)
+    inj = FaultInjector(fail_at_steps=(("page_nan", 1),))
+    sess = eng.start_session(list(reqs), inj)
+    sess.drain()
+    _assert_all_match(reqs, oracle, len(reqs))
+    st = sess.stats_snapshot()
+    assert st["nonfinite_logits"] >= 1          # the screen fired
+    assert st["pages_quarantined"] >= 1
+    assert st["preemptions"] == 1
+    assert st["failed"] == 0
+    victims = [r for r in reqs if r.status.startswith("preempted")]
+    assert victims == [reqs[0]]
+
+
+def test_integrity_clean_run_no_false_positives():
+    clock = FakeClock()
+    cfg, eng = _engine(clock=clock, kv_integrity=True)
+    reqs = _reqs(cfg, 4, seed=27)
+    oracle = _oracle_map(eng, reqs)
+    eng.serve(reqs)
+    _assert_all_match(reqs, oracle, len(reqs))
+    st = eng.paging_stats
+    assert st["preemptions"] == 0 and st["pages_quarantined"] == 0
+    assert st["nonfinite_logits"] == 0
+
+
+def test_quarantine_persists_across_restore():
+    """A page retired by the integrity checker stays retired in the
+    restored process: the snapshot carries the quarantine set, so pool
+    capacity does not silently come back after a crash."""
+    clock = FakeClock()
+    cfg, eng = _engine(clock=clock, kv_integrity=True)
+    reqs = _reqs(cfg, 3, seed=28, prompt_len=8, max_new=12)
+    oracle = _oracle_map(eng, reqs)
+    inj = FaultInjector(fail_at_steps=(("page", 1),))
+    sess = eng.start_session(list(reqs), inj)
+    sess.step(6)
+    sess.step(1)                     # next boundary: verify + quarantine
+    assert 1 in sess.alloc.quarantined
+    snap = sess.snapshot()
+    eng2 = _clone(cfg, eng, clock=clock, kv_integrity=True)
+    sess2, restored = eng2.restore_session(snap)
+    assert 1 in sess2.alloc.quarantined
+    assert sess2.alloc.usable == sess2.alloc.geom.usable_pages - 1
+    sess2.drain()
+    _assert_all_match(restored, oracle, len(restored))
+    st = sess2.stats_snapshot()
+    assert st["pages_quarantined"] >= 1 and st["failed"] == 0
