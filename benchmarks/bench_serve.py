@@ -85,6 +85,18 @@ def _requests(cfg, lengths, max_new, n):
             for i in range(n)]
 
 
+def _percentile_metrics(st: Dict) -> Dict:
+    """p50/p95/p99 for queue_s / prefill_s / latency_s, read from the
+    session's metrics histograms (``latency_percentiles`` in the stats
+    view, DESIGN.md §13.1).  Wall-clock dependent → informational only,
+    never CI-gated."""
+    row = {}
+    for hname, qs in (st.get("latency_percentiles") or {}).items():
+        for q, val in qs.items():
+            row[f"{hname}_{q}"] = val
+    return row
+
+
 def _dispatch_metrics(st: Dict, total_tokens: int) -> Dict:
     """Fused-loop amortization (deterministic, ``dispatches_per_token``
     CI-gated never-grow): decode steps per on-device launch, and
@@ -120,6 +132,7 @@ def bench_mix(eng, cfg, name, lengths, max_new) -> Dict:
         "queue_s_max": round(max(r.queue_s for r in reqs), 4),
         "decode_steps": st["decode_steps"],
     }
+    row.update(_percentile_metrics(st))
     row.update(_dispatch_metrics(st, total_tokens))
     # layout-agnostic since the overload PR: the dense layout used to
     # report 0 here, breaking the paged-vs-dense residency comparison
@@ -184,6 +197,7 @@ def bench_overload(cfg) -> Dict:
         "total_tokens": int(sum(len(r.out) for r in reqs)),
         "wall_s": round(wall_s, 4),                     # informational
         "decode_steps": st["decode_steps"],
+        **_percentile_metrics(st),                      # informational
         **_dispatch_metrics(st, int(sum(len(r.out) for r in reqs))),
         # deterministic overload counters (gated never-grow in CI)
         "preemptions": st["preemptions"],
@@ -291,6 +305,7 @@ def bench_router(cfg) -> Dict:
         "total_tokens": int(sum(len(r.out) for r in served)),
         "wall_s": round(wall_s, 4),                     # informational
         "decode_steps": st["decode_steps"],
+        **_percentile_metrics(st),                      # informational
         **_dispatch_metrics(st, int(sum(len(r.out) for r in served))),
         # deterministic fault-tolerance counters (gated never-grow in CI)
         "migrations": st["migrations"],
@@ -378,6 +393,7 @@ def bench_crash_restore(cfg) -> Dict:
         "wall_s": round(wall_s, 4),                     # informational
         "snapshot_bytes": snapshot_bytes,               # informational
         "decode_steps": st["decode_steps"],
+        **_percentile_metrics(st),                      # informational
         **_dispatch_metrics(st, total_tokens),
         # deterministic recovery-cost counters (gated never-grow in CI)
         "restores": st["restores"],
@@ -426,7 +442,10 @@ def main(argv=None) -> int:
               f"{paged['admission_deferrals']} deferrals, "
               f"{paged['decode_steps']} decode steps in "
               f"{paged['decode_dispatches']} dispatches "
-              f"({paged['tokens_per_dispatch']:.1f} tok/dispatch)")
+              f"({paged['tokens_per_dispatch']:.1f} tok/dispatch), "
+              f"latency p50/p95/p99 {paged.get('latency_s_p50')}/"
+              f"{paged.get('latency_s_p95')}/"
+              f"{paged.get('latency_s_p99')} s")
 
     overload = bench_overload(cfg)
     mixes["overload"] = {"paged": overload}
@@ -478,6 +497,12 @@ def main(argv=None) -> int:
                 "paged"]["tokens_per_dispatch"],
             "decode_dispatches_total": sum(
                 m["paged"]["decode_dispatches"] for m in mixes.values()),
+            # informational latency distribution of the mixed-length mix
+            # (p50/p95/p99 from the session's metrics histograms)
+            "mixed_length_latency_percentiles": {
+                k: v for k, v in mixes["mixed_length"]["paged"].items()
+                if k.startswith(("latency_s_p", "queue_s_p",
+                                 "prefill_s_p"))},
         },
     }
     with open(args.out, "w") as f:

@@ -153,6 +153,11 @@ def main(argv=None) -> int:
     ap.add_argument("--repeats", type=int, default=2)
     args = ap.parse_args(argv)
 
+    # same clock for tuner and in-run normalizers (see bench_spmv_smoke:
+    # the gate's normalized ratios need one timing source end to end);
+    # recorded in meta.timing_source
+    autotune.set_timing_source("wallclock")
+
     n_dev = len(jax.devices())
     if n_dev < 8:
         print(f"# need 8 devices, got {n_dev} — set XLA_FLAGS="
@@ -238,7 +243,9 @@ def main(argv=None) -> int:
     }
     doc = {"meta": {"backend": jax.default_backend(),
                     "python": platform.python_version(),
-                    "repeats": args.repeats},
+                    "repeats": args.repeats,
+                    # per-shard autotune timing provenance (DESIGN.md §13.4)
+                    "timing_source": autotune.timing_source()},
            "matrices": matrices, "summary": summary}
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)

@@ -1,0 +1,73 @@
+"""CI gate for the trace-export smoke lane (DESIGN.md §13.3).
+
+    PYTHONPATH=src:. python benchmarks/check_trace.py \
+        --trace trace_router.json --metrics metrics_router.json
+
+Validates a ``--trace-out`` export from ``repro.launch.serve`` against
+the Chrome trace-event schema — required keys on every event, monotonic
+timestamps per (pid, tid) track, balanced name-matched B/E duration
+stacks, balanced async request lifelines — and cross-checks it against
+the run's ``--metrics-json`` dump: every counted migration, preemption,
+restore, replica fault/restart, shed, deadline expiry, and page
+quarantine must appear as that many trace events, each attributed to the
+right replica track.
+
+``--mode exact`` (default) requires event counts to equal the counters —
+the router_kill lane, where stats and trace cover the same run.
+``--mode at-least`` requires event counts >= the counters — the
+crash_restore lane, where counters roll back to the last snapshot on
+restore while the continuous trace legitimately keeps the events from
+work done (then lost) after that snapshot.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import export as obs_export
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", required=True,
+                    help="Chrome trace-event JSON (launch/serve --trace-out)")
+    ap.add_argument("--metrics", default="",
+                    help="stats JSON (launch/serve --metrics-json) to "
+                         "cross-check counters against; omit to only "
+                         "schema-validate")
+    ap.add_argument("--mode", choices=("exact", "at-least"),
+                    default="exact",
+                    help="counter cross-check: exact equality, or trace "
+                         ">= counter (crash lanes, where restore rolls "
+                         "counters back to the last snapshot)")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        doc = json.load(f)
+    problems = obs_export.validate_chrome_trace(doc)
+    n_events = len(doc.get("traceEvents", ()))
+
+    stats = None
+    if args.metrics:
+        with open(args.metrics) as f:
+            stats = json.load(f)
+        problems += obs_export.cross_check_counters(
+            doc, stats, mode=args.mode.replace("-", "_"))
+
+    if problems:
+        for p in problems:
+            print(f"# FAIL: {p}", file=sys.stderr)
+        print(f"# {len(problems)} trace problems in {args.trace}",
+              file=sys.stderr)
+        return 1
+    checked = [c for c, _ in obs_export.DEFAULT_COUNTER_EVENTS
+               if stats is not None and c in stats]
+    print(f"# OK: {args.trace} valid ({n_events} events); "
+          f"cross-checked counters: {', '.join(checked) or 'none'} "
+          f"({args.mode})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

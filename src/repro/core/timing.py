@@ -1,25 +1,47 @@
 """Single timing harness shared by the autotuner and the benchmark tables.
 
 One implementation so measured autotune winners stay comparable with the
-benchmark CSV figures (same warmup/block/median protocol).
+benchmark CSV figures (same warmup/block/median protocol).  Two clocks:
+
+* :func:`time_us` — host wall-clock (perf_counter around a blocked call),
+  always available, noisy on busy hosts.
+* :func:`profiled_time_us_group` — device time from a ``jax.profiler``
+  trace session: one session covers a whole group of callables (a trace
+  session costs ~1s of setup, far too slow per candidate), each wrapped
+  in a named ``TraceAnnotation`` window per repeat; device-event
+  durations inside each window are summed and the median over repeats is
+  the callable's time.  Returns ``None`` whenever anything about the
+  profiler path is unavailable or unparseable, so callers fall back to
+  :func:`time_us` — the provenance (``profiler`` vs ``wallclock``) is
+  recorded by the autotuner in ``TuneResult.timing_source``.
 """
 from __future__ import annotations
 
+import glob
+import gzip
+import json
+import os
+import tempfile
 import time
-from typing import Callable
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import numpy as np
 
-__all__ = ["time_us"]
+__all__ = ["time_us", "profiler_available", "profiled_time_us_group"]
 
 
 def time_us(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
-    """Median wall time of fn(*args) in µs (jit-warmed, device-blocked)."""
-    out = None
+    """Median wall time of fn(*args) in µs (jit-warmed, device-blocked).
+
+    Every warmup iteration blocks before the next starts — otherwise
+    async-dispatched warmup work can still be in flight when the first
+    measured repeat begins, and its completion bleeds into that repeat's
+    wall time.  ``warmup=0`` is a valid no-warmup call (the old code
+    would have blocked on ``None``).
+    """
     for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        jax.block_until_ready(fn(*args))
     times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
@@ -27,3 +49,127 @@ def time_us(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
         jax.block_until_ready(out)
         times.append((time.perf_counter() - t0) * 1e6)
     return float(np.median(times))
+
+
+# ---------------------------------------------------------------------------
+# jax.profiler-backed device timing
+# ---------------------------------------------------------------------------
+
+_PROFILER_OK: Optional[bool] = None
+
+
+def profiler_available() -> bool:
+    """Whether jax.profiler trace sessions work in this runtime (probed
+    once, memoized).  False on runtimes without profiler support or when
+    trace capture raises."""
+    global _PROFILER_OK
+    if _PROFILER_OK is None:
+        try:
+            with tempfile.TemporaryDirectory() as d:
+                with jax.profiler.trace(d):
+                    jax.block_until_ready(jax.numpy.zeros(8) + 1)
+                _PROFILER_OK = _find_trace_file(d) is not None
+        except Exception:
+            _PROFILER_OK = False
+    return _PROFILER_OK
+
+
+def _find_trace_file(trace_dir: str) -> Optional[str]:
+    hits = glob.glob(os.path.join(
+        trace_dir, "plugins", "profile", "*", "*.trace.json.gz"))
+    return hits[0] if hits else None
+
+
+def _load_trace_events(path: str) -> List[dict]:
+    with gzip.open(path, "rt") as f:
+        return json.load(f).get("traceEvents", [])
+
+
+def _device_pids(events: Sequence[dict]) -> set:
+    """pids whose process hosts device execution events.  TPU/GPU lanes
+    carry "/device:" in the process name; the CPU backend runs compiled
+    computations under ``TfrtCpuExecutable`` events, so any pid owning
+    one of those counts too."""
+    pids = set()
+    for ev in events:
+        if ev.get("ph") == "M" and ev.get("name") == "process_name":
+            name = str((ev.get("args") or {}).get("name", ""))
+            if "/device:" in name.lower() or "/device:" in name:
+                pids.add(ev.get("pid"))
+    for ev in events:
+        if "TfrtCpuExecutable" in str(ev.get("name", "")):
+            pids.add(ev.get("pid"))
+    return pids
+
+
+def profiled_time_us_group(fns: Sequence[Callable], *, repeats: int = 3,
+                           warmup: int = 1) -> Optional[List[float]]:
+    """Device time in µs for each callable, from one shared trace session.
+
+    Each ``fns[i]`` is a zero-arg callable returning a value to block on.
+    Warmup runs happen before the trace starts (compilation must not be
+    measured).  Inside the session, repeat ``r`` of callable ``i`` runs
+    under ``TraceAnnotation("tune:i:r")``; afterwards the device events
+    whose timestamps fall inside each annotation window are summed and
+    the per-callable median over repeats is returned.  Any failure →
+    ``None`` (caller falls back to wall-clock)."""
+    if not fns or not profiler_available():
+        return None
+    try:
+        for fn in fns:
+            for _ in range(max(1, warmup)):
+                jax.block_until_ready(fn())
+        with tempfile.TemporaryDirectory() as d:
+            with jax.profiler.trace(d):
+                for i, fn in enumerate(fns):
+                    for r in range(repeats):
+                        with jax.profiler.TraceAnnotation(f"tune:{i}:{r}"):
+                            jax.block_until_ready(fn())
+            path = _find_trace_file(d)
+            if path is None:
+                return None
+            events = _load_trace_events(path)
+    except Exception:
+        return None
+
+    windows = {}
+    for ev in events:
+        name = str(ev.get("name", ""))
+        if name.startswith("tune:") and ev.get("ph") == "X":
+            try:
+                _, i, r = name.split(":")
+                key = (int(i), int(r))
+            except ValueError:
+                continue
+            t0 = float(ev.get("ts", 0.0))
+            t1 = t0 + float(ev.get("dur", 0.0))
+            lo, hi = windows.get(key, (t0, t1))
+            windows[key] = (min(lo, t0), max(hi, t1))
+    if not windows:
+        return None
+
+    dev_pids = _device_pids(events)
+    if not dev_pids:
+        return None
+    device_events = [
+        (float(ev.get("ts", 0.0)), float(ev.get("dur", 0.0)))
+        for ev in events
+        if ev.get("ph") == "X" and ev.get("pid") in dev_pids
+        and not str(ev.get("name", "")).startswith("tune:")]
+
+    results: List[float] = []
+    for i in range(len(fns)):
+        per_repeat = []
+        for r in range(repeats):
+            win = windows.get((i, r))
+            if win is None:
+                continue
+            lo, hi = win
+            dev = sum(dur for ts, dur in device_events
+                      if lo <= ts and ts + dur <= hi)
+            if dev > 0:
+                per_repeat.append(dev)
+        if not per_repeat:
+            return None
+        results.append(float(np.median(per_repeat)))
+    return results

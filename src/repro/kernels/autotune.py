@@ -34,6 +34,7 @@ from typing import Dict, Iterable, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import timing as _timing
 from repro.core.formats import RgCSR
 from repro.core.timing import time_us
 from repro.kernels import ops
@@ -42,7 +43,7 @@ from repro.kernels.rgcsr_spmv import (CHUNKS_PER_STEP_CHOICES, LANES,
 
 __all__ = ["TuneConfig", "TuneResult", "matrix_signature", "candidate_configs",
            "spill_threshold_candidates", "autotune_spmv", "autotune_spmm",
-           "tuned_plan", "clear_memo",
+           "tuned_plan", "clear_memo", "set_timing_source", "timing_source",
            "shard_row_blocks", "autotune_spmv_per_shard",
            "harmonize_shard_winners",
            "DEFAULT_GROUP_SIZES", "DEFAULT_D_TILES", "DEFAULT_ORDERINGS"]
@@ -76,6 +77,11 @@ class TuneResult:
     plan's ``(stored_slots, stored_elements, n_spilled_elements)`` — the
     deterministic structural figures :func:`harmonize_shard_winners` needs
     to reason about stacked grids without re-measuring.
+
+    ``timing_source`` records which clock produced the timing table:
+    ``"profiler"`` (device time from a jax.profiler trace session) or
+    ``"wallclock"`` (host ``time_us``).  Every perf claim downstream
+    (BENCH meta) carries this provenance.
     """
     config: TuneConfig
     us_per_call: float
@@ -83,6 +89,7 @@ class TuneResult:
     signature: tuple
     from_memo: bool = False
     plan_stats: Tuple[Tuple[int, int, int], ...] = ()
+    timing_source: str = "wallclock"
 
     @property
     def baseline_us(self) -> float:
@@ -110,6 +117,35 @@ _TUNED: Dict[tuple, Tuple[RgCSR, "ops.RgCSRPlan"]] = {}
 def clear_memo() -> None:
     _MEMO.clear()
     _TUNED.clear()
+
+
+# timing-source policy: "auto" prefers the profiler when it works,
+# "wallclock" forces host timing, "profiler" insists (still falls back if
+# the trace parse fails — a search must never error out over provenance).
+_TIMING_SOURCE = "auto"
+
+
+def set_timing_source(mode: str) -> None:
+    global _TIMING_SOURCE
+    if mode not in ("auto", "wallclock", "profiler"):
+        raise ValueError(f"timing source must be auto/wallclock/profiler, "
+                         f"got {mode!r}")
+    _TIMING_SOURCE = mode
+
+
+def timing_source() -> str:
+    """The clock the next search will try first.  Resolves to
+    ``"wallclock"`` when forced, when the runtime has no working
+    profiler, or when ``time_us`` has been monkeypatched (deterministic
+    test fixtures replace it with a structural cost model — the profiler
+    would bypass the patch and break the determinism those tests pin)."""
+    if _TIMING_SOURCE == "wallclock":
+        return "wallclock"
+    if time_us is not _timing.time_us:
+        return "wallclock"
+    if not _timing.profiler_available():
+        return "wallclock"
+    return "profiler"
 
 
 def _log_bucket(v: float) -> int:
@@ -220,12 +256,14 @@ def _search(dense: np.ndarray, run, kind: str, *,
     if hit is not None:
         return dataclasses.replace(hit, from_memo=True)
 
+    # pass 1 — selection: build plans and apply the structural pruning
+    # (no timing yet, so the whole surviving set can share one profiler
+    # trace session in pass 2)
     mats: Dict[int, RgCSR] = {}
     plans: Dict[Tuple[int, int, str, int], ops.RgCSRPlan] = {}
     block_bytes: Dict[Tuple[int, int], Tuple[int, int]] = {}
     baseline_slots = None
-    timings = []
-    stats = []
+    selected = []
     for cfg in candidates:
         if cfg.group_size not in mats:
             mats[cfg.group_size] = RgCSR.from_dense(
@@ -247,11 +285,12 @@ def _search(dense: np.ndarray, run, kind: str, *,
             # dominance pruning: an adaptive plan that moves the same (or
             # more) HBM bytes (the TPU cost model) AND launches the same
             # (or more) grid steps (the interpret-mode cost model) as the
-            # already-timed block plan of the same (G, cps) buys nothing
-            # in either regime and still pays the output gather — it
-            # cannot win, so don't let measurement noise crown it.  Flat
-            # row-length profiles (stencils) prune their whole adaptive
-            # side here; a plan cheaper under either model is still timed.
+            # already-selected block plan of the same (G, cps) buys
+            # nothing in either regime and still pays the output gather —
+            # it cannot win, so don't let measurement noise crown it.
+            # Flat row-length profiles (stencils) prune their whole
+            # adaptive side here; a plan cheaper under either model is
+            # still timed.
             bb = block_bytes.get((cfg.group_size, cfg.chunks_per_step))
             if bb is not None and _plan_bytes(plan) >= bb[0] \
                     and plan.num_steps >= bb[1]:
@@ -259,17 +298,32 @@ def _search(dense: np.ndarray, run, kind: str, *,
         # fill-ratio pruning: a config that multiplies stored bytes on a
         # memory-bound op cannot win — skip it without timing.
         if plan.stored_elements > storage_cap * max(baseline_slots, 1) \
-                and timings:
+                and selected:
             continue
-        us = time_us(run, plan, cfg, repeats=repeats, warmup=1)
-        timings.append((cfg, us))
-        stats.append((plan.stored_slots, plan.stored_elements,
-                      plan.n_spilled_elements))
+        selected.append((cfg, plan))
+
+    # pass 2 — measurement: device time from one shared profiler trace
+    # session when available, host wall-clock otherwise; record which.
+    source = timing_source()
+    us_list = None
+    if source == "profiler":
+        fns = [(lambda plan=plan, cfg=cfg: run(plan, cfg))
+               for cfg, plan in selected]
+        us_list = _timing.profiled_time_us_group(fns, repeats=repeats,
+                                                 warmup=1)
+        if us_list is None:
+            source = "wallclock"
+    if us_list is None:
+        us_list = [time_us(run, plan, cfg, repeats=repeats, warmup=1)
+                   for cfg, plan in selected]
+    timings = [(cfg, us) for (cfg, _), us in zip(selected, us_list)]
+    stats = [(plan.stored_slots, plan.stored_elements,
+              plan.n_spilled_elements) for _, plan in selected]
 
     best_cfg, best_us = min(timings, key=lambda t: t[1])
     result = TuneResult(config=best_cfg, us_per_call=best_us,
                         timings=tuple(timings), signature=sig,
-                        plan_stats=tuple(stats))
+                        plan_stats=tuple(stats), timing_source=source)
     _MEMO[memo_key] = result
     return result
 

@@ -52,6 +52,18 @@ Crash-consistency drills (DESIGN.md §7.6):
   --kv-integrity       arm per-page crc32 checksums + NaN/Inf logit
                        screening (detection quarantines the page and
                        recompute-preempts exactly the touched requests).
+
+Observability (DESIGN.md §13):
+  --trace-out PATH     attach a Tracer to every engine/router and export
+                       the run's span timeline (request lifelines, prefill
+                       and decode-chunk spans, fault/migration/restore
+                       instants) as Chrome trace-event JSON at PATH —
+                       loadable in Perfetto or chrome://tracing.  The
+                       report also prints a span-timeline summary.
+  --metrics-json PATH  write the final stats dict (merged metrics-registry
+                       view, including request_timing histogram states and
+                       latency percentiles) as JSON — the file CI's
+                       check_trace.py cross-checks against the trace.
 """
 import argparse
 import sys
@@ -135,6 +147,13 @@ def main(argv=None):
     ap.add_argument("--corrupt-nan", action="store_true",
                     help="NaN-poison the corrupted page (logit-screen "
                          "path) instead of silent garbage (checksum path)")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="record a per-request span timeline and write it "
+                         "as Chrome trace-event JSON (load in Perfetto / "
+                         "chrome://tracing) to PATH (DESIGN.md §13)")
+    ap.add_argument("--metrics-json", default="", metavar="PATH",
+                    help="write the final stats dict (the merged metrics "
+                         "registry view) as JSON to PATH")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, get_smoke
@@ -159,6 +178,10 @@ def main(argv=None):
         fail_at.append(("page_nan" if args.corrupt_nan else "page",
                         args.corrupt_page))
     injector = FaultInjector(fail_at_steps=fail_at) if fail_at else None
+    tracer = None
+    if args.trace_out:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
     write_mgr = SnapshotManager(args.snapshot_dir) \
         if args.snapshot_every > 0 else None
     rng = np.random.default_rng(0)
@@ -189,9 +212,11 @@ def main(argv=None):
                 e.fault_injector = injector
 
         def build_router(es):
+            # the same tracer survives the crash-drill rebuild, so the
+            # exported timeline spans the whole run including recovery
             return Router(es, cfg=RouterConfig(
                 n_replicas=args.replicas, queue_limit=args.router_queue),
-                fault_cfg=fault_cfg)
+                fault_cfg=fault_cfg, tracer=tracer)
 
         router = build_router(engines)
         if args.restore_from:
@@ -231,6 +256,8 @@ def main(argv=None):
     else:
         eng = Engine(cfg, scfg, fault_cfg=fault_cfg,
                      fault_injector=injector)
+        if tracer is not None:
+            eng.tracer = tracer       # before any session is started
         t0 = time.time()
         if write_mgr is None and not args.restore_from:
             done = eng.serve(reqs)
@@ -258,6 +285,8 @@ def main(argv=None):
                       "and restoring the latest snapshot")
                 eng = Engine(cfg, scfg, params=eng.params,
                              fault_cfg=fault_cfg)
+                if tracer is not None:
+                    eng.tracer = tracer
                 state, snap_seq = write_mgr.restore_latest()
                 sess, restored = eng.restore_session(state)
                 sess.drain()
@@ -308,6 +337,36 @@ def main(argv=None):
               f"{ps['replica_restarts']} restarts, "
               f"{ps['retries_exhausted']} retry-budget exhaustions, "
               f"{ps['shed']} shed, {ps['drains']} drains")
+    if ps and ps.get("latency_percentiles"):
+        parts = []
+        for name in ("queue_s", "prefill_s", "latency_s"):
+            q = ps["latency_percentiles"].get(name)
+            if q:
+                parts.append(f"{name} p50/p95/p99 = {q['p50'] * 1e3:.1f}/"
+                             f"{q['p95'] * 1e3:.1f}/{q['p99'] * 1e3:.1f} ms")
+        if parts:
+            print("percentiles:", "; ".join(parts))
+    if args.metrics_json:
+        import json
+        with open(args.metrics_json, "w") as fh:
+            json.dump(ps, fh, indent=2, sort_keys=True,
+                      default=lambda o: o.item() if hasattr(o, "item")
+                      else str(o))
+        print(f"metrics written to {args.metrics_json}")
+    if tracer is not None:
+        from repro.obs import export as obs_export
+        obs_export.export_chrome_trace(tracer, args.trace_out)
+        summ = obs_export.span_summary(tracer)
+        spans = ", ".join(
+            f"{name}×{s['n']} ({s['total_s']:.3f}s total, "
+            f"{s['mean_s'] * 1e3:.1f}ms mean)"
+            for name, s in sorted(summ["spans"].items()))
+        events = ", ".join(f"{name}×{n}" for name, n
+                           in sorted(summ["events"].items()))
+        print(f"span timeline: {spans or 'none'}")
+        print(f"trace events: {events or 'none'}")
+        print(f"trace written to {args.trace_out} "
+              f"({len(tracer.events)} events)")
     # chaos-lane gate (CI): a drill run must leave no request unfinished,
     # and under an injected kill or page corruption every request must end
     # in an ok-like state — anything else is a recovery bug, exit non-zero

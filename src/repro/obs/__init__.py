@@ -1,0 +1,20 @@
+"""Unified observability layer (DESIGN.md §13).
+
+Three pieces, deliberately dependency-free below the serving stack so
+every layer (kernels, core timing, serve, train, launch) can import them:
+
+* :mod:`repro.obs.metrics` — typed registry of counters / gauges /
+  histograms with labels, a dict-compatible scalar view (the serving
+  session's ``stats`` mapping is one), declarative cross-replica merge
+  rules, and JSON snapshot/restore that rides the §7.6 host-state
+  snapshots.
+* :mod:`repro.obs.trace` — structured span/event recorder driven by the
+  injectable engine clock, so traces are deterministic under FakeClock.
+* :mod:`repro.obs.export` — Chrome trace-event JSON export (loadable in
+  Perfetto / chrome://tracing; one track per replica, one lane per slot),
+  schema validation, and the counter↔event cross-check the CI trace lane
+  gates on.
+"""
+from repro.obs import export, metrics, trace  # noqa: F401
+
+__all__ = ["metrics", "trace", "export"]

@@ -40,6 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import LanguageModel
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve import device_loop, paging
 
 __all__ = ["ServeConfig", "Engine", "EngineSession", "Request",
@@ -203,6 +205,12 @@ class Engine:
         # watchdog) flows through this, so tests drive deadlines with a
         # fake timer instead of wall-clock sleeps.
         self.clock = time.time
+        # observability (DESIGN.md §13): attach a repro.obs.trace.Tracer
+        # (and a per-replica label) BEFORE start_session() and every
+        # session event lands on this replica's track; None keeps the
+        # no-op fast path.  The router attaches these for its fleet.
+        self.tracer = None
+        self.trace_label = "replica0"
         self.model = LanguageModel(model_cfg)
         self.params = params if params is not None else \
             self.model.init(jax.random.PRNGKey(serve_cfg.seed))
@@ -211,13 +219,15 @@ class Engine:
         # the fused lax.while_loop chunk runner EngineSession dispatches
         self._decode = jax.jit(device_loop.make_decode_step(self.model),
                                donate_argnums=(1,))
-        self._fused_decode = device_loop.build_fused_decode(self.model,
-                                                            serve_cfg)
+        self._fused_decode = device_loop.build_fused_decode(
+            self.model, serve_cfg, on_dispatch=self._on_fused_dispatch)
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, self.cfg.max_seq),
             static_argnums=())
         self._key = jax.random.PRNGKey(serve_cfg.seed)
-        # paging observability from the most recent serve() call
+        # stats from the most recent serve() call — a plain-dict render
+        # of the session's metrics registry (EngineSession.stats_snapshot;
+        # DESIGN.md §13.1), kept under the historical name
         self.paging_stats: Optional[Dict] = None
         # Sparse (RgCSR) weights: pre-stage kernel plan containers at model
         # load for eager per-layer paths (DESIGN.md §3.2).  The jit'd
@@ -361,6 +371,17 @@ class Engine:
         return device_loop.sample_tokens(logits, sub, self.cfg.temperature,
                                          self.cfg.top_k)
 
+    def _on_fused_dispatch(self, out) -> None:
+        """Trace hook run INSIDE the fused-decode callable (see
+        ``device_loop.build_fused_decode``) — test/bench harnesses wrap
+        ``engine._fused_decode`` from the outside, so an emission there
+        would be lost under their wrappers.  Late-bound: attaching a
+        tracer after engine construction takes effect immediately."""
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.instant("fused_dispatch", (self.trace_label, "device"),
+                       steps=int(out[1]))
+
     # ------------------------------------------------------------- one-shot
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 32
                  ) -> np.ndarray:
@@ -481,13 +502,19 @@ class Engine:
         * per-request timing lands in ``queue_s`` / ``prefill_s`` /
           ``latency_s`` (see :class:`Request`) — ``latency_s`` is measured
           from the request's own processing start, not the serve() call;
-        * observability lands in ``self.paging_stats`` after every call:
+        * observability lands in ``self.paging_stats`` after every call —
+          a plain-dict view rendered from the session's typed metrics
+          registry (:meth:`EngineSession.stats_snapshot`, DESIGN.md §13):
           pages in use / high-water, fragmentation, deferrals, preemption
           counters (``preemptions``, ``recompute_tokens``, ``evictions``,
           ``pages_evicted``), per-status counts (``completed`` /
-          ``rejected`` / ``failed`` / ``timed_out``), and straggler decode
+          ``rejected`` / ``failed`` / ``timed_out``), straggler decode
           steps flagged by a :class:`~repro.train.fault.Watchdog` over
-          ``self.fault_cfg``.
+          ``self.fault_cfg``, plus ``request_timing`` histogram states
+          and ``latency_percentiles`` (p50/p95/p99 of queue_s /
+          prefill_s / latency_s).  Attach a
+          :class:`repro.obs.trace.Tracer` to ``self.tracer`` before the
+          call for the matching per-request span timeline.
         """
         session = self.start_session(requests, fault_injector)
         session.drain()
@@ -553,14 +580,32 @@ class EngineSession:
         self.t_start = self.clock()
         self.watchdog = Watchdog(engine.fault_cfg)
         self.prefill_count = 0              # prefill site index (injector)
-        self.stats = {"decode_steps": 0, "decode_dispatches": 0,
-                      "admission_deferrals": 0,
-                      "peak_live_tokens": 0, "frag_at_high_water": 0.0,
-                      "requests": 0, "completed": 0,
-                      "preemptions": 0, "recompute_tokens": 0,
-                      "rejected": 0, "failed": 0, "timed_out": 0,
-                      "restores": 0, "restore_recompute_tokens": 0,
-                      "nonfinite_logits": 0}
+        # observability (DESIGN.md §13): ``stats`` keeps its historical
+        # dict interface but is a view over a typed metrics registry;
+        # request timing feeds histograms so percentiles survive replica
+        # merging and host-state snapshots.  The tracer comes from the
+        # engine (NOOP when tracing is off); spans land on this replica's
+        # track — one ``slot<k>`` lane per slot plus a ``session`` lane.
+        self.trace = engine.tracer if engine.tracer is not None \
+            else obs_trace.NOOP
+        self.label = engine.trace_label
+        self.track = (self.label, "session")
+        self.metrics = obs_metrics.MetricsRegistry()
+        self.stats = self.metrics.view(
+            counters=("decode_steps", "decode_dispatches",
+                      "admission_deferrals"),
+            gauges=("peak_live_tokens", "frag_at_high_water"))
+        for key in ("requests", "completed", "preemptions",
+                    "recompute_tokens", "rejected", "failed", "timed_out",
+                    "restores", "restore_recompute_tokens",
+                    "nonfinite_logits"):
+            self.stats[key] = 0
+        self.stats["frag_at_high_water"] = 0.0
+        self.hists = {name: self.metrics.histogram(name)
+                      for name in ("queue_s", "prefill_s", "latency_s")}
+        if self.alloc is not None and self.trace.enabled:
+            self.alloc.tracer = self.trace
+            self.alloc.trace_track = self.track
         for req in requests:
             self.submit(req)
 
@@ -610,6 +655,9 @@ class EngineSession:
         if req.arrival_t is None:
             req.arrival_t = self.clock()
         self.stats["requests"] += 1
+        # idempotent per request: a router-migrated request keeps its
+        # one open lifeline instead of starting a second one
+        self.trace.request_begin(req, self.track, prompt=len(req.tokens))
         if front:
             self.queue.appendleft(req)
         else:
@@ -626,6 +674,9 @@ class EngineSession:
             else f"preempted_{req.preemptions}"
         req.latency_s = self.clock() - self.started[id(req)]
         self.stats["completed"] += 1
+        self.hists["latency_s"].observe(req.latency_s)
+        self.trace.request_end(req, self.track, status=req.status,
+                               tokens=len(req.out or ()))
 
     def _finish_bad(self, req: Request, status: str, error: str,
                     slot: Optional[int] = None) -> None:
@@ -638,8 +689,15 @@ class EngineSession:
             req.out = []
         if id(req) in self.started:
             req.latency_s = self.clock() - self.started[id(req)]
+            self.hists["latency_s"].observe(req.latency_s)
         self.stats[status] += 1
+        if status == "timed_out":
+            self.trace.instant("deadline_expired", self.track,
+                               queued=slot is None)
+        self.trace.request_end(req, self.track, status=status)
         if slot is not None:
+            self.trace.end("request", (self.label, f"slot{slot}"),
+                           status=status)
             self.active[slot] = None
             if self.paged:
                 self.alloc.release(slot)
@@ -655,6 +713,10 @@ class EngineSession:
         req.status = f"preempted_{req.preemptions}"
         self.stats["preemptions"] += 1
         self.stats["recompute_tokens"] += self.pos[slot]
+        self.trace.end("request", (self.label, f"slot{slot}"),
+                       status=req.status)
+        self.trace.instant("preempt", (self.label, f"slot{slot}"),
+                           slot=slot, recompute_tokens=self.pos[slot])
         self.active[slot] = None
         if self.paged:
             self.alloc.release(slot, evicted=True)
@@ -766,6 +828,7 @@ class EngineSession:
                     self.queue.popleft()
                     self.started.setdefault(id(req), now)
                     req.queue_s = now - req.arrival_t
+                    self.hists["queue_s"].observe(req.queue_s)
                     self._finish_bad(req, "timed_out",
                                      "deadline exceeded after "
                                      f"{now - req.arrival_t:.3f}s in queue")
@@ -812,11 +875,17 @@ class EngineSession:
                 if id(req) not in self.started:
                     self.started[id(req)] = t0
                     req.queue_s = t0 - req.arrival_t
+                    self.hists["queue_s"].observe(req.queue_s)
+                lane = (self.label, f"slot{slot}")
+                self.trace.begin("request", lane,
+                                 prompt=len(req.tokens),
+                                 prefix=len(prefix))
                 tokens = req.tokens if not prefix else np.concatenate(
                     [np.asarray(req.tokens, np.int32),
                      np.asarray(prefix, np.int32)])
                 site = self.prefill_count
                 self.prefill_count += 1
+                self.trace.begin("prefill", lane, tokens=len(tokens))
                 try:
                     if self.injector is not None:
                         self.injector.check(site, site="prefill")
@@ -828,14 +897,19 @@ class EngineSession:
                 except Exception as e:  # noqa: BLE001 — isolate request
                     if self.strict:
                         raise
+                    self.trace.end("prefill", lane, error=True)
+                    self.trace.end("request", lane, status="failed")
                     self._finish_bad(req, "failed", repr(e))
                     continue
+                self.trace.end("prefill", lane)
                 if req.out is None:
                     req.out = []
                 req.out.append(first)
                 if not prefix:
                     req.prefill_s = self.clock() - t0
+                    self.hists["prefill_s"].observe(req.prefill_s)
                 if first == cfg.eos_id or budget <= 1:
+                    self.trace.end("request", lane, status="ok")
                     self._finish_ok(req)
                     continue
                 if self.paged:
@@ -1011,6 +1085,13 @@ class EngineSession:
                     if idx is not None:
                         self.caches = paging.corrupt_page(
                             self.caches, idx, nan=True)
+            if self.trace.enabled:
+                if self.paged:
+                    self.trace.counter("free_pages", self.track,
+                                       free=self.alloc.free_pages)
+                self.trace.begin("decode_chunk", self.track,
+                                 chunk=int(chunk),
+                                 active=self.num_active)
             rem_dev = jnp.asarray(
                 [self.remaining[s] if self.active[s] is not None else 0
                  for s in range(self.n)], jnp.int32)
@@ -1030,8 +1111,11 @@ class EngineSession:
             self.stats["decode_dispatches"] += 1
             # normalize wall time by steps actually fused into this
             # dispatch — a k-step chunk must not read as a k× straggler
-            self.watchdog.observe(self.stats["decode_steps"],
-                                  (self.clock() - step_t0) / max(steps, 1))
+            if self.watchdog.observe(self.stats["decode_steps"],
+                                     (self.clock() - step_t0)
+                                     / max(steps, 1)):
+                self.trace.instant("straggler_flagged", self.track,
+                                   step=self.stats["decode_steps"])
             for i in range(steps):
                 if all(a is None for a in self.active):
                     break        # decode faults emptied the batch early
@@ -1070,11 +1154,15 @@ class EngineSession:
                     self.remaining[slot] -= 1
                     if self.remaining[slot] <= 0 or tok_i == cfg.eos_id:
                         self._finish_ok(req)
+                        self.trace.end("request",
+                                       (self.label, f"slot{slot}"),
+                                       status=req.status)
                         self.active[slot] = None
                         if self.paged:
                             self.alloc.release(slot)
             if self.kv_integrity:
                 self._record_checksums()
+            self.trace.end("decode_chunk", self.track, steps=steps)
             if self.injector is not None and self.paged:
                 # silent corruption at rest: injected AFTER the boundary
                 # fingerprints, so the recorded crc reflects the clean
@@ -1114,9 +1202,14 @@ class EngineSession:
             "n_slots": self.n,
             "requests": reqs,
             "stats": dict(self.stats),
+            # latency/queue/prefill histogram states ride the snapshot so
+            # restored percentiles cover the pre-crash population too
+            "request_timing": {name: h.state()
+                               for name, h in self.hists.items()},
             "prng_key": np.asarray(
                 jax.device_get(self.engine._key)).tolist(),
         }
+        self.trace.instant("snapshot", self.track, requests=len(reqs))
         if self.paged:
             snap["alloc"] = {
                 "quarantined": sorted(self.alloc.quarantined
@@ -1152,11 +1245,23 @@ class EngineSession:
         for key, val in snap.get("stats", {}).items():
             if key in self.stats:
                 self.stats[key] = val
+        for name, state in snap.get("request_timing", {}).items():
+            if name in self.hists:
+                self.hists[name].load(state)
         self.stats["restores"] += 1
         if self.paged and "alloc" in snap:
             a = snap["alloc"]
-            for page in a.get("quarantined", ()):
-                self.alloc.quarantine(page)
+            # replay quarantines with the allocator's tracer off: the
+            # process that found the corruption already traced these
+            # pages, and the restored pages_quarantined counter must
+            # keep matching the trace's page_quarantine event count
+            saved_tracer = self.alloc.tracer
+            self.alloc.tracer = None
+            try:
+                for page in a.get("quarantined", ()):
+                    self.alloc.quarantine(page)
+            finally:
+                self.alloc.tracer = saved_tracer
             self.alloc.double_release = a.get("double_release", 0)
             self.alloc.evictions = a.get("evictions", 0)
             self.alloc.pages_evicted = a.get("pages_evicted", 0)
@@ -1174,6 +1279,8 @@ class EngineSession:
             # these requests once
             self.queue.append(req)
             restored.append(req)
+        self.trace.instant("restore", self.track,
+                           requests=len(restored))
         return restored
 
     def stats_snapshot(self) -> Dict:
@@ -1181,6 +1288,10 @@ class EngineSession:
         at any point in the session (the router snapshots mid-flight)."""
         stats = dict(self.stats)
         stats["straggler_decode_steps"] = len(self.watchdog.events)
+        stats["request_timing"] = {name: h.state()
+                                   for name, h in self.hists.items()}
+        stats["latency_percentiles"] = obs_metrics.timing_percentiles(
+            stats["request_timing"])
         if self.paged:
             stats.update(self.alloc.stats())
             stats["kv_layout"] = "paged"

@@ -52,10 +52,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.attention import PageGeometry
+from repro.obs import metrics as obs_metrics
 
 __all__ = ["PageGeometry", "PageAllocator", "PoolExhausted", "geometry",
            "commit_prefill", "sync_block_tables", "page_fingerprints",
-           "corrupt_page"]
+           "corrupt_page", "SERVE_MERGE_SPEC"]
 
 # cache keys that live in page pools (everything else is per-slot dense)
 _POOL_KEYS = ("k", "v", "k_scale", "v_scale", "ckv", "krope")
@@ -137,6 +138,12 @@ class PageAllocator:
         self._pending_quarantine: set = set()  # owned by a slot; withheld
         #                                        from the free list at release
         self.checksums: Dict[int, Tuple[int, int]] = {}
+        # observability hook (DESIGN.md §13): the owning session points
+        # these at its tracer so quarantines land on the replica's track.
+        # None while tracing is off (and during restore-replay, where the
+        # quarantines were already traced by the process that found them).
+        self.tracer = None
+        self.trace_track = None
 
     # ------------------------------------------------------------- queries
     @property
@@ -287,6 +294,9 @@ class PageAllocator:
             self.quarantined.add(page)
         else:
             self._pending_quarantine.add(page)
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.instant("page_quarantine", self.trace_track,
+                                page=page)
         self._check()
         return True
 
@@ -391,45 +401,40 @@ def commit_prefill(caches, slot_cache, slot: int, length: int,
     return new
 
 
-def merge_replica_stats(per_replica: list) -> dict:
-    """Aggregate per-replica session stats into one router-level view.
+# Authoritative merge schema for session stats (DESIGN.md §13.1).
+# Counters sum across replicas; capacity gauges take the fleet-wide
+# extreme (with per-replica lists kept so a skewed router policy shows up
+# in the bench JSON, not just in the max); pool geometry comes from the
+# first replica (replicas share one config); latency histograms merge by
+# sample concatenation.  peak_live_tokens rides the page_high_water gate:
+# it is reported whenever any replica reports paging high-water figures,
+# even for sessions that never recorded a live peak.
+SERVE_MERGE_SPEC: Dict[str, obs_metrics.MergeRule] = {
+    **{k: obs_metrics.MergeRule("sum") for k in (
+        "requests", "completed", "preemptions", "recompute_tokens",
+        "rejected", "failed", "timed_out", "decode_steps",
+        "decode_dispatches", "admission_deferrals", "evictions",
+        "pages_evicted", "double_release", "pages_quarantined",
+        "nonfinite_logits", "restores", "restore_recompute_tokens")},
+    "straggler_decode_steps": obs_metrics.MergeRule(
+        "sum", list_as="straggler_decode_steps_per_replica"),
+    **{k: obs_metrics.MergeRule("first") for k in (
+        "n_pages", "page_size", "usable_pages", "admission_policy",
+        "kv_layout", "dense_equiv_tokens")},
+    "page_high_water": obs_metrics.MergeRule(
+        "max", list_as="page_high_water_per_replica"),
+    "peak_live_tokens": obs_metrics.MergeRule(
+        "max", gate="page_high_water"),
+    "request_timing": obs_metrics.MergeRule("hist_map"),
+}
 
-    Counters (requests, completions, preemptions, failures, decode steps,
-    …) sum across replicas; capacity gauges take the fleet-wide extreme —
-    ``page_high_water`` is the max over replicas (the hottest pool), with
-    the full per-replica list kept under ``page_high_water_per_replica``
-    so a skewed router policy shows up in the bench JSON, not just in the
-    max.  Pool geometry keys (``n_pages``/``page_size``/…) are taken from
-    the first replica — replicas share one config.
-    """
-    merged: dict = {}
-    if not per_replica:
-        return merged
-    summed = ("requests", "completed", "preemptions", "recompute_tokens",
-              "rejected", "failed", "timed_out", "decode_steps",
-              "decode_dispatches", "admission_deferrals", "evictions",
-              "pages_evicted", "straggler_decode_steps", "double_release",
-              "pages_quarantined", "nonfinite_logits", "restores",
-              "restore_recompute_tokens")
-    for key in summed:
-        if any(key in s for s in per_replica):
-            merged[key] = sum(s.get(key, 0) for s in per_replica)
-    for key in ("n_pages", "page_size", "usable_pages", "admission_policy",
-                "kv_layout", "dense_equiv_tokens"):
-        if key in per_replica[0]:
-            merged[key] = per_replica[0][key]
-    if any("page_high_water" in s for s in per_replica):
-        hw = [s.get("page_high_water", 0) for s in per_replica]
-        merged["page_high_water"] = max(hw)
-        merged["page_high_water_per_replica"] = hw
-        merged["peak_live_tokens"] = max(
-            s.get("peak_live_tokens", 0) for s in per_replica)
-    if any("straggler_decode_steps" in s for s in per_replica):
-        # per-replica attribution alongside the fleet-wide sum: a single
-        # slow host shows up as a skewed entry here, not just a bigger sum
-        merged["straggler_decode_steps_per_replica"] = [
-            s.get("straggler_decode_steps", 0) for s in per_replica]
-    return merged
+
+def merge_replica_stats(per_replica: list) -> dict:
+    """Aggregate per-replica session stats into one router-level view —
+    a straight application of :data:`SERVE_MERGE_SPEC` through
+    :func:`repro.obs.metrics.merge_stats` (which replaced the ad-hoc
+    sum/max/first loops this function used to hand-roll)."""
+    return obs_metrics.merge_stats(per_replica, SERVE_MERGE_SPEC)
 
 
 def _paged_entries(caches):

@@ -49,6 +49,8 @@ import logging
 from collections import deque
 from typing import Dict, List, Optional
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve import paging
 from repro.serve.engine import (Engine, EngineSession, Request,
                                 request_from_state, request_to_state)
@@ -112,7 +114,7 @@ class Router:
     """
 
     def __init__(self, engines: List[Engine], cfg: RouterConfig = None,
-                 fault_cfg=None, clock=None, sleep=None):
+                 fault_cfg=None, clock=None, sleep=None, tracer=None):
         import time
         from repro.train.fault import FaultConfig, Watchdog
         if not engines:
@@ -126,6 +128,16 @@ class Router:
         # pending restart; inject one that ADVANCES the injected clock
         # (e.g. FakeClock.advance) or serve() spins until the revival time
         self.sleep = sleep if sleep is not None else time.sleep
+        # observability (DESIGN.md §13): label + attach the tracer to
+        # every engine BEFORE the sessions are built, so each replica's
+        # spans land on its own replica<i> track and router-level events
+        # (shed, dispatch, failover) on the router track
+        self.tracer = tracer if tracer is not None else obs_trace.NOOP
+        self.track = ("router", "main")
+        if tracer is not None:
+            for i, e in enumerate(engines):
+                e.tracer = tracer
+                e.trace_label = f"replica{i}"
         self.queue: deque = deque()
         self.replicas: List[Replica] = [
             Replica(engine=e, session=e.start_session(),
@@ -175,8 +187,12 @@ class Router:
             if req.out is None:
                 req.out = []
             self.counters["shed"] += 1
+            self.tracer.instant("shed", self.track,
+                                queue_len=len(self.queue))
             return False
         self.queue.append(req)
+        self.tracer.request_begin(req, self.track,
+                                  prompt=len(req.tokens))
         return True
 
     def _dispatch(self) -> None:
@@ -194,7 +210,15 @@ class Router:
             best = max(candidates,
                        key=lambda r: (r.state == "healthy",
                                       r.session.free_pages))
-            best.session.submit(self.queue.popleft())
+            req = self.queue.popleft()
+            if self.tracer.enabled:
+                idx = self.replicas.index(best)
+                self.tracer.instant(
+                    "dispatch", (f"replica{idx}", "session"), replica=idx)
+                self.tracer.request_point(req, "dispatched",
+                                          (f"replica{idx}", "session"),
+                                          replica=idx)
+            best.session.submit(req)
 
     # ---------------------------------------------------------- stepping
     def _on_fault(self, idx: int, exc: Exception) -> None:
@@ -206,6 +230,8 @@ class Router:
         rep.state = "dead"
         rep.restarts += 1
         self.counters["replica_faults"] += 1
+        self.tracer.instant("replica_fault", (f"replica{idx}", "session"),
+                            replica=idx, error=repr(exc))
         budget = self.fault_cfg.max_restarts
         if rep.restarts <= budget:
             backoff = self.fault_cfg.backoff_s * rep.restarts
@@ -231,8 +257,15 @@ class Router:
                 if req.out is None:
                     req.out = []
                 self.counters["retries_exhausted"] += 1
+                self.tracer.request_end(req, self.track, status="failed")
             else:
                 self.counters["migrations"] += 1
+                # one "migrate" instant per migrations increment, on the
+                # faulted replica's track (check_trace pairs them exactly)
+                self.tracer.instant("migrate", (f"replica{idx}", "session"),
+                                    replica=idx, retries=req.retries)
+                self.tracer.request_point(req, "migrated", self.track,
+                                          from_replica=idx)
                 self.queue.appendleft(req)
 
     def _maybe_restart(self) -> None:
@@ -244,19 +277,24 @@ class Router:
                 rep.state = "healthy"
                 rep.restart_at = None
                 self.counters["replica_restarts"] += 1
+                self.tracer.instant("replica_restart",
+                                    (f"replica{idx}", "session"),
+                                    replica=idx, restarts=rep.restarts)
                 log.info("replica %d restarted (restart %d)", idx,
                          rep.restarts)
 
     def _finish_drains(self) -> None:
         """A draining replica whose residents finished gets recycled with
         a fresh session and rejoins the healthy pool."""
-        for rep in self.replicas:
+        for idx, rep in enumerate(self.replicas):
             if rep.state == "draining" and rep.session.idle:
                 rep.retired_stats.append(rep.session.stats_snapshot())
                 rep.session = rep.engine.start_session()
                 rep.state = "healthy"
                 rep.drains += 1
                 self.counters["drains"] += 1
+                self.tracer.instant("drain", (f"replica{idx}", "session"),
+                                    replica=idx)
 
     def drain_replica(self, idx: int) -> None:
         """Planned maintenance: stop admitting to replica ``idx``; its
@@ -305,6 +343,9 @@ class Router:
                 if rep.state == "healthy":
                     rep.state = "degraded"
                     self.counters["degraded_marks"] += 1
+                    self.tracer.instant("degraded_mark",
+                                        (f"replica{idx}", "session"),
+                                        replica=idx)
             elif n and rep.state == "degraded":
                 rep.state = "healthy"
         if ran == 0 and self.queue:
@@ -329,6 +370,7 @@ class Router:
             if req.out is None:
                 req.out = []
             self.counters["retries_exhausted"] += 1
+            self.tracer.request_end(req, self.track, status="failed")
 
     # ---------------------------------------------------------- blocking
     @property
@@ -438,6 +480,11 @@ class Router:
         if self._queue_restore_tokens:
             merged["restore_recompute_tokens"] = merged.get(
                 "restore_recompute_tokens", 0) + self._queue_restore_tokens
+        if "request_timing" in merged:
+            # fleet-level p50/p95/p99 over the merged per-request
+            # histograms (queue_s / prefill_s / latency_s)
+            merged["latency_percentiles"] = obs_metrics.timing_percentiles(
+                merged["request_timing"])
         merged.update(self.counters)
         merged["router_queue_len"] = len(self.queue)
         merged["replica_states"] = [r.state for r in self.replicas]

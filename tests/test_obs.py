@@ -1,0 +1,488 @@
+"""Unified observability subsystem (DESIGN.md §13, ISSUE 10).
+
+Covers the typed metrics registry (counters/gauges/histograms, the
+StatsView dict facade, declarative cross-replica merge, JSON snapshot
+round-trip), the structured span/event tracer (deterministic under
+FakeClock: two identical runs export byte-identical Chrome trace JSON),
+the trace-event validator and counter cross-check the CI trace lane
+gates on, metrics survival across the §7.6 kill-all drill (no resets, no
+double counts), and the kernel-timing provenance path (``time_us``
+warmup semantics, ``autotune.timing_source()``).
+
+Determinism note: every engine test runs FakeClock advanced per decode
+step with greedy sampling — byte-identity assertions would be impossible
+on wall-clock.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import NOOP, Tracer
+from repro.serve import Engine, Request, Router, RouterConfig, ServeConfig
+from repro.serve.paging import SERVE_MERGE_SPEC, merge_replica_stats
+
+S_MAX = 64
+PS = 4
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _tick_decode(eng, clock, dt=1.0):
+    orig = eng._decode
+    orig_fused = eng._fused_decode
+
+    def wrapped(*a):
+        clock.advance(dt)
+        return orig(*a)
+
+    def wrapped_fused(*a):
+        out = orig_fused(*a)
+        clock.advance(dt * int(out[1]))
+        return out
+
+    eng._decode = wrapped
+    eng._fused_decode = wrapped_fused
+
+
+def _engine(cfg=None, clock=None, params=None, tracer=None, **serve_kw):
+    cfg = cfg or get_smoke("granite-3-2b")
+    skw = dict(max_seq=S_MAX, n_slots=2, page_size=PS, temperature=0.0,
+               eos_id=-1)
+    skw.update(serve_kw)
+    eng = Engine(cfg, ServeConfig(**skw), params=params)
+    if tracer is not None:
+        eng.tracer = tracer
+    if clock is not None:
+        eng.clock = clock
+        _tick_decode(eng, clock)
+    return cfg, eng
+
+
+def _reqs(cfg, n, seed=11, prompt_len=8, max_new=4):
+    rng = np.random.default_rng(seed)
+    return [Request(tokens=rng.integers(0, cfg.vocab,
+                                        (prompt_len,)).astype(np.int32),
+                    max_new_tokens=max_new) for _ in range(n)]
+
+
+# ------------------------------------------------------------- registry
+
+
+def test_registry_get_or_create_and_kind_conflict():
+    reg = obs_metrics.MetricsRegistry()
+    c = reg.counter("preemptions")
+    assert reg.counter("preemptions") is c
+    c.inc(3)
+    assert c.value == 3
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("page_high_water")
+    g.set_max(5)
+    g.set_max(2)
+    assert g.value == 5
+    # labels distinguish children of one logical metric
+    assert reg.counter("faults", replica=0) \
+        is not reg.counter("faults", replica=1)
+    with pytest.raises(TypeError):
+        reg.histogram("preemptions")
+
+
+def test_stats_view_is_dict_compatible():
+    reg = obs_metrics.MetricsRegistry()
+    stats = reg.view(counters=("preemptions",), gauges=("peak",))
+    stats["preemptions"] += 1
+    stats["preemptions"] += 1
+    stats["new_counter"] = 7         # created on the fly
+    assert stats["preemptions"] == 2
+    assert dict(stats) == {"preemptions": 2, "peak": 0, "new_counter": 7}
+    assert len(stats) == 3 and "preemptions" in stats
+    # the values live in typed registry cells, not a shadow dict
+    assert reg.counter("preemptions").value == 2
+    with pytest.raises(TypeError):
+        del stats["preemptions"]
+    with pytest.raises(KeyError):
+        stats["never_set"]
+
+
+def test_histogram_percentiles_and_overflow_visibility():
+    h = obs_metrics.Histogram("latency_s")
+    for v in range(1, 101):
+        h.observe(float(v))
+    assert h.count == 100 and h.dropped == 0
+    pcts = obs_metrics.percentile_summary(h.state())
+    assert pcts["p50"] == pytest.approx(50.5)
+    assert pcts["p95"] < pcts["p99"] <= 100.0
+    assert obs_metrics.percentile_summary({"samples": []}) == {}
+    # overflow keeps count/sum exact and counts the discard
+    h2 = obs_metrics.Histogram("big")
+    h2.MAX_SAMPLES = 10  # instance override keeps the test tiny
+    for v in range(25):
+        h2.observe(v)
+    assert h2.count == 25 and len(h2.samples) == 10 and h2.dropped == 15
+
+
+def test_registry_snapshot_restore_roundtrip():
+    reg = obs_metrics.MetricsRegistry()
+    reg.counter("completed").inc(4)
+    reg.gauge("peak").set(9)
+    reg.histogram("queue_s").observe(0.5)
+    reg.histogram("queue_s").observe(1.5)
+    snap = json.loads(json.dumps(reg.snapshot()))  # must be JSON-clean
+    reg2 = obs_metrics.MetricsRegistry()
+    reg2.restore(snap)
+    assert reg2.counter("completed").value == 4
+    assert reg2.gauge("peak").value == 9
+    assert reg2.histogram("queue_s").state() == \
+        reg.histogram("queue_s").state()
+    assert reg2.snapshot() == reg.snapshot()
+
+
+def test_merge_stats_serve_spec_semantics():
+    a = {"preemptions": 2, "completed": 3, "n_pages": 16, "page_size": 4,
+         "page_high_water": 5, "peak_live_tokens": 40,
+         "straggler_decode_steps": 1,
+         "request_timing": {"latency_s": {"count": 1, "sum": 2.0,
+                                          "dropped": 0, "samples": [2.0]}}}
+    b = {"preemptions": 1, "completed": 4, "n_pages": 99, "page_size": 4,
+         "page_high_water": 7, "straggler_decode_steps": 0,
+         "request_timing": {"latency_s": {"count": 1, "sum": 4.0,
+                                          "dropped": 0, "samples": [4.0]}}}
+    m = merge_replica_stats([a, b])
+    assert m["preemptions"] == 3 and m["completed"] == 7      # sum
+    assert m["n_pages"] == 16                                  # first
+    assert m["page_high_water"] == 7                           # max
+    assert m["page_high_water_per_replica"] == [5, 7]          # list_as
+    assert m["straggler_decode_steps_per_replica"] == [1, 0]
+    # gate: peak_live_tokens merges because page_high_water is present,
+    # replica b's missing entry contributing 0
+    assert m["peak_live_tokens"] == 40
+    # hist_map: samples concatenate, percentiles come from merged samples
+    lat = m["request_timing"]["latency_s"]
+    assert lat["count"] == 2 and sorted(lat["samples"]) == [2.0, 4.0]
+    assert obs_metrics.timing_percentiles(m["request_timing"])[
+        "latency_s"]["p50"] == pytest.approx(3.0)
+    # keys outside the spec are dropped; empty input merges to {}
+    assert "not_a_key" not in merge_replica_stats([{"not_a_key": 1}])
+    assert merge_replica_stats([]) == {}
+    # every session counter the engine seeds has a rule (schema drift guard)
+    for key in ("requests", "completed", "preemptions", "rejected",
+                "failed", "timed_out", "restores", "pages_quarantined",
+                "decode_steps", "request_timing"):
+        assert key in SERVE_MERGE_SPEC
+
+
+# --------------------------------------------------------------- tracer
+
+
+def _scripted_tracer():
+    clock = FakeClock()
+    tr = Tracer(clock=clock)
+    req = Request(tokens=np.zeros(4, np.int32), max_new_tokens=2)
+    tr.request_begin(req, ("router", "main"), prompt=4)
+    clock.advance(0.5)
+    tr.begin("prefill", ("replica0", "slot0"), tokens=4)
+    clock.advance(1.0)
+    tr.end("prefill", ("replica0", "slot0"))
+    tr.instant("preempt", ("replica0", "slot0"), slot=0)
+    tr.counter("free_pages", ("replica0", "session"), free=3)
+    tr.request_point(req, "migrated", ("router", "main"))
+    clock.advance(0.25)
+    tr.request_end(req, ("router", "main"), status="ok")
+    return tr
+
+
+def test_tracer_export_is_deterministic_and_valid():
+    t1, t2 = _scripted_tracer(), _scripted_tracer()
+    e1 = obs_export.export_chrome_trace(t1)
+    e2 = obs_export.export_chrome_trace(t2)
+    assert e1 == e2                      # byte-identical
+    doc = json.loads(e1)
+    assert obs_export.validate_chrome_trace(doc) == []
+    # track naming made it into the metadata records
+    names = {ev["args"]["name"] for ev in doc["traceEvents"]
+             if ev.get("ph") == "M"}
+    assert {"router", "replica0", "main", "slot0", "session"} <= names
+
+
+def test_noop_tracer_records_nothing():
+    req = Request(tokens=np.zeros(2, np.int32), max_new_tokens=1)
+    NOOP.begin("x", ("a", "b"))
+    NOOP.request_begin(req, ("a", "b"))
+    assert NOOP.enabled is False and not hasattr(NOOP, "events")
+
+
+def test_request_lifeline_guards():
+    tr = Tracer(clock=FakeClock())
+    req = Request(tokens=np.zeros(2, np.int32), max_new_tokens=1)
+    tr.request_point(req, "early", ("r", "m"))   # before begin: dropped
+    tr.request_end(req, ("r", "m"))              # before begin: dropped
+    assert tr.events == []
+    tr.request_begin(req, ("r", "m"))
+    tr.request_begin(req, ("r", "m"))            # idempotent
+    tr.request_end(req, ("r", "m"))
+    assert [e["ph"] for e in tr.events] == ["b", "e"]
+
+
+def test_validator_catches_malformed_traces():
+    def doc(events):
+        return {"traceEvents": events}
+
+    base = {"pid": 1, "tid": 1, "cat": "serve"}
+    # E without B
+    assert obs_export.validate_chrome_trace(doc(
+        [{"name": "x", "ph": "E", "ts": 1, **base}]))
+    # bad nesting (E closes a differently-named B)
+    assert obs_export.validate_chrome_trace(doc(
+        [{"name": "a", "ph": "B", "ts": 1, **base},
+         {"name": "b", "ph": "E", "ts": 2, **base}]))
+    # unclosed B
+    assert obs_export.validate_chrome_trace(doc(
+        [{"name": "a", "ph": "B", "ts": 1, **base}]))
+    # timestamps must be non-decreasing per (pid, tid)
+    assert obs_export.validate_chrome_trace(doc(
+        [{"name": "a", "ph": "i", "ts": 5, **base},
+         {"name": "b", "ph": "i", "ts": 3, **base}]))
+    # async instant outside its lifeline
+    assert obs_export.validate_chrome_trace(doc(
+        [{"name": "request", "ph": "n", "ts": 1, "id": 7, **base}]))
+    # missing required keys / unknown phase
+    assert obs_export.validate_chrome_trace(doc([{"ph": "i", "ts": 0}]))
+    assert obs_export.validate_chrome_trace(doc(
+        [{"name": "a", "ph": "?", "ts": 1, **base}]))
+
+
+def test_export_closes_abandoned_spans():
+    """A crash kills the process mid-span: the export synthesizes closers
+    (tagged abandoned) so the trace still validates."""
+    clock = FakeClock()
+    tr = Tracer(clock=clock)
+    req = Request(tokens=np.zeros(2, np.int32), max_new_tokens=1)
+    tr.begin("decode_chunk", ("replica0", "session"))
+    tr.request_begin(req, ("router", "main"))
+    clock.advance(2.0)
+    doc = json.loads(obs_export.export_chrome_trace(tr))
+    assert obs_export.validate_chrome_trace(doc) == []
+    closers = [ev for ev in doc["traceEvents"]
+               if (ev.get("args") or {}).get("abandoned")]
+    assert {ev["ph"] for ev in closers} == {"E", "e"}
+
+
+def test_cross_check_counters_exact_at_least_and_attribution():
+    clock = FakeClock()
+    tr = Tracer(clock=clock)
+    tr.instant("migrate", ("replica1", "session"), replica=1)
+    tr.instant("preempt", ("replica0", "slot0"), slot=0)
+    doc = json.loads(obs_export.export_chrome_trace(tr))
+    ok = {"migrations": 1, "preemptions": 1}
+    assert obs_export.cross_check_counters(doc, ok) == []
+    # count mismatch is caught in exact mode, tolerated upward in at_least
+    assert obs_export.cross_check_counters(doc, {"migrations": 2})
+    under = {"migrations": 0, "preemptions": 1}
+    assert obs_export.cross_check_counters(doc, under, mode="at_least") \
+        == []
+    assert obs_export.cross_check_counters(doc, {"preemptions": 2},
+                                           mode="at_least")
+    with pytest.raises(ValueError):
+        obs_export.cross_check_counters(doc, ok, mode="bogus")
+    # replica-attribution: an event tagged replica=N on the wrong process
+    tr2 = Tracer(clock=FakeClock())
+    tr2.instant("migrate", ("replica0", "session"), replica=1)
+    doc2 = json.loads(obs_export.export_chrome_trace(tr2))
+    assert obs_export.cross_check_counters(doc2, {"migrations": 1})
+
+
+def test_span_summary_counts_and_durations():
+    tr = _scripted_tracer()
+    summ = obs_export.span_summary(tr)
+    assert summ["spans"]["prefill"]["n"] == 1
+    assert summ["spans"]["prefill"]["total_s"] == pytest.approx(1.0)
+    assert summ["events"]["preempt"] == 1
+    assert summ["events"]["migrated"] == 1   # request_point by args.point
+
+
+# -------------------------------------------------- engine integration
+
+
+def _traced_serve(seed_params=None):
+    clock = FakeClock()
+    tracer = Tracer(clock=clock)
+    cfg, eng = _engine(clock=clock, params=seed_params, tracer=tracer)
+    reqs = _reqs(cfg, 3)
+    eng.serve(reqs)
+    assert all(r.ok_like for r in reqs)
+    return eng, tracer
+
+
+def test_engine_trace_deterministic_byte_identical():
+    """THE determinism acceptance: two identical FakeClock serves export
+    byte-identical Chrome traces, and the trace validates + cross-checks
+    against the run's own stats."""
+    eng1, t1 = _traced_serve()
+    eng2, t2 = _traced_serve(seed_params=eng1.params)
+    e1 = obs_export.export_chrome_trace(t1)
+    e2 = obs_export.export_chrome_trace(t2)
+    assert e1 == e2
+    doc = json.loads(e1)
+    assert obs_export.validate_chrome_trace(doc) == []
+    assert obs_export.cross_check_counters(doc, eng1.paging_stats) == []
+    # the span taxonomy actually showed up
+    summ = obs_export.span_summary(doc)
+    assert summ["spans"]["request"]["n"] == 3
+    assert summ["spans"]["prefill"]["n"] == 3
+    assert summ["spans"]["decode_chunk"]["n"] >= 1
+    assert summ["events"]["fused_dispatch"] >= 1
+
+
+def test_session_stats_are_registry_backed_with_percentiles():
+    clock = FakeClock()
+    cfg, eng = _engine(clock=clock)
+    reqs = _reqs(cfg, 3)
+    eng.serve(reqs)
+    st = eng.paging_stats
+    assert st["completed"] == 3
+    timing = st["request_timing"]
+    assert timing["latency_s"]["count"] == 3
+    assert timing["queue_s"]["count"] == 3
+    pcts = st["latency_percentiles"]
+    assert set(pcts["latency_s"]) == {"p50", "p95", "p99"}
+    # FakeClock ticks once per decode step → latencies are exact step
+    # counts, so the percentiles are deterministic values, not just shapes
+    assert pcts["latency_s"]["p50"] > 0
+
+
+def test_metrics_survive_kill_all_snapshot_restore():
+    """§7.6 drill: counters and histograms ride the snapshot — restored
+    totals continue from the pre-crash values (no reset), re-enqueued
+    requests are not re-counted (no double count), and the continuous
+    trace cross-checks against the restored stats in at_least mode."""
+    clock = FakeClock()
+    tracer = Tracer(clock=clock)
+    cfg, eng = _engine(clock=clock, tracer=tracer)
+    reqs = _reqs(cfg, 4, max_new=6)
+    sess = eng.start_session(list(reqs))
+    sess.step(4)
+    pre = dict(sess.stats)
+    pre_timing = {k: dict(v) for k, v in sess.snapshot()
+                  ["request_timing"].items()}
+    snap = json.loads(json.dumps(sess.snapshot()))
+    assert pre["requests"] == 4
+
+    # "new process": fresh engine + fresh host state, params survive
+    _, eng2 = _engine(clock=clock, params=eng.params, tracer=tracer)
+    sess2, restored = eng2.restore_session(snap)
+    st = dict(sess2.stats)
+    assert st["requests"] == pre["requests"]        # no double count
+    assert st["completed"] == pre["completed"]      # no reset
+    assert st["restores"] == 1
+    # pre-crash histogram population carried over
+    timing = {k: v for k, v in sess2.snapshot()["request_timing"].items()}
+    for name, state in pre_timing.items():
+        assert timing[name]["count"] >= state["count"]
+    sess2.drain()
+    final = sess2.stats_snapshot()
+    assert final["completed"] == 4
+    assert final["requests"] == 4                   # still no double count
+    assert final["request_timing"]["latency_s"]["count"] >= 4
+    # the continuous trace (same tracer across the "kill") validates and
+    # cross-checks: restore rolled counters back to the snapshot, so the
+    # trace may hold MORE events than the counters — never fewer
+    doc = json.loads(obs_export.export_chrome_trace(tracer))
+    assert obs_export.validate_chrome_trace(doc) == []
+    assert obs_export.cross_check_counters(doc, final,
+                                           mode="at_least") == []
+    names = {(ev.get("args") or {}).get("point") or ev["name"]
+             for ev in doc["traceEvents"] if ev.get("ph") in ("i", "n")}
+    assert {"snapshot", "restore"} <= names
+
+
+def test_router_stats_trace_cross_check_on_kill():
+    """Failover drill with tracing: the migrate/fault/restart instants
+    land on the right replica tracks and match the router counters
+    exactly."""
+    from repro.train.fault import FaultConfig, FaultInjector
+    clock = FakeClock()
+    tracer = Tracer(clock=clock)
+    cfg = get_smoke("granite-3-2b")
+    scfg = ServeConfig(max_seq=S_MAX, n_slots=2, page_size=PS,
+                       temperature=0.0, eos_id=-1)
+    fault_cfg = FaultConfig(max_restarts=3, backoff_s=0.5)
+    first = Engine(cfg, scfg, fault_cfg=fault_cfg)
+    engines = [first, Engine(cfg, scfg, params=first.params,
+                             fault_cfg=fault_cfg)]
+    engines[1].fault_injector = FaultInjector(
+        fail_at_steps=(("replica", 2),))
+    for e in engines:
+        e.clock = clock
+        _tick_decode(e, clock)
+    router = Router(engines, cfg=RouterConfig(n_replicas=2),
+                    fault_cfg=fault_cfg, clock=clock, sleep=clock.advance,
+                    tracer=tracer)
+    reqs = _reqs(cfg, 4, max_new=5)
+    router.serve(reqs)
+    assert all(r.ok_like for r in reqs)
+    st = router.stats()
+    assert st["replica_faults"] == 1 and st["migrations"] >= 1
+    assert "latency_percentiles" in st
+    doc = json.loads(obs_export.export_chrome_trace(tracer))
+    assert obs_export.validate_chrome_trace(doc) == []
+    assert obs_export.cross_check_counters(doc, st) == []
+    # the fault landed on replica1's track, by name
+    pnames = {ev["pid"]: ev["args"]["name"] for ev in doc["traceEvents"]
+              if ev.get("ph") == "M" and ev.get("name") == "process_name"}
+    faults = [ev for ev in doc["traceEvents"]
+              if ev.get("name") == "replica_fault" and ev.get("ph") == "i"]
+    assert faults and all(pnames[ev["pid"]] == "replica1" for ev in faults)
+
+
+# ------------------------------------------------- timing provenance
+
+
+def test_time_us_warmup_zero_and_blocking():
+    """Satellite regression: warmup=0 must run zero warmup calls (the old
+    ``range(max(warmup, 1))`` forced one), and every warmup iteration is
+    blocked, not just dispatched."""
+    from repro.core.timing import time_us
+    calls = []
+
+    def fn():
+        calls.append(1)
+        return np.zeros(1)
+
+    time_us(fn, repeats=2, warmup=0)
+    assert len(calls) == 2
+    calls.clear()
+    time_us(fn, repeats=2, warmup=3)
+    assert len(calls) == 5
+
+
+def test_timing_source_provenance(monkeypatch, deterministic_autotune):
+    """The autotuner records HOW it timed: a monkeypatched ``time_us``
+    (the deterministic_autotune fixture) must force wallclock provenance,
+    and the recorded TuneResult carries it."""
+    from repro.kernels import autotune
+    # fixture patched autotune.time_us → source must report wallclock
+    assert autotune.timing_source() == "wallclock"
+    rng = np.random.default_rng(0)
+    a = (rng.uniform(size=(64, 64)) < 0.1).astype(np.float32)
+    result = autotune.autotune_spmv(a, repeats=1)
+    assert result.timing_source == "wallclock"
+    with pytest.raises(ValueError):
+        autotune.set_timing_source("bogus")
+    autotune.set_timing_source("wallclock")
+    try:
+        assert autotune.timing_source() == "wallclock"
+    finally:
+        autotune.set_timing_source("auto")
